@@ -1,0 +1,68 @@
+"""C4 / Table 2: extreme bit budgets (1 and 2 bits per parameter).
+
+Table-2 analog on the tiny LM: DCD/ECD diverge, Choco/DeepSqueeze converge
+but pay Theta(md)/Theta(nd) extra memory, Moniqua converges with zero extra
+memory (Theorem 3's slack matrix for the coarse budgets).
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from benchmarks import common as C
+from repro.core.algorithms import get_algorithm
+
+ALGOS = ["dcd", "ecd", "choco", "deepsqueeze", "moniqua"]
+
+
+def run(quick: bool = False) -> dict:
+    steps = 25 if quick else 60
+    model = C.tiny_lm()
+    n = 8
+
+    # per-worker extra memory accounting (Table 1/2 of the paper)
+    import jax
+    params = model.init(jax.random.PRNGKey(0))
+    X = {"p": jnp.stack([jnp.zeros(sum(
+        int(jnp.size(l)) for l in jax.tree.leaves(params)))] * n)}
+
+    rows = []
+    for bits in (1, 2):
+        for algo in ALGOS:
+            kw = dict(bits=bits, steps=steps, model=model, n_workers=n)
+            if algo == "moniqua":
+                kw.update(theta=0.25, slack=0.2)
+            if algo in ("choco", "deepsqueeze"):
+                # consensus step tuned as in both baselines' papers; at 1 bit
+                # they use the biased scaled-sign compressor (Table 1:
+                # "supports biased quantizers" = Yes), DCD/ECD may not
+                kw.update(gamma=0.2)
+            r = C.train_run(algo, **kw)
+            hp = C.default_hyper(bits=bits, n=n,
+                                 stochastic=False if bits == 1 else None)
+            extra_mb = get_algorithm(algo).extra_memory_bytes(X, hp) / 1e6
+            diverged = (not math.isfinite(r["loss_last"])
+                        or r["loss_last"] > r["loss_first"] * 1.05)
+            rows.append({
+                "budget": f"{bits}bit", "algorithm": algo,
+                "loss_last": r["loss_last"],
+                "status": "diverge" if diverged else "converge",
+                "extra_memory_MB_per_worker": extra_mb,
+            })
+    moni = [r for r in rows if r["algorithm"] == "moniqua"]
+    assert all(r["extra_memory_MB_per_worker"] == 0.0 for r in moni)
+    return {
+        "table": rows,
+        "notes": ("Table 2 analog (tiny LM, synthetic tokens): DCD/ECD "
+                  "require UNBIASED quantizers (Table 1) and diverge at "
+                  "extreme budgets; Choco/DeepSqueeze admit the biased "
+                  "scaled-sign compressor and converge, paying "
+                  "Theta(md)/Theta(nd) extra memory; Moniqua converges with "
+                  "ZERO extra memory via the Theorem-3 slack matrix."),
+    }
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(quick=True), indent=2, default=float))

@@ -1,0 +1,169 @@
+"""Shared benchmark utilities: tiny-model trainer runs, quadratic runner,
+network cost model, and result I/O.
+
+Every ``bench_*`` module exposes ``run(quick: bool) -> dict`` returning a
+JSON-serialisable result with a ``table`` (list of row dicts) and ``notes``.
+``benchmarks.run`` orchestrates them and renders markdown for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.core.algorithms import AlgoHyper, get_algorithm
+from repro.core.moniqua import MoniquaCodec
+from repro.core.quantizers import QuantSpec
+from repro.core.topology import ring
+from repro.data.synthetic import quadratic_grad
+from repro.models.model_factory import build_model
+from repro.train.trainer import Trainer, TrainerConfig
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def save_result(name: str, result: Dict[str, Any]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2, default=float)
+    return path
+
+
+def markdown_table(rows: List[Dict[str, Any]], cols: Optional[List[str]] = None
+                   ) -> str:
+    if not rows:
+        return "(empty)"
+    cols = cols or list(rows[0].keys())
+    def fmt(v):
+        if isinstance(v, float):
+            return f"{v:.4g}"
+        return str(v)
+    out = ["| " + " | ".join(cols) + " |",
+           "|" + "|".join("---" for _ in cols) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(fmt(r.get(c, "")) for c in cols) + " |")
+    return "\n".join(out)
+
+
+# ---------------------------------------------------------------------------
+# Tiny LM used by the convergence benchmarks (fast on 1 CPU core).
+# ---------------------------------------------------------------------------
+
+TINY_SHAPE = InputShape("bench", seq_len=32, global_batch=16, kind="train")
+
+
+def tiny_lm(d_model=64, layers=2, vocab=128):
+    import dataclasses as dc
+    cfg = get_config("llama3.2-3b").reduced()
+    cfg = dc.replace(cfg, num_layers=layers, d_model=d_model, num_heads=2,
+                     num_kv_heads=2, head_dim=d_model // 2, d_ff=2 * d_model,
+                     vocab_size=vocab)
+    return build_model(cfg)
+
+
+def train_run(algo: str, *, bits=8, theta=2.0, slack=1.0, gamma=1.0,
+              steps=60, lr=0.3, n_workers=8, seed=0, model=None,
+              shape=TINY_SHAPE) -> Dict[str, Any]:
+    model = model or tiny_lm()
+    tc = TrainerConfig(algo=algo, n_workers=n_workers, bits=bits, theta=theta,
+                       slack=slack, gamma=gamma, lr=lr, steps=steps,
+                       log_every=max(steps // 10, 1), momentum=0.0,
+                       weight_decay=0.0, seed=seed)
+    t0 = time.time()
+    out = Trainer(model, shape, tc).run()
+    hp = out["state"], out["history"]
+    return {
+        "algo": algo, "bits": bits,
+        "loss_first": out["history"][0]["loss"],
+        "loss_last": out["history"][-1]["loss"],
+        "history": out["history"],
+        "bytes_per_step": out["bytes_per_step"],
+        "seconds": time.time() - t0,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Theorem-1 quadratic runner (shared by floor/convergence benches).
+# ---------------------------------------------------------------------------
+
+def quadratic_run(algo_name: str, hp: AlgoHyper, *, n=8, d=32, steps=800,
+                  alpha0=0.05, sigma=0.05, seed=0, trace_every=20):
+    algo = get_algorithm(algo_name)
+    opt = hp.naive_delta / 2.0
+    X = jnp.zeros((n, d))
+    extra = algo.init(X, hp)
+    key = jax.random.PRNGKey(seed)
+
+    @jax.jit
+    def step(X, extra, k, key):
+        key, kg, ka = jax.random.split(key, 3)
+        gkeys = jax.random.split(kg, n)
+        g = jax.vmap(lambda x, kk: quadratic_grad(
+            x, hp.naive_delta, kk, sigma))(X, gkeys)
+        alpha = alpha0 / (1.0 + 0.01 * k)
+        Xn, extran = algo.step(X, extra, g, alpha, k, ka, hp)
+        return Xn, extran, key
+
+    trace = []
+    for k in range(steps):
+        X, extra, key = step(X, extra, jnp.asarray(k), key)
+        if k % trace_every == 0 or k == steps - 1:
+            g2 = float(jnp.mean(jnp.sum((X - opt) ** 2, axis=1)))
+            trace.append({"step": k, "grad_sq": g2})
+    return {"trace": trace, "final_grad_sq": trace[-1]["grad_sq"],
+            "X": np.asarray(X)}
+
+
+def default_hyper(bits=8, theta=2.0, n=8, naive_delta=0.2, slack=1.0,
+                  gamma=1.0, stochastic=None):
+    topo = ring(n)
+    if slack < 1.0:
+        topo = topo.slack(slack)
+    stochastic = (bits > 1) if stochastic is None else stochastic
+    return AlgoHyper(topo=topo,
+                     codec=MoniquaCodec(QuantSpec(bits=bits,
+                                                  stochastic=stochastic)),
+                     theta=theta, gamma=gamma, naive_delta=naive_delta)
+
+
+# ---------------------------------------------------------------------------
+# Network cost model (Fig. 1's four configurations).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NetworkConfig:
+    name: str
+    bandwidth_bps: float       # per-link
+    latency_s: float           # per message
+
+    def step_comm_seconds(self, bytes_sent: int, n_messages: int) -> float:
+        return bytes_sent * 8.0 / self.bandwidth_bps \
+            + n_messages * self.latency_s
+
+
+# Fig. 1: (a) 10Gbps/0.15ms, (b) 1Gbps/0.15ms, (c) 1Gbps/5ms, (d) 100Mbps/5ms
+NETWORKS = [
+    NetworkConfig("10Gbps-0.15ms", 10e9, 0.15e-3),
+    NetworkConfig("1Gbps-0.15ms", 1e9, 0.15e-3),
+    NetworkConfig("1Gbps-5ms", 1e9, 5e-3),
+    NetworkConfig("100Mbps-5ms", 100e6, 5e-3),
+]
+
+# Extra local work per step (replica updates / error tracking), relative to
+# the cost of one model copy in memory bandwidth terms; calibrated from the
+# paper's observation that quantized baselines pay a constant compute delay.
+LOCAL_OVERHEAD_COPIES = {
+    "allreduce": 0.0, "dpsgd": 0.0, "naive": 1.0, "moniqua": 2.0,
+    "choco": 4.0, "deepsqueeze": 3.0, "dcd": 4.0, "ecd": 5.0,
+    "d2": 2.0, "moniqua_d2": 3.0,
+}
+HOST_COPY_BW = 10e9   # bytes/s a 2-core GCP worker moves through memory

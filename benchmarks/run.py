@@ -1,0 +1,83 @@
+"""Benchmark orchestrator — one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # full
+    PYTHONPATH=src python -m benchmarks.run --quick    # CI-speed
+    PYTHONPATH=src python -m benchmarks.run --only bench_low_bit
+
+Each bench maps to a paper artifact:
+
+    bench_naive_floor       Theorem 1   (naive quantization floor)
+    bench_convergence       Fig. 1 loss panel / Theorem 2 (rate parity)
+    bench_walltime          Fig. 1 wall-clock under 4 network configs
+    bench_low_bit           Table 2     (1/2-bit budgets + memory)
+    bench_memory_overhead   Table 1     (additional memory accounting)
+    bench_d2_hetero         Fig. 2a     (D^2 / decentralized data)
+    bench_adpsgd            Fig. 2b     (asynchronous gossip)
+    bench_bits_bound        Sec. 4      (O(log log n) bits bound)
+    roofline_table          deliverable g (dry-run roofline terms)
+
+Writes benchmarks/results/<name>.json and a combined markdown report to
+benchmarks/results/REPORT.md (consumed by EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import os
+import sys
+import time
+import traceback
+
+from benchmarks import common as C
+
+BENCHES = [
+    "bench_naive_floor",
+    "bench_convergence",
+    "bench_walltime",
+    "bench_low_bit",
+    "bench_memory_overhead",
+    "bench_d2_hetero",
+    "bench_adpsgd",
+    "bench_bits_bound",
+    "roofline_table",
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced step counts (CI)")
+    ap.add_argument("--only", default=None, help="run one benchmark")
+    args = ap.parse_args(argv)
+
+    names = [args.only] if args.only else BENCHES
+    report = ["# Benchmark report", ""]
+    failures = 0
+    for name in names:
+        t0 = time.time()
+        print(f"=== {name} ===", flush=True)
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            result = mod.run(quick=args.quick)
+            result["seconds"] = time.time() - t0
+            path = C.save_result(name, result)
+            print(C.markdown_table(result.get("table", [])))
+            print(f"notes: {result.get('notes','')}")
+            print(f"[{name}] done in {result['seconds']:.1f}s -> {path}\n")
+            report += [f"## {name}", "",
+                       C.markdown_table(result.get("table", [])), "",
+                       result.get("notes", ""), ""]
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            report += [f"## {name}", "", f"FAILED: {e}", ""]
+    os.makedirs(C.RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(C.RESULTS_DIR, "REPORT.md"), "w") as f:
+        f.write("\n".join(report))
+    print(f"benchmarks complete; failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,56 @@
+"""Decentralized data with Moniqua on D^2 (paper Sec. 5 / Fig. 2a).
+
+    PYTHONPATH=src python examples/hetero_d2.py
+
+Every worker owns ONE class of a synthetic classification task (maximal
+outer variance — the paper's 1-label-per-worker CIFAR split).  Plain D-PSGD's
+local models are dragged to their local optima; D^2 cancels the variance and
+Moniqua-on-D^2 does the same with quantized payloads.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.algorithms import get_algorithm
+from repro.core.moniqua import MoniquaCodec
+from repro.core.quantizers import QuantSpec
+from repro.core.topology import ring
+from repro.core.algorithms import AlgoHyper
+
+N, D, CLASSES = 8, 64, 8
+ALPHA, STEPS = 0.1, 600
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    # per-class optima: worker i only ever sees class i -> grad f_i = x - c_i
+    c = 4.0 * jax.random.normal(key, (N, D))
+    c_bar = jnp.mean(c, axis=0)
+
+    topo = ring(N).slack(0.75)        # D^2 needs lambda_n > -1/3
+    hp = AlgoHyper(topo=topo, codec=MoniquaCodec(QuantSpec(bits=8)),
+                   theta=2.0)
+
+    for name in ("dpsgd", "d2", "moniqua_d2"):
+        algo = get_algorithm(name)
+        X = jnp.zeros((N, D))
+        extra = algo.init(X, hp)
+        kk = jax.random.PRNGKey(1)
+
+        @jax.jit
+        def step(X, extra, k, kk):
+            kk, kg, ka = jax.random.split(kk, 3)
+            g = X - c + 0.05 * jax.random.normal(kg, (N, D))
+            Xn, en = algo.step(X, extra, g, ALPHA, k, ka, hp)
+            return Xn, en, kk
+
+        for k in range(STEPS):
+            X, extra, kk = step(X, extra, jnp.asarray(k), kk)
+        local_err = float(jnp.mean(jnp.sum((X - c_bar) ** 2, axis=1)))
+        print(f"{name:12s} per-worker error to global optimum: "
+              f"{local_err:10.4f}")
+    print("\nD-PSGD stalls at the outer-variance floor; D^2 and "
+          "Moniqua-D^2 converge (Theorem 4), the latter at 1/4 the bytes.")
+
+
+if __name__ == "__main__":
+    main()

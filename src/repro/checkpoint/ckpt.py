@@ -1,0 +1,65 @@
+"""Checkpointing: flat-path .npz of any pytree + metadata sidecar.
+
+Arrays are gathered to host (fine at experiment scale; for the production
+mesh a per-shard variant would write one file per addressable-device slice —
+the path layout already encodes that extension point).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+_SEP = "|"
+
+
+def _flatten_paths(tree: PyTree) -> Dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        parts = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                parts.append(f"#{p.idx}")
+            else:
+                parts.append(str(p))
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
+            # numpy cannot serialise ml_dtypes (bf16, fp8): upcast losslessly;
+            # restore() casts back to the dtype of ``like``.
+            arr = arr.astype(np.float32)
+        out[_SEP.join(parts)] = arr
+    return out
+
+
+def save(path: str, tree: PyTree, meta: Dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten_paths(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    with open(re.sub(r"\.npz$", "", path) + ".meta.json", "w") as f:
+        json.dump(meta or {}, f, indent=2, default=str)
+
+
+def restore(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure (and dtypes) of ``like``."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat = _flatten_paths(jax.tree.map(lambda a: np.zeros((), np.int8), like))
+    leaves, treedef = jax.tree.flatten(like)
+    keys = list(flat.keys())
+    assert len(keys) == len(leaves), (len(keys), len(leaves))
+    restored = [jnp.asarray(npz[k]).astype(l.dtype)
+                for k, l in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, restored)
+
+
+def load_meta(path: str) -> Dict:
+    with open(re.sub(r"\.npz$", "", path) + ".meta.json") as f:
+        return json.load(f)

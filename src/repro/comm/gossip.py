@@ -1,0 +1,128 @@
+"""Circulant gossip over a stacked worker axis.
+
+All decentralized state is carried as pytrees whose leaves have a leading
+worker dimension ``[n, ...]``.  On the production mesh that dimension is
+sharded over the worker mesh axis (``data``, or ``pod`` x ``data``), so every
+``jnp.roll(leaf, -o, axis=0)`` lowers to exactly one ``collective-permute``
+whose operand is whatever we roll — for Moniqua, the **bit-packed uint8
+payload**, which is how the paper's bandwidth saving becomes a measurable
+reduction of the roofline collective term.
+
+Weighted circulant mixing implements ``X W`` for circulant ``W``:
+
+    (X W)[i] = sum_o  w_o * X[(i + o) mod n]  = sum_o w_o * roll(X, -o)[i]
+
+``gossip_*`` functions operate leaf-wise over pytrees and return a
+``BytesLedger`` recording bytes-on-wire per step per worker (used by the
+wall-clock network model in benchmarks/).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.moniqua import MoniquaCodec
+from repro.core.topology import Topology
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class BytesLedger:
+    """Bytes sent per worker per gossip round (payload only, excl. headers)."""
+    bytes_per_worker: int = 0
+
+    def add(self, nbytes: int, n_sends: int) -> None:
+        self.bytes_per_worker += nbytes * n_sends
+
+
+def _roll(leaf: jax.Array, offset: int) -> jax.Array:
+    return jnp.roll(leaf, -offset, axis=0) if offset % leaf.shape[0] else leaf
+
+
+def mix(X: PyTree, topo: Topology) -> PyTree:
+    """Full-precision circulant mixing ``X W`` (D-PSGD line 'communicate')."""
+    def mix_leaf(x):
+        out = None
+        for o, w in zip(topo.offsets, topo.weights):
+            t = _roll(x, o) * w
+            out = t if out is None else out + t
+        return out.astype(x.dtype)
+    return jax.tree.map(mix_leaf, X)
+
+
+def neighbor_sum(X: PyTree, topo: Topology,
+                 transform: Callable[[jax.Array, int], jax.Array]) -> PyTree:
+    """``sum_{o != 0} w_o * transform(roll(X, -o), o)`` leaf-wise."""
+    def f(x):
+        out = None
+        for o, w in zip(topo.offsets, topo.weights):
+            if o % topo.n == 0:
+                continue
+            t = transform(_roll(x, o), o) * w
+            out = t if out is None else out + t
+        return out
+    return jax.tree.map(f, X)
+
+
+def self_weight(topo: Topology) -> float:
+    return sum(w for o, w in zip(topo.offsets, topo.weights) if o % topo.n == 0)
+
+
+def moniqua_gossip(
+    X: PyTree,
+    topo: Topology,
+    codec: MoniquaCodec,
+    theta,
+    key: Optional[jax.Array] = None,
+    ledger: Optional[BytesLedger] = None,
+) -> PyTree:
+    """Algorithm 1 lines 3-6: one Moniqua gossip round on stacked models.
+
+    Every worker broadcasts one payload (its packed residue); with shared
+    randomness one PRNG key serves all workers.  Returns ``X_{k+1/2}``.
+    """
+    n_neighbors = len(topo.neighbor_offsets())
+    if n_neighbors == 0:          # single worker (hierarchical single-pod)
+        return X
+
+    def gossip_leaf(x, leaf_key):
+        packed = codec.encode(x, theta, leaf_key)           # [n, ...packed]
+        x_hat_self = codec.decode_self(packed, x, theta)    # line 4
+        acc = None
+        for o, w in zip(topo.offsets, topo.weights):
+            if o % topo.n == 0:
+                continue
+            remote = _roll(packed, o)                        # the quantized collective
+            x_hat_j = codec.decode(remote, x, theta)         # line 5 (y = local x)
+            d = (x_hat_j - x_hat_self) * w
+            acc = d if acc is None else acc + d
+        if ledger is not None:
+            ledger.add(codec.payload_bytes(x.shape[1:]), n_neighbors)
+        out = x.astype(jnp.float32) + acc                    # line 6
+        return out.astype(x.dtype)
+
+    leaves, treedef = jax.tree.flatten(X)
+    keys = ([None] * len(leaves) if key is None
+            else list(jax.random.split(key, len(leaves))))
+    return jax.tree.unflatten(treedef, [gossip_leaf(l, k) for l, k in zip(leaves, keys)])
+
+
+def payload_bytes_tree(X: PyTree, codec: MoniquaCodec) -> int:
+    """Total packed bytes for one broadcast of every leaf (per worker)."""
+    total = 0
+    for leaf in jax.tree.leaves(X):
+        total += codec.payload_bytes(leaf.shape[1:])
+    return total
+
+
+def dtype_bytes_tree(X: PyTree) -> int:
+    """Full-precision bytes per broadcast (per worker) — the D-PSGD baseline."""
+    total = 0
+    for leaf in jax.tree.leaves(X):
+        total += int(np.prod(leaf.shape[1:], dtype=np.int64)) * leaf.dtype.itemsize
+    return total

@@ -1,0 +1,38 @@
+"""Assigned-architecture registry.  ``get_config(name)`` / ``--arch <id>``."""
+from __future__ import annotations
+
+from repro.configs.base import (ArchConfig, InputShape, INPUT_SHAPES,
+                                get_input_shape)
+
+
+def _load(mod_name: str):
+    import importlib
+    return importlib.import_module(f"repro.configs.{mod_name}").CONFIG
+
+
+ARCH_MODULES = {
+    "dbrx-132b": "dbrx_132b",
+    "grok-1-314b": "grok_1_314b",
+    "chatglm3-6b": "chatglm3_6b",
+    "llama3.2-3b": "llama3_2_3b",
+    "xlstm-125m": "xlstm_125m",
+    "phi-3-vision-4.2b": "phi_3_vision_4_2b",
+    "internlm2-20b": "internlm2_20b",
+    "qwen2-72b": "qwen2_72b",
+    "whisper-base": "whisper_base",
+    "zamba2-1.2b": "zamba2_1_2b",
+    # the paper's own experimental model (Sec. 6, CIFAR10)
+    "resnet20": "resnet20",
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in ARCH_MODULES:
+        raise ValueError(f"unknown arch {name!r}; available: "
+                         f"{sorted(ARCH_MODULES)}")
+    return _load(ARCH_MODULES[name])
+
+
+def assigned_archs() -> list[str]:
+    """The 10 assigned architectures (excludes the paper's CIFAR model)."""
+    return [k for k in ARCH_MODULES if k != "resnet20"]

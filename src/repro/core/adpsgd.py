@@ -1,0 +1,102 @@
+"""AD-PSGD and Moniqua-on-AD-PSGD (paper Sec. 5 / Algorithm 3), simulated.
+
+TPUs execute lock-step SPMD programs: true asynchrony (workers racing on a
+network) has no TPU analogue, so — per DESIGN.md §2 — we implement the paper's
+*analysis model* faithfully instead of emulating MPI races:
+
+  * an "iteration" is ONE gradient update on ONE worker ``i_k`` (uniformly
+    sampled), using a gradient computed on a model ``tau_k`` iterations stale
+    (``tau_k <= T`` uniform), exactly the single-worker-update process of
+    Theorem 5;
+  * between updates, a random edge ``(i_k, j_k)`` of the topology gossips
+    with the pair-averaging doubly-stochastic ``W_k`` (each individually has
+    rho = 1; the mixing condition holds with finite t_mix);
+  * Moniqua variant: the pair exchange is modulo-quantized, each endpoint
+    decoding against its own model (Algorithm 3 lines 4-7).
+
+The simulator runs under ``lax.scan`` with a staleness ring-buffer, so it jits;
+it is intended for the convergence experiments (small models), not the
+production mesh path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.moniqua import MoniquaCodec
+from repro.core.topology import Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class ADPSGDConfig:
+    topo: Topology
+    codec: MoniquaCodec = MoniquaCodec()
+    theta: float = 2.0
+    max_delay: int = 4
+    quantized: bool = False     # False = plain AD-PSGD, True = Moniqua
+
+
+def _pair_average(X: jax.Array, i: jax.Array, j: jax.Array,
+                  cfg: ADPSGDConfig, key: jax.Array) -> jax.Array:
+    """One gossip on edge (i, j):  x_i, x_j <- (x_i + x_j)/2 (pair W_k).
+
+    In the quantized variant each endpoint receives the packed modulo residue
+    of the other and decodes against its own model.
+    """
+    xi, xj = X[i], X[j]
+    if not cfg.quantized:
+        avg = 0.5 * (xi + xj)
+        X = X.at[i].set(avg)
+        X = X.at[j].set(avg)
+        return X
+    codec, theta = cfg.codec, cfg.theta
+    # shared randomness: one key for both encodes
+    pi = codec.encode(xi, theta, key)
+    pj = codec.encode(xj, theta, key)
+    xj_at_i = codec.decode(pj, xi, theta)       # i's view of j
+    xi_at_j = codec.decode(pi, xj, theta)       # j's view of i
+    xi_self = codec.decode_self(pi, xi, theta)  # bias cancellation (line 4)
+    xj_self = codec.decode_self(pj, xj, theta)
+    new_i = xi + 0.5 * (xj_at_i - xi_self)
+    new_j = xj + 0.5 * (xi_at_j - xj_self)
+    X = X.at[i].set(new_i)
+    X = X.at[j].set(new_j)
+    return X
+
+
+def run(
+    x0: jax.Array,                       # [n, d] initial (identical) models
+    grad_fn: Callable[[jax.Array, jax.Array, jax.Array], jax.Array],
+    # grad_fn(x_worker [d], worker_idx, key) -> stochastic gradient [d]
+    alpha: float,
+    num_iters: int,
+    cfg: ADPSGDConfig,
+    key: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Run the simulation; returns (final X [n,d], mean-model trace [K,d])."""
+    n, d = x0.shape
+    T = cfg.max_delay
+    hist0 = jnp.broadcast_to(x0, (T + 1, n, d))  # staleness ring buffer
+    offsets = jnp.asarray([o % n for o in cfg.topo.neighbor_offsets()])
+
+    def body(carry, k):
+        X, hist, kkey = carry
+        kkey, k_i, k_tau, k_nb, k_g, k_q = jax.random.split(kkey, 6)
+        i = jax.random.randint(k_i, (), 0, n)
+        tau = jax.random.randint(k_tau, (), 0, T + 1)
+        slot = (k - tau) % (T + 1)
+        x_stale = hist[slot, i]
+        g = grad_fn(x_stale, i, k_g)
+        # gossip on a random incident edge, then the (delayed) gradient update
+        j = (i + offsets[jax.random.randint(k_nb, (), 0, offsets.shape[0])]) % n
+        X = _pair_average(X, i, j, cfg, k_q)
+        X = X.at[i].add(-alpha * g)
+        hist = hist.at[(k + 1) % (T + 1)].set(X)
+        return (X, hist, kkey), jnp.mean(X, axis=0)
+
+    (Xf, _, _), trace = jax.lax.scan(body, (x0, hist0, key),
+                                     jnp.arange(num_iters))
+    return Xf, trace

@@ -1,0 +1,69 @@
+"""Modulo arithmetic underlying Moniqua (paper Lemma 1 & 2).
+
+The paper defines a *centered* modulo: for ``a > 0``
+
+    z mod a  :=  the unique element of {z + n a | n in Z}  in  [-a/2, a/2)
+
+and proves (Lemma 1) that if ``|x - y| < theta <= a/2`` then
+
+    x = ((x mod a) - (y mod a)) mod a + y        with a = 2 theta.
+
+Moniqua transmits ``Q_delta((x / B) mod 1)`` with ``B = 2 theta / (1 - 2 delta)``
+and recovers ``x_hat = (Q * B - y) mod B + y`` with ``|x_hat - x| <= delta * B``
+(Lemma 2).  All ops are element-wise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cmod(z: jax.Array, a) -> jax.Array:
+    """Centered modulo into ``[-a/2, a/2)`` (Eq. 1).
+
+    Implemented as ``z - a * round_half_down(z / a)`` via floor to keep the
+    half-open convention exact: ``cmod(a/2) == -a/2``.
+    """
+    z = jnp.asarray(z)
+    a = jnp.asarray(a, dtype=jnp.float32)
+    zf = z.astype(jnp.float32)
+    out = zf - a * jnp.floor(zf / a + 0.5)
+    return out
+
+
+def mod_unit(z: jax.Array) -> jax.Array:
+    """``z mod 1`` into [-1/2, 1/2) — the rescaled payload domain."""
+    return cmod(z, 1.0)
+
+
+def b_theta(theta, delta: float) -> jax.Array:
+    """``B_theta = 2 theta / (1 - 2 delta)`` (requires delta < 1/2)."""
+    if delta >= 0.5:
+        raise ValueError(f"Moniqua requires delta < 1/2, got {delta}")
+    return jnp.asarray(theta, jnp.float32) * (2.0 / (1.0 - 2.0 * delta))
+
+
+def recover(q_times_b: jax.Array, y: jax.Array, B) -> jax.Array:
+    """Lemma 1 recovery: ``(q*B - y) mod B + y``.
+
+    ``q_times_b`` is the dequantized payload already scaled by ``B``; ``y`` is
+    the receiver's local reference (its own model in Algorithm 1 line 5).
+    """
+    yf = y.astype(jnp.float32)
+    return cmod(q_times_b.astype(jnp.float32) - yf, B) + yf
+
+
+def local_bias(q_times_b: jax.Array, x_local: jax.Array, B) -> jax.Array:
+    """Algorithm 1 line 4: ``x_hat_ii = q_i*B - (x_i mod B) + x_i``.
+
+    The sender's *own* reconstruction under its quantizer; subtracted in the
+    averaging step so quantization noise enters only as differences (the
+    cancellation that removes bias from the global average).
+    """
+    xf = x_local.astype(jnp.float32)
+    return q_times_b.astype(jnp.float32) - cmod(xf, B) + xf
+
+
+def error_bound(theta, delta: float) -> float:
+    """Lemma 2: ``|x_hat - x| <= theta * 2 delta / (1 - 2 delta)``."""
+    return float(theta) * 2.0 * delta / (1.0 - 2.0 * delta)

@@ -1,0 +1,90 @@
+"""The Moniqua codec (paper Algorithm 1, lines 3-5) as a composable module.
+
+``MoniquaCodec`` turns a tensor into a *bit-packed modulo residue* payload and
+back.  It is the unit that rides inside every collective (see comm/gossip.py)
+and the unit the Pallas kernels accelerate (kernels/).
+
+Pipeline (element-wise; Algorithm 1 with ``B = 2 theta / (1 - 2 delta)``):
+
+  encode:   r = (x / B) mod 1  in [-1/2, 1/2)      (modulo.mod_unit)
+            c = quant codes of Q_delta(r)           (quantizers.quantize_codes)
+            p = bit-pack(c)                         (quantizers.pack_codes)
+  decode:   q = unquant(unpack(p)) * B
+            x_hat = (q - y) mod B + y               (modulo.recover;  y = receiver's model)
+  self :    x_hat_ii = q_i - (x_i mod B) + x_i      (modulo.local_bias; line 4)
+
+The payload is ``bits/8`` bytes per parameter + nothing else: no scales, no
+error state — the zero-additional-memory property.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import modulo
+from repro.core.quantizers import (QuantSpec, dequantize_codes, pack_codes,
+                                   quantize_codes, unpack_codes)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoniquaCodec:
+    """Static codec config: quantizer spec + whether to use Pallas kernels."""
+    spec: QuantSpec = QuantSpec()
+    use_pallas: bool = False  # pure-jnp path lowers everywhere; kernels are TPU-targeted
+
+    @property
+    def delta(self) -> float:
+        return self.spec.delta
+
+    def b_theta(self, theta) -> jax.Array:
+        return modulo.b_theta(theta, self.delta)
+
+    # -- encode ------------------------------------------------------------
+    def encode(self, x: jax.Array, theta, key: Optional[jax.Array] = None) -> jax.Array:
+        """x -> packed uint8 payload (Algorithm 1 line 3)."""
+        if self.use_pallas:
+            from repro.kernels import ops as kops
+            return kops.moniqua_encode(x, self.b_theta(theta), self.spec, key)
+        B = self.b_theta(theta)
+        r = modulo.mod_unit(x.astype(jnp.float32) / B)
+        codes = quantize_codes(r, self.spec, key)
+        return pack_codes(codes, self.spec.bits)
+
+    # -- decode ------------------------------------------------------------
+    def payload_value(self, packed: jax.Array, theta, last_dim: int) -> jax.Array:
+        """Unpack + dequantize + rescale:  q * B  (the transmitted value)."""
+        if self.use_pallas:
+            from repro.kernels import ops as kops
+            return kops.moniqua_unpack_value(packed, self.b_theta(theta), self.spec, last_dim)
+        codes = unpack_codes(packed, self.spec.bits, last_dim)
+        return dequantize_codes(codes, self.spec) * self.b_theta(theta)
+
+    def decode(self, packed: jax.Array, y: jax.Array, theta) -> jax.Array:
+        """Recover a *remote* model against local reference ``y`` (line 5)."""
+        qb = self.payload_value(packed, theta, y.shape[-1])
+        if self.use_pallas:
+            from repro.kernels import ops as kops
+            return kops.moniqua_recover(qb, y, self.b_theta(theta))
+        return modulo.recover(qb, y, self.b_theta(theta))
+
+    def decode_self(self, packed: jax.Array, x_local: jax.Array, theta) -> jax.Array:
+        """Sender-side biased reconstruction ``x_hat_ii`` (line 4)."""
+        qb = self.payload_value(packed, theta, x_local.shape[-1])
+        return modulo.local_bias(qb, x_local, self.b_theta(theta))
+
+    # -- accounting ----------------------------------------------------------
+    def payload_bytes(self, x_shape: tuple[int, ...]) -> int:
+        """Bytes on the wire for one tensor (exact packed size)."""
+        import numpy as np
+        from repro.core.quantizers import packed_last_dim
+        if not x_shape:
+            return 1
+        inner = int(np.prod(x_shape[:-1], dtype=np.int64))
+        return inner * packed_last_dim(x_shape[-1], self.spec.bits)
+
+    def max_error(self, theta) -> float:
+        """Lemma 2 bound on |x_hat - x| (given |x - y| < theta)."""
+        return modulo.error_bound(theta, self.delta)

@@ -1,0 +1,184 @@
+"""Quantizers satisfying the paper's bounded-error condition (Eq. 2).
+
+A quantizer ``Q_delta`` must obey ``||Q(x) - x||_inf <= delta`` on
+``x in [-1/2, 1/2]^d``.  Two families are provided:
+
+* ``nearest``    -- biased linear quantizer: round to the lattice ``{2*delta*n}``.
+* ``stochastic`` -- unbiased stochastic rounding on the same lattice, optionally
+                    with *shared randomness* (same ``u`` on all workers; Supp. C).
+
+Both are parameterised by a bit budget ``bits``: the lattice covers ``[-1/2, 1/2)``
+with ``2**bits`` points, i.e. ``delta = 1 / (2 * (2**bits - 1))`` for nearest
+rounding (``ceil(log2(1/(2 delta) + 1))`` bits suffice, Sec. 4 "Bound on the Bits").
+
+Bit packing: quantized codes are integers in ``[0, 2**bits)`` packed into uint8
+lanes (8/4/2/1 values per byte for 1/2/4/8 bits) so that the *communicated* array
+is exactly ``bits/8`` bytes per parameter — the compression the roofline measures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def delta_for_bits(bits: int, stochastic: bool = True) -> float:
+    """Worst-case error of a ``bits``-wide linear quantizer on [-1/2, 1/2].
+
+    We place the ``L = 2**bits`` representable points at the midpoints of the
+    ``L`` cells tiling [-1/2, 1/2) (pitch ``1/L``).  Nearest rounding errs by
+    at most half a pitch (``1/(2L)``); *stochastic* rounding moves to either
+    adjacent point, erring by up to a full pitch (``1/L``).  The midpoint
+    lattice is what makes 1-bit work: nearest 1-bit has ``delta = 1/4 < 1/2``
+    as Theorem 3 requires (stochastic 1-bit has ``delta = 1/2`` and is
+    rejected by ``modulo.b_theta``).
+    """
+    levels = 2 ** bits
+    if levels < 2:
+        raise ValueError(f"need at least 1 bit, got {bits}")
+    return (1.0 / levels) if stochastic else (1.0 / (2.0 * levels))
+
+
+def bits_for_delta(delta: float) -> int:
+    """Paper Sec. 4: ``B <= ceil(log2(1/(2 delta) + 1))``."""
+    return int(np.ceil(np.log2(1.0 / (2.0 * delta) + 1.0)))
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of a quantizer.
+
+    Attributes:
+      bits: code width per parameter (1, 2, 4 or 8 for packable widths).
+      stochastic: unbiased stochastic rounding if True, nearest (biased) if False.
+      shared_randomness: reuse one uniform draw across all workers (Supp. C).
+    """
+    bits: int = 8
+    stochastic: bool = True
+    shared_randomness: bool = True
+
+    @property
+    def levels(self) -> int:
+        return 2 ** self.bits
+
+    @property
+    def delta(self) -> float:
+        return delta_for_bits(self.bits, self.stochastic)
+
+    @property
+    def values_per_byte(self) -> int:
+        if self.bits not in (1, 2, 4, 8):
+            raise ValueError(f"unpackable bit width {self.bits}")
+        return 8 // self.bits
+
+    @property
+    def bytes_per_param(self) -> float:
+        return self.bits / 8.0
+
+
+# ---------------------------------------------------------------------------
+# Code <-> value maps.  Codes 0..L-1 index the midpoints of the L cells tiling
+# [-1/2, 1/2):   value(c) = (c + 1/2)/L - 1/2 ;  lattice(x) = (x + 1/2)*L - 1/2
+# ---------------------------------------------------------------------------
+
+def _to_lattice(x: jax.Array, levels: int) -> jax.Array:
+    return (x.astype(jnp.float32) + 0.5) * levels - 0.5
+
+
+def _from_lattice(c: jax.Array, levels: int) -> jax.Array:
+    return (c.astype(jnp.float32) + 0.5) / levels - 0.5
+
+
+def quantize_codes(
+    x: jax.Array,
+    spec: QuantSpec,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Quantize ``x`` in [-1/2, 1/2] to integer codes in [0, levels).
+
+    Stochastic mode implements ``Q(x) = delta_pitch * floor(x/pitch + u)`` with
+    u ~ U[0,1) (the paper's stochastic rounding); nearest mode rounds half-up.
+    Values outside [-1/2, 1/2] are clamped to the lattice ends (the theory never
+    relies on behaviour outside the box).
+    """
+    lat = _to_lattice(x, spec.levels)
+    if spec.stochastic:
+        if key is None:
+            raise ValueError("stochastic rounding needs a PRNG key")
+        u = jax.random.uniform(key, x.shape, dtype=jnp.float32)
+        codes = jnp.floor(lat + u)
+    else:
+        codes = jnp.floor(lat + 0.5)
+    codes = jnp.clip(codes, 0, spec.levels - 1)
+    return codes.astype(jnp.uint8 if spec.bits <= 8 else jnp.uint32)
+
+
+def dequantize_codes(codes: jax.Array, spec: QuantSpec) -> jax.Array:
+    return _from_lattice(codes, spec.levels)
+
+
+def quantize(x: jax.Array, spec: QuantSpec, key: Optional[jax.Array] = None) -> jax.Array:
+    """``Q_delta(x)``: quantize-then-dequantize (value-space round trip)."""
+    return dequantize_codes(quantize_codes(x, spec, key), spec)
+
+
+# ---------------------------------------------------------------------------
+# Bit packing along the last axis.
+# ---------------------------------------------------------------------------
+
+def packed_last_dim(n: int, bits: int) -> int:
+    vpb = 8 // bits
+    return -(-n // vpb)  # ceil div
+
+
+def pack_codes(codes: jax.Array, bits: int) -> jax.Array:
+    """Pack integer codes (< 2**bits) into uint8 along the last axis.
+
+    Pads the last axis with zeros up to a multiple of ``values_per_byte``.
+    """
+    if bits == 8:
+        return codes.astype(jnp.uint8)
+    vpb = 8 // bits
+    n = codes.shape[-1]
+    pad = (-n) % vpb
+    if pad:
+        pad_width = [(0, 0)] * (codes.ndim - 1) + [(0, pad)]
+        codes = jnp.pad(codes, pad_width)
+    grouped = codes.reshape(*codes.shape[:-1], -1, vpb).astype(jnp.uint8)
+    shifts = (jnp.arange(vpb, dtype=jnp.uint8) * bits).astype(jnp.uint8)
+    packed = jnp.zeros(grouped.shape[:-1], dtype=jnp.uint8)
+    for j in range(vpb):
+        packed = packed | (grouped[..., j] << shifts[j])
+    return packed
+
+
+def unpack_codes(packed: jax.Array, bits: int, n: int) -> jax.Array:
+    """Inverse of :func:`pack_codes`; ``n`` is the original last-axis length."""
+    if bits == 8:
+        return packed
+    vpb = 8 // bits
+    mask = jnp.uint8(2 ** bits - 1)
+    parts = [((packed >> jnp.uint8(j * bits)) & mask) for j in range(vpb)]
+    codes = jnp.stack(parts, axis=-1).reshape(*packed.shape[:-1], -1)
+    return codes[..., :n]
+
+
+# ---------------------------------------------------------------------------
+# Worker-indexed keys for (non-)shared randomness.
+# ---------------------------------------------------------------------------
+
+def rounding_key(base: jax.Array, step: jax.Array | int, worker: int, spec: QuantSpec) -> jax.Array:
+    """PRNG key for stochastic rounding at a given step/worker.
+
+    With ``shared_randomness`` every worker derives the *same* key for a given
+    step, so exchanged tensors are floored with the same ``u`` (Supp. C shows
+    this bounds the pairwise error by the model distance instead of 2*delta*B).
+    """
+    k = jax.random.fold_in(base, jnp.asarray(step, dtype=jnp.uint32))
+    if not spec.shared_randomness:
+        k = jax.random.fold_in(k, worker)
+    return k

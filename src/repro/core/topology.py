@@ -1,0 +1,154 @@
+"""Communication topologies for decentralized SGD.
+
+All built-in topologies are **circulant**: worker ``i`` averages from workers
+``i + o (mod n)`` for a fixed offset set ``o in offsets`` with weights ``w``.
+Circulant W matrices are symmetric doubly-stochastic whenever the offset set is
+symmetric (``-o`` present with equal weight), which covers:
+
+* ring            offsets {-1, 0, +1}
+* torus (rows x cols)   offsets {0, ±1, ±rows} on the flattened 2-D grid
+* exponential graph     offsets {0, ±1, ±2, ±4, ...}
+* fully connected       all offsets, weight 1/n
+
+Circulance is what lets the TPU mapping express gossip as a small number of
+``jnp.roll``s along the (sharded) worker axis, each lowering to a single
+``collective-permute`` (see comm/gossip.py).
+
+Also provides the slack matrix ``W_bar = gamma W + (1-gamma) I`` (Theorem 3),
+spectral gap ``rho``, and the Markov-chain mixing-time bound
+``t_mix <= log(4n) / (1 - rho)`` (Supp. E).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A circulant gossip topology over ``n`` workers."""
+    name: str
+    n: int
+    offsets: Tuple[int, ...]   # includes 0 (self)
+    weights: Tuple[float, ...]
+
+    def __post_init__(self):
+        if len(self.offsets) != len(self.weights):
+            raise ValueError("offsets/weights length mismatch")
+        if abs(sum(self.weights) - 1.0) > 1e-9:
+            raise ValueError(f"weights must sum to 1, got {sum(self.weights)}")
+        woff: Dict[int, float] = {}
+        for o, w in zip(self.offsets, self.weights):
+            woff[o % self.n] = woff.get(o % self.n, 0.0) + w
+        for o, w in list(woff.items()):
+            if abs(woff.get((-o) % self.n, 0.0) - w) > 1e-9:
+                raise ValueError("offset set must be symmetric for symmetric W")
+
+    @property
+    def matrix(self) -> np.ndarray:
+        """Dense ``W`` with ``W[j, i]`` = weight worker *i* puts on worker *j*.
+
+        Circulant: row j, col i nonzero iff ``j - i ≡ o (mod n)``.
+        """
+        W = np.zeros((self.n, self.n))
+        for o, w in zip(self.offsets, self.weights):
+            for i in range(self.n):
+                W[(i + o) % self.n, i] += w
+        return W
+
+    @property
+    def rho(self) -> float:
+        """Spectral gap parameter: second-largest absolute eigenvalue (A2)."""
+        ev = np.sort(np.abs(np.linalg.eigvalsh(self.matrix)))[::-1]
+        return float(ev[1]) if self.n > 1 else 0.0
+
+    @property
+    def phi(self) -> float:
+        """Smallest nonzero entry of W (Theorem 1's phi)."""
+        W = self.matrix
+        nz = W[W > 1e-12]
+        return float(nz.min()) if nz.size else 0.0
+
+    @property
+    def t_mix_bound(self) -> float:
+        """Supp. E: ``t_mix <= log(4n) / (1 - rho)`` for reversible chains."""
+        gap = 1.0 - self.rho
+        if gap <= 0:
+            return float("inf")
+        return float(np.log(4 * self.n) / gap)
+
+    def neighbor_offsets(self) -> Tuple[int, ...]:
+        return tuple(o for o in self.offsets if o % self.n != 0)
+
+    def slack(self, gamma: float) -> "Topology":
+        """``W_bar = gamma W + (1 - gamma) I`` (Theorem 3 consensus step)."""
+        woff: Dict[int, float] = {}
+        for o, w in zip(self.offsets, self.weights):
+            woff[o % self.n] = woff.get(o % self.n, 0.0) + gamma * w
+        woff[0] = woff.get(0, 0.0) + (1.0 - gamma)
+        offs = tuple(sorted(woff))
+        return Topology(f"{self.name}-slack{gamma:g}", self.n, offs,
+                        tuple(woff[o] for o in offs))
+
+
+def ring(n: int, self_weight: float | None = None) -> Topology:
+    """Bidirectional ring. Default uniform 1/3 weights (paper's experiments)."""
+    if n == 1:
+        return Topology("ring", 1, (0,), (1.0,))
+    if n == 2:
+        sw = 0.5 if self_weight is None else self_weight
+        return Topology("ring", 2, (0, 1), (sw, 1.0 - sw))
+    sw = 1.0 / 3.0 if self_weight is None else self_weight
+    nw = (1.0 - sw) / 2.0
+    return Topology("ring", n, (-1, 0, 1), (nw, sw, nw))
+
+
+def torus(rows: int, cols: int) -> Topology:
+    """2-D torus on ``rows*cols`` workers flattened row-major; 1/5 weights."""
+    n = rows * cols
+    if rows < 3 or cols < 3:
+        raise ValueError("torus needs rows, cols >= 3 for distinct offsets")
+    offs = (-cols, -1, 0, 1, cols)
+    w = 1.0 / len(offs)
+    return Topology("torus", n, offs, tuple([w] * len(offs)))
+
+
+def exponential(n: int) -> Topology:
+    """Exponential graph: hops ±2^j; O(log n) degree, small rho."""
+    hops = []
+    h = 1
+    while h <= n // 2:
+        hops.append(h)
+        h *= 2
+    offs = [0] + [o for h in hops for o in ((h, -h) if (2 * h) % n or h != n // 2 or n % 2 else (h,))]
+    # dedupe mod n (e.g. +n/2 == -n/2)
+    seen, offsets = set(), []
+    for o in offs:
+        m = o % n
+        if m not in seen:
+            seen.add(m)
+            offsets.append(o)
+    w = 1.0 / len(offsets)
+    return Topology("exponential", n, tuple(offsets), tuple([w] * len(offsets)))
+
+
+def fully_connected(n: int) -> Topology:
+    offs = tuple(range(n))
+    return Topology("complete", n, offs, tuple([1.0 / n] * n))
+
+
+def get_topology(name: str, n: int, **kw) -> Topology:
+    if name == "ring":
+        return ring(n, **kw)
+    if name == "exponential":
+        return exponential(n)
+    if name == "complete":
+        return fully_connected(n)
+    if name == "torus":
+        side = int(round(np.sqrt(n)))
+        if side * side != n:
+            raise ValueError(f"torus needs square n, got {n}")
+        return torus(side, side)
+    raise ValueError(f"unknown topology {name!r}")

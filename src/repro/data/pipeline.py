@@ -1,0 +1,54 @@
+"""Sharded input pipeline.
+
+Produces *global* batches laid out for the trainer: decentralized training
+wants ``[n_workers, local_batch, ...]`` with the worker dim sharded over the
+worker mesh axes.  Generation is deterministic in (seed, step) so every host
+of a multi-pod job computes the same logical batch and ``jax.device_put`` with
+a NamedSharding slices out only the rows its addressable devices own.
+
+For the assigned-architecture workloads batches are synthetic token/embedding
+tensors matching ``Model.batch_spec`` (DESIGN §2: no datasets offline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models.model_factory import Model
+
+
+@dataclasses.dataclass
+class SyntheticLMPipeline:
+    """Batch factory for one (model, shape, n_workers) combination."""
+    model: Model
+    shape: InputShape
+    n_workers: int
+    seed: int = 0
+
+    def global_batch(self, step: int) -> Dict[str, jax.Array]:
+        """Unstacked [GB, ...] batch; cheap uniform tokens + gaussian embeds."""
+        spec = self.model.batch_spec(self.shape)
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        out = {}
+        for name, (shp, dt) in spec.items():
+            key, k = jax.random.split(key)
+            if jnp.issubdtype(dt, jnp.integer):
+                hi = self.model.cfg.vocab_size
+                arr = jax.random.randint(k, shp, 0, hi, dtype=jnp.int32)
+            else:
+                arr = jax.random.normal(k, shp, dtype=jnp.float32).astype(dt)
+            out[name] = arr
+        return out
+
+    def worker_batch(self, step: int) -> Dict[str, jax.Array]:
+        """Stacked [n, GB/n, ...] layout for the decentralized trainer."""
+        gb = self.global_batch(step)
+        n = self.n_workers
+        def stack(a):
+            assert a.shape[0] % n == 0, (a.shape, n)
+            return a.reshape(n, a.shape[0] // n, *a.shape[1:])
+        return {k: stack(v) for k, v in gb.items()}

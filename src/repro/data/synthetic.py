@@ -1,0 +1,86 @@
+"""Synthetic data generators (offline container: no datasets ship; DESIGN §2).
+
+Three generators:
+
+* ``TokenTask`` — learnable LM data: a fixed random bigram teacher produces
+  token streams; the model can drive loss well below the uniform entropy, so
+  convergence comparisons between algorithms are meaningful.
+* ``cifar_like`` — class-conditional Gaussian images (32x32x3, 10 classes),
+  the stand-in for CIFAR10 in the paper-faithful ResNet experiments.
+  ``heterogeneous=True`` reproduces the D² setting: worker i draws ONLY class
+  i (mod 10) — maximal outer variance (paper Fig. 2a).
+* ``quadratic`` — the Theorem 1 objective ``f(x) = ||x - delta 1/2||^2 / 2``
+  with additive gradient noise.
+
+All generators are pure functions of (seed, step) — deterministic, resumable,
+and identical across hosts, which is what a sharded multi-pod input pipeline
+needs (each host slices its worker rows from the same logical batch).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenTask:
+    vocab_size: int
+    seed: int = 0
+
+    def _teacher(self) -> jax.Array:
+        """Row-stochastic bigram transition logits (fixed by seed)."""
+        key = jax.random.PRNGKey(self.seed)
+        return jax.random.normal(key, (self.vocab_size, self.vocab_size)) * 2.0
+
+    def batch(self, step: int, batch: int, seq: int) -> Dict[str, jax.Array]:
+        logits = self._teacher()
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed + 1), step)
+
+        def one_seq(k):
+            k0, ks = jax.random.split(k)
+            t0 = jax.random.randint(k0, (), 0, self.vocab_size)
+
+            def body(tok, kk):
+                nxt = jax.random.categorical(kk, logits[tok])
+                return nxt, nxt
+            _, toks = jax.lax.scan(body, t0, jax.random.split(ks, seq))
+            return jnp.concatenate([t0[None], toks[:-1]]), toks
+
+        keys = jax.random.split(key, batch)
+        tokens, labels = jax.vmap(one_seq)(keys)
+        return {"tokens": tokens.astype(jnp.int32),
+                "labels": labels.astype(jnp.int32)}
+
+
+def cifar_like(step: int, batch: int, *, num_classes: int = 10, seed: int = 0,
+               worker: int | None = None, heterogeneous: bool = False
+               ) -> Dict[str, jax.Array]:
+    """Class-conditional Gaussian 'images'.  Deterministic in (seed, step)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    if worker is not None:
+        key = jax.random.fold_in(key, worker)
+    k_lbl, k_img, k_mu = jax.random.split(key, 3)
+    # fixed class means (seed only — same teacher everywhere)
+    mus = jax.random.normal(jax.random.PRNGKey(seed + 777),
+                            (num_classes, 8)) * 2.0
+    if heterogeneous and worker is not None:
+        labels = jnp.full((batch,), worker % num_classes, jnp.int32)
+    else:
+        labels = jax.random.randint(k_lbl, (batch,), 0, num_classes)
+    # low-rank class signal embedded in noise
+    basis = jax.random.normal(jax.random.PRNGKey(seed + 778),
+                              (8, 32 * 32 * 3)) / 8.0
+    signal = (mus[labels] @ basis).reshape(batch, 32, 32, 3)
+    noise = jax.random.normal(k_img, (batch, 32, 32, 3)) * 0.5
+    return {"images": signal + noise, "labels": labels}
+
+
+def quadratic_grad(x: jax.Array, delta: float, key, sigma: float = 0.1
+                   ) -> jax.Array:
+    """Stochastic gradient of the Theorem-1 quadratic at x."""
+    opt = delta / 2.0
+    return x - opt + sigma * jax.random.normal(key, x.shape)

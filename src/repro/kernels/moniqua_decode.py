@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: fused Moniqua decode (unpack → dequant → mod-recover).
+
+Receiver side of Algorithm 1: given the packed payload from a neighbor and the
+receiver's own model tile ``y`` (the Lemma 1 reference), produce
+
+    x_hat = ((q * B) - y) mod B + y           (mode="remote", line 5)
+    x_hat = (q * B) - (y mod B) + y           (mode="self",   line 4)
+
+in a single VMEM pass: one packed read (bits/8 bytes/elem) + one y read +
+one f32/bf16 write.  The two modes share the unpack/dequant prologue.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+DEFAULT_BLOCK_COLS = 1024
+
+
+def _decode_kernel(p_ref, y_ref, b_ref, o_ref, *, bits: int, mode: str):
+    levels = 2 ** bits
+    vpb = 8 // bits
+    rows, pcols = p_ref.shape
+    B = b_ref[0]
+    p = p_ref[...].astype(jnp.uint32)
+
+    if vpb == 1:
+        codes = p.astype(jnp.float32)
+    else:
+        mask = jnp.uint32(2 ** bits - 1)
+        subs = [((p >> jnp.uint32(s * bits)) & mask) for s in range(vpb)]
+        # value at column (b*vpb + s) comes from byte b, slot s
+        codes = jnp.stack(subs, axis=-1).reshape(rows, pcols * vpb)
+        codes = codes.astype(jnp.float32)
+
+    qb = ((codes + 0.5) / levels - 0.5) * B
+    y = y_ref[...].astype(jnp.float32)
+    if mode == "remote":
+        d = qb - y
+        out = (d - B * jnp.floor(d / B + 0.5)) + y      # cmod(q*B - y, B) + y
+    elif mode == "self":
+        ymod = y - B * jnp.floor(y / B + 0.5)           # cmod(y, B)
+        out = qb - ymod + y
+    else:
+        raise ValueError(mode)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "mode", "block_rows",
+                                             "block_cols", "interpret"))
+def decode(packed: jax.Array, y2d: jax.Array, B: jax.Array, *, bits: int,
+           mode: str = "remote",
+           block_rows: int = DEFAULT_BLOCK_ROWS,
+           block_cols: int = DEFAULT_BLOCK_COLS,
+           interpret: bool = False) -> jax.Array:
+    """Decode packed (rows, cols*bits/8) against local y (rows, cols)."""
+    rows, cols = y2d.shape
+    vpb = 8 // bits
+    if cols % block_cols or rows % block_rows:
+        raise ValueError(f"shape {y2d.shape} not tiled by "
+                         f"({block_rows},{block_cols}); pad in ops.py")
+    grid = (rows // block_rows, cols // block_cols)
+    kernel = functools.partial(_decode_kernel, bits=bits, mode=mode)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, block_cols // vpb), lambda i, j: (i, j)),
+            pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), y2d.dtype),
+        interpret=interpret,
+    )(packed, y2d, jnp.asarray(B, jnp.float32).reshape(1))

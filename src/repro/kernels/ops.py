@@ -1,0 +1,181 @@
+"""Jitted wrappers around the Moniqua codec kernels.
+
+Handles arbitrary shapes/dtypes by flattening to a padded 2-D tile grid,
+dispatching to the Pallas kernels (``interpret=True`` automatically off-TPU so
+the same call validates on CPU), and restoring the caller's layout.
+
+The packed layout matches ``core.quantizers.pack_codes`` (pack along the last
+axis, zero-padded to the values-per-byte boundary) so payload byte accounting
+is identical between the kernel and pure-jnp paths.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantizers import QuantSpec, packed_last_dim
+from repro.kernels import moniqua_decode as _dec
+from repro.kernels import moniqua_encode as _enc
+from repro.kernels import ref as kref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _to_tiles(x: jax.Array, block_rows: int, block_cols: int):
+    """Flatten to (rows, cols) padded to the tile grid; return unpad info."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    cols = block_cols
+    rows = -(-n // cols)
+    rows_p = -(-rows // block_rows) * block_rows
+    pad = rows_p * cols - n
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(rows_p, cols), n
+
+
+def _key_to_seed(key: Optional[jax.Array]) -> jax.Array:
+    if key is None:
+        return jnp.uint32(0)
+    return jax.random.key_data(key).reshape(-1)[-1].astype(jnp.uint32)
+
+
+def moniqua_encode(x: jax.Array, B: jax.Array, spec: QuantSpec,
+                   key: Optional[jax.Array], *,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Encode any-shape ``x`` -> packed uint8 with last dim ceil(n/vpb).
+
+    Kernel-internal layout is a flat row-major tile grid; the public layout
+    (matching ``pack_codes``) is recovered by unpack/repack only when the last
+    dim is not already byte-aligned — the common aligned case is zero-copy.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    seed = _key_to_seed(key)
+    vpb = spec.values_per_byte
+    n_last = x.shape[-1] if x.ndim else 1
+    pad = (-n_last) % vpb
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if pad else x
+    lead_shape = xp.shape[:-1]
+    x2d, n = _to_tiles(xp, _enc.DEFAULT_BLOCK_ROWS, _enc.DEFAULT_BLOCK_COLS)
+    p = _enc.encode(x2d, B, seed, bits=spec.bits, stochastic=spec.stochastic,
+                    interpret=interpret)
+    p = p.reshape(-1)[: n // vpb]
+    return p.reshape(*lead_shape, (n_last + pad) // vpb)
+
+
+def _decode_common(packed: jax.Array, y: jax.Array, B, spec: QuantSpec,
+                   mode: str, interpret: Optional[bool]) -> jax.Array:
+    if interpret is None:
+        interpret = not _on_tpu()
+    vpb = spec.values_per_byte
+    n_last = y.shape[-1]
+    pad = (-n_last) % vpb
+    yp = jnp.pad(y, [(0, 0)] * (y.ndim - 1) + [(0, pad)]) if pad else y
+    br = _dec.DEFAULT_BLOCK_ROWS
+    bc = _dec.DEFAULT_BLOCK_COLS
+    y2d, n = _to_tiles(yp, br, bc)
+    pflat = packed.reshape(-1)
+    p_need = y2d.size // vpb
+    pfull = jnp.zeros((p_need,), jnp.uint8).at[: pflat.shape[0]].set(pflat)
+    p2d = pfull.reshape(y2d.shape[0], y2d.shape[1] // vpb)
+    out = _dec.decode(p2d, y2d, B, bits=spec.bits, mode=mode,
+                      interpret=interpret)
+    out = out.reshape(-1)[:n].reshape(yp.shape)
+    if pad:
+        out = out[..., :n_last]
+    return out
+
+
+def moniqua_decode_remote(packed, y, B, spec: QuantSpec, *,
+                          interpret: Optional[bool] = None):
+    return _decode_common(packed, y, B, spec, "remote", interpret)
+
+
+def moniqua_decode_self(packed, x, B, spec: QuantSpec, *,
+                        interpret: Optional[bool] = None):
+    return _decode_common(packed, x, B, spec, "self", interpret)
+
+
+# Reference-path conveniences used by MoniquaCodec(use_pallas=True)
+
+def moniqua_unpack_value(packed, B, spec: QuantSpec, last_dim: int):
+    codes = kref.unpack_ref(packed, spec.bits)[..., :last_dim]
+    return ((codes.astype(jnp.float32) + 0.5) / spec.levels - 0.5) * B
+
+
+def moniqua_recover(qb, y, B):
+    return kref.cmod(qb - y.astype(jnp.float32), B) + y.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention: Pallas forward + reference backward (recompute).
+# ---------------------------------------------------------------------------
+
+def _sdpa_ref(q, k, v, scale, causal, window):
+    """Masked-softmax oracle on [BH, S, D] layout (matches models/layers)."""
+    sq, sk = q.shape[1], k.shape[1]
+    scores = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * scale
+    qi = jnp.arange(sq)[:, None]
+    kj = jnp.arange(sk)[None, :]
+    valid = jnp.ones((sq, sk), bool)
+    if causal:
+        valid &= kj <= qi
+        if window:
+            valid &= kj > qi - window
+    scores = jnp.where(valid, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bqk,bkd->bqd", w, v)
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_sdpa_fn(scale: float, causal: bool, window: int, interpret: bool):
+    from repro.kernels.flash_attention import flash_attention
+
+    @jax.custom_vjp
+    def f(q, k, v):
+        return flash_attention(q, k, v, scale=scale, causal=causal,
+                               window=window, interpret=interpret)
+
+    def fwd(q, k, v):
+        return f(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        # Recompute-based backward through the reference attention: the
+        # forward never materialises scores (kernel); the backward pays the
+        # jnp path once. A fused Pallas backward is the natural next step.
+        q, k, v = res
+        _, vjp = jax.vjp(lambda q_, k_, v_: _sdpa_ref(q_, k_, v_, scale,
+                                                      causal, window),
+                         q, k, v)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def flash_sdpa(q, k, v, *, scale: float, causal: bool = True,
+               window: int = 0, interpret: Optional[bool] = None):
+    """Differentiable flash attention on [..., S, H, D] tensors.
+
+    Forward = Pallas kernel (scores stay in VMEM); backward = reference
+    recompute.  interpret defaults to True off-TPU.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    *lead, S, H, D = q.shape
+    Sk = k.shape[-3]
+    fold = 1
+    for n in lead:
+        fold *= n
+    qf = jnp.moveaxis(q, -2, -3).reshape(fold * H, S, D)
+    kf = jnp.moveaxis(k, -2, -3).reshape(fold * H, Sk, D)
+    vf = jnp.moveaxis(v, -2, -3).reshape(fold * H, Sk, D)
+    o = _flash_sdpa_fn(scale, causal, window, interpret)(qf, kf, vf)
+    o = o.reshape(*lead, H, S, D)
+    return jnp.moveaxis(o, -3, -2)

@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for the Moniqua codec kernels.
+
+These define the *exact* semantics the Pallas kernels must reproduce
+(bitwise, including the in-kernel hash RNG), and are what the tests
+``assert_allclose`` against.  They are also the fallback path used on
+non-TPU backends.
+
+RNG: stochastic rounding uses a counter-based murmur3-finalizer hash of
+``(seed, flat_element_index)`` so that (a) the same element gets the same
+uniform draw on every worker (the paper's *shared randomness*, Supp. C) and
+(b) kernel and oracle agree bit-for-bit with no PRNG-state threading.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def hash_uniform(seed: jax.Array, idx: jax.Array) -> jax.Array:
+    """murmur3 finalizer on (seed ^ idx) -> float32 uniform in [0, 1)."""
+    h = (idx.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)) ^ seed.astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return (h >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def cmod(z: jax.Array, a) -> jax.Array:
+    zf = z.astype(jnp.float32)
+    a = jnp.float32(a) if not isinstance(a, jax.Array) else a.astype(jnp.float32)
+    return zf - a * jnp.floor(zf / a + 0.5)
+
+
+def codes_ref(x: jax.Array, B, bits: int, stochastic: bool,
+              seed: jax.Array, idx: jax.Array) -> jax.Array:
+    """Quantization codes of ``Q_delta((x/B) mod 1)`` (Algorithm 1 line 3)."""
+    levels = 2 ** bits
+    r = cmod(x.astype(jnp.float32) / B, 1.0)           # [-1/2, 1/2)
+    lat = (r + 0.5) * levels - 0.5                      # midpoint lattice
+    if stochastic:
+        u = hash_uniform(seed, idx)
+        c = jnp.floor(lat + u)
+    else:
+        c = jnp.floor(lat + 0.5)
+    return jnp.clip(c, 0, levels - 1).astype(jnp.uint8)
+
+
+def pack_ref(codes: jax.Array, bits: int) -> jax.Array:
+    """Pack codes into uint8 along the last axis (must be divisible)."""
+    if bits == 8:
+        return codes.astype(jnp.uint8)
+    vpb = 8 // bits
+    g = codes.reshape(*codes.shape[:-1], -1, vpb).astype(jnp.uint8)
+    out = jnp.zeros(g.shape[:-1], jnp.uint8)
+    for j in range(vpb):
+        out = out | (g[..., j] << jnp.uint8(j * bits))
+    return out
+
+
+def unpack_ref(packed: jax.Array, bits: int) -> jax.Array:
+    if bits == 8:
+        return packed
+    vpb = 8 // bits
+    mask = jnp.uint8(2 ** bits - 1)
+    parts = [(packed >> jnp.uint8(j * bits)) & mask for j in range(vpb)]
+    return jnp.stack(parts, axis=-1).reshape(*packed.shape[:-1], -1)
+
+
+def encode_ref(x: jax.Array, B, bits: int, stochastic: bool, seed) -> jax.Array:
+    """Full encode: x -> packed uint8.  Last dim must divide values-per-byte."""
+    seed = jnp.asarray(seed, jnp.uint32)
+    idx = jnp.arange(x.size, dtype=jnp.uint32).reshape(x.shape)
+    codes = codes_ref(x, B, bits, stochastic, seed, idx)
+    return pack_ref(codes, bits)
+
+
+def value_ref(packed: jax.Array, B, bits: int) -> jax.Array:
+    """Unpack + dequantize + rescale: the transmitted value ``q * B``."""
+    levels = 2 ** bits
+    c = unpack_ref(packed, bits).astype(jnp.float32)
+    return ((c + 0.5) / levels - 0.5) * jnp.float32(B)
+
+
+def decode_ref(packed: jax.Array, y: jax.Array, B, bits: int) -> jax.Array:
+    """Lemma 1 recovery against local reference ``y``."""
+    qb = value_ref(packed, B, bits)
+    yf = y.astype(jnp.float32)
+    return cmod(qb - yf, B) + yf
+
+
+def decode_self_ref(packed: jax.Array, x: jax.Array, B, bits: int) -> jax.Array:
+    """Algorithm 1 line 4: sender-side biased reconstruction."""
+    qb = value_ref(packed, B, bits)
+    xf = x.astype(jnp.float32)
+    return qb - cmod(xf, B) + xf

@@ -1,0 +1,267 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first init.  Test hook (used by tests/test_dryrun_small.py):
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination
+on the production mesh, with ShapeDtypeStruct inputs (no allocation), and
+extract the roofline terms (analysis/roofline.py) from the compiled artifact.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                     # all 40 x 2
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+        --shape decode_32k --multi-pod --algo moniqua --bits 8
+    ... --out results.json   (incremental append; safe to re-run)
+
+Exit code is non-zero if any requested combination fails to compile.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis import roofline as RL
+from repro.configs import assigned_archs, get_config
+from repro.configs.base import ArchConfig, InputShape, get_input_shape
+from repro.core.algorithms import AlgoHyper, get_algorithm
+from repro.core.moniqua import MoniquaCodec
+from repro.core.quantizers import QuantSpec
+from repro.core.theta import ThetaSchedule
+from repro.core.topology import ring
+from repro.launch.mesh import make_production_mesh, mesh_shape_dict
+from repro.models.model_factory import build_model
+from repro.models.sharding import ShardingRules
+from repro.optim.sgd import SGDConfig
+from repro.train import serve_step as SS
+from repro.train import train_step as TS
+
+
+def skip_reason(cfg: ArchConfig, shape: InputShape) -> Optional[str]:
+    if cfg.name == "whisper-base" and shape.name == "long_500k":
+        return ("full-attention encoder-decoder is quadratic; no sub-quadratic "
+                "variant implemented (DESIGN.md §5)")
+    return None
+
+
+def input_specs(model, shape: InputShape, n_workers: int, stacked: bool):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    spec = model.batch_spec(shape)
+    out = {}
+    for name, (shp, dt) in spec.items():
+        if stacked:
+            assert shp[0] % n_workers == 0, (shp, n_workers)
+            shp = (n_workers, shp[0] // n_workers) + tuple(shp[1:])
+        out[name] = jax.ShapeDtypeStruct(shp, dt)
+    return out
+
+
+def _named(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+@dataclasses.dataclass
+class DryrunResult:
+    arch: str
+    shape: str
+    mesh: str
+    status: str
+    seconds: float = 0.0
+    error: str = ""
+    memory: Dict[str, float] = dataclasses.field(default_factory=dict)
+    roofline: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    collectives: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def row(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               mesh=None, algo: str = "moniqua", bits: int = 8,
+               verbose: bool = True, override: Optional[dict] = None
+               ) -> DryrunResult:
+    cfg = get_config(arch)
+    if override:
+        cfg = dataclasses.replace(cfg, **override)
+    shape = get_input_shape(shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return DryrunResult(arch, shape_name, mesh_name, "skipped",
+                            error=reason)
+    t0 = time.time()
+    try:
+        mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+        ms = mesh_shape_dict(mesh)
+        chips = 1
+        for v in ms.values():
+            chips *= v
+        rules = ShardingRules(cfg.dist_mode, multi_pod="pod" in ms)
+        model = build_model(cfg)
+        n_workers = TS.n_workers_for(cfg, rules, ms)
+
+        from repro.models import sharding as SH
+        with jax.set_mesh(mesh), SH.constraint_context(rules, ms):
+            if shape.kind == "train":
+                lowered = _lower_train(model, shape, mesh, ms, rules,
+                                       n_workers, algo, bits)
+            elif shape.kind == "prefill":
+                lowered = _lower_prefill(model, shape, mesh, ms, rules)
+            else:
+                lowered = _lower_decode(model, shape, mesh, ms, rules)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        print(f"[{arch} x {shape_name} x {mesh_name}] memory_analysis:",
+              mem)
+        ca = compiled.cost_analysis()
+        print(f"[{arch} x {shape_name} x {mesh_name}] cost_analysis: "
+              f"flops={ca.get('flops', 0):.3e} "
+              f"bytes={ca.get('bytes accessed', 0):.3e}")
+        roof = RL.roofline_from_compiled(
+            compiled, RL.model_flops_for(cfg, shape), chips)
+        stats = RL.parse_collectives(compiled.as_text())
+        res = DryrunResult(
+            arch, shape_name, mesh_name, "ok", seconds=time.time() - t0,
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_estimate_gb": (mem.argument_size_in_bytes
+                                     + mem.output_size_in_bytes
+                                     + mem.temp_size_in_bytes
+                                     - mem.alias_size_in_bytes) / 1e9,
+            },
+            roofline={
+                "flops_per_chip": roof.flops,
+                "bytes_per_chip": roof.bytes_accessed,
+                "collective_bytes_per_chip": roof.collective_bytes,
+                "compute_s": roof.compute_s,
+                "memory_s": roof.memory_s,
+                "collective_s": roof.collective_s,
+                "dominant": roof.dominant,
+                "bound_s": roof.bound_s,
+                "model_flops": roof.model_flops,
+                "useful_ratio": roof.useful_ratio,
+                "mfu_upper_bound": roof.mfu_upper_bound,
+            },
+            collectives={"counts": stats.counts,
+                         "bytes": stats.bytes_by_op,
+                         "summary": stats.summary()},
+        )
+        if verbose:
+            r = res.roofline
+            print(f"[{arch} x {shape_name} x {mesh_name}] OK in "
+                  f"{res.seconds:.1f}s  dominant={r['dominant']} "
+                  f"compute={r['compute_s']*1e3:.3f}ms "
+                  f"memory={r['memory_s']*1e3:.3f}ms "
+                  f"collective={r['collective_s']*1e3:.3f}ms  "
+                  f"colls: {res.collectives['summary']}")
+        return res
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        tb = traceback.format_exc(limit=20)
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_name}] FAIL: {e}")
+        return DryrunResult(arch, shape_name, mesh_name, "error",
+                            seconds=time.time() - t0, error=f"{e}\n{tb}")
+
+
+def _hyper(cfg, n_workers, algo, bits):
+    topo = ring(n_workers)
+    spec = QuantSpec(bits=bits, stochastic=bits > 1)
+    return AlgoHyper(topo=topo, codec=MoniquaCodec(spec), theta=2.0)
+
+
+def _lower_train(model, shape, mesh, ms, rules, n_workers, algo_name, bits):
+    algo = get_algorithm(algo_name)
+    hp = _hyper(model.cfg, n_workers, algo_name, bits)
+    tcfg = TS.TrainStepConfig(algo=algo_name, sgd=SGDConfig(), lr=0.1,
+                              theta=ThetaSchedule(mode="constant", value=2.0))
+    step = TS.make_train_step(model, hp, tcfg)
+    state_ab = TS.abstract_state(model, algo, hp, n_workers)
+    batch_ab = input_specs(model, shape, n_workers, stacked=True)
+    state_sh = _named(mesh, TS.state_pspecs(model, algo, hp, rules, ms,
+                                            n_workers))
+    batch_sh = _named(mesh, TS.batch_pspecs(batch_ab, rules, ms, stacked=True))
+    jf = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                 out_shardings=(state_sh, None), donate_argnums=(0,))
+    return jf.lower(state_ab, batch_ab)
+
+
+def _lower_prefill(model, shape, mesh, ms, rules):
+    pstep = SS.make_prefill_step(model)
+    params_ab = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    batch_ab = input_specs(model, shape, 1, stacked=False)
+    params_sh = _named(mesh, TS.params_pspecs(model, rules, ms,
+                                              stacked=False))
+    batch_sh = _named(mesh, TS.batch_pspecs(batch_ab, rules, ms,
+                                            stacked=False))
+    jf = jax.jit(pstep, in_shardings=(params_sh, batch_sh))
+    return jf.lower(params_ab, batch_ab)
+
+
+def _lower_decode(model, shape, mesh, ms, rules):
+    sstep = SS.make_serve_step(model)
+    params_ab = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache_ab = SS.abstract_cache(model, shape)
+    tok_ab = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    params_sh = _named(mesh, TS.params_pspecs(model, rules, ms,
+                                              stacked=False))
+    cache_sh = _named(mesh, SS.cache_pspecs(model, shape, rules, ms))
+    from repro.models.sharding import safe_pspec
+    tok_sh = NamedSharding(mesh, safe_pspec(tok_ab.shape,
+                                            rules.pspec("global_batch", None),
+                                            ms))
+    jf = jax.jit(sstep, in_shardings=(params_sh, cache_sh, tok_sh),
+                 out_shardings=(None, cache_sh), donate_argnums=(1,))
+    return jf.lower(params_ab, cache_ab, tok_ab)
+
+
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="run single-pod AND multi-pod")
+    ap.add_argument("--algo", default="moniqua")
+    ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--out", default=None, help="append JSONL results here")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else assigned_archs()
+    shapes = [args.shape] if args.shape else list(
+        ["train_4k", "prefill_32k", "decode_32k", "long_500k"])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = 0
+    for mp in meshes:
+        mesh = make_production_mesh(multi_pod=mp)
+        for arch in archs:
+            for shape in shapes:
+                res = dryrun_one(arch, shape, multi_pod=mp, mesh=mesh,
+                                 algo=args.algo, bits=args.bits)
+                if res.status == "error":
+                    failures += 1
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(res.row()) + "\n")
+    print(f"dry-run complete; failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

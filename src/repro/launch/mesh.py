@@ -1,0 +1,34 @@
+"""Production mesh factories.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (required for smoke tests that must see 1 device).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Target fleet: TPU v5e, 16x16 = 256 chips/pod; 2 pods multi-pod.
+
+    Axes: ``data`` (decentralized workers / FSDP), ``model`` (tensor
+    parallel), plus ``pod`` across pods.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 4, model: int = 2, pod: int = 0):
+    """Small mesh for subprocess tests (requires forced host devices)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             axis_types=(AxisType.Auto,) * 3)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def mesh_shape_dict(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,319 @@
+"""Shared neural-net building blocks (pure functional JAX).
+
+Parameters are nested dicts of arrays.  Every ``init_*`` has a matching
+``*_pspecs`` producing the same tree of *logical axis tuples* (resolved to
+PartitionSpecs by models/sharding.py), so abstract initialisation via
+``jax.eval_shape`` and sharding stay in lock-step by construction.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal(key, shape, scale, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return truncated_normal(key, (d_in, d_out), scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-6):
+    # NOTE (§Perf internlm2-20b iters 1-2, both REFUTED): replacing the f32
+    # elementwise chain with bf16 math + f32-accumulated statistics
+    # *increased* HLO bytes-accessed (23.9 -> 25.6 -> 28.6 s memory term):
+    # XLA CSEs the all-f32 formulation across fwd/bwd/remat better than the
+    # mixed-dtype one. Keep the numerically-stronger f32 form.
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding (full and partial / "2d" chatglm style)
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions, head_dim, theta, fraction=1.0):
+    """cos/sin tables for (possibly partial) RoPE.
+
+    fraction < 1 (chatglm's 2-D RoPE) rotates only the first
+    ``fraction * head_dim`` dims, leaving the rest unrotated.
+    """
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    freqs = theta ** (-jnp.arange(0, rot, 2, dtype=jnp.float32) / rot)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., rot/2]
+    return jnp.cos(ang), jnp.sin(ang), rot
+
+
+def apply_rope(x, cos, sin, rot):
+    """x: [..., S, H, D]; cos/sin: [..., S, rot/2] broadcast over heads."""
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1 = xr[..., 0::2]
+    x2 = xr[..., 1::2]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    y1 = x1 * c - x2 * s
+    y2 = x2 * c + x1 * s
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr, xp], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (full causal, sliding window, cross, cached decode)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, d_model=None, cross=False, dtype=jnp.bfloat16):
+    """QKV/O weights kept 3-D ``[d, heads, head_dim]`` (O: ``[h, hd, d]``).
+
+    The head axis is the TP axis; ``head_dim`` is NEVER sharded.  With
+    flattened 2-D ``[d, nh*hd]`` weights SPMD splits the 16-way model axis
+    across head boundaries and partitions the *contracted* head_dim of the
+    QK einsum — producing partial-sum all-reduces of the full [B,h,S,S]
+    score matrix (measured: the dominant collective for every GQA arch;
+    EXPERIMENTS.md §Perf). 3-D weights shard cleanly on heads when
+    divisible and fall back to replication (safe_pspec) when not.
+    """
+    d = d_model or cfg.d_model
+    nh, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], d, nh * hd, dtype).reshape(d, nh, hd),
+        "wk": dense_init(ks[1], d, nkv * hd, dtype).reshape(d, nkv, hd),
+        "wv": dense_init(ks[2], d, nkv * hd, dtype).reshape(d, nkv, hd),
+        "wo": dense_init(ks[3], nh * hd, d, dtype,
+                         scale=1.0 / math.sqrt(nh * hd)).reshape(nh, hd, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nh, hd), dtype)
+        p["bk"] = jnp.zeros((nkv, hd), dtype)
+        p["bv"] = jnp.zeros((nkv, hd), dtype)
+    return p
+
+
+def attention_pspecs(cfg):
+    s = {"wq": ("embed", "heads", None), "wk": ("embed", "kv", None),
+         "wv": ("embed", "kv", None), "wo": ("heads", None, "embed")}
+    if cfg.qkv_bias:
+        s.update({"bq": ("heads", None), "bk": ("kv", None),
+                  "bv": ("kv", None)})
+    return s
+
+
+def _project_qkv(p, cfg, x):
+    q = jnp.einsum("...d,dnh->...nh", x, p["wq"])
+    k = jnp.einsum("...d,dnh->...nh", x, p["wk"])
+    v = jnp.einsum("...d,dnh->...nh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+def _gqa_expand(k, nh):
+    nkv = k.shape[-2]
+    if nkv == nh:
+        return k
+    return jnp.repeat(k, nh // nkv, axis=-2)
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q [.., Sq, H, D], k/v [.., Sk, H, D], mask [.., 1|H, Sq, Sk] bool."""
+    scores = jnp.einsum("...qhd,...khd->...hqk", q, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("...hqk,...khd->...qhd", w, v)
+
+
+def _banded_sdpa(q, k, v, window, scale, q_chunk=1024):
+    """Causal sliding-window attention computed band-wise.
+
+    Full-matrix windowed attention still materialises [Sq, Sk] scores and
+    masks most of them away; for query chunk [q0, q0+c) only keys in
+    (q0-window, q0+c) can be attended, so per-chunk scores are
+    [c, window+c] and total score bytes drop from S^2 to S*(window+c)
+    (zamba2 prefill_32k: 4x; EXPERIMENTS.md §Perf).  Python loop over
+    <= S/c chunks keeps the HLO flat (no while-body undercount).
+
+    q, k, v: [.., S, H, D] self-attention at aligned positions.
+    """
+    S = q.shape[-3]
+    c = min(q_chunk, S)
+    if S % c or window <= 0 or S <= window + c:
+        mask = causal_mask(S, S, window)
+        return _sdpa(q, k, v, mask, scale)
+    band = window + c
+    pad = [(0, 0)] * (k.ndim - 3) + [(window, 0), (0, 0), (0, 0)]
+    kp = jnp.pad(k, pad)
+    vp = jnp.pad(v, pad)
+    # per-chunk relative mask: query t = q0+ti attends key j = q0-window+ki
+    # iff ki <= ti + window (causal) and ki > ti (window) and ki-window+q0>=0
+    ti = jnp.arange(c)[:, None]
+    ki = jnp.arange(band)[None, :]
+    rel_ok = (ki <= ti + window) & (ki > ti)
+    outs = []
+    for i in range(S // c):
+        q0 = i * c
+        qc = jax.lax.slice_in_dim(q, q0, q0 + c, axis=-3)
+        kc = jax.lax.slice_in_dim(kp, q0, q0 + band, axis=-3)
+        vc = jax.lax.slice_in_dim(vp, q0, q0 + band, axis=-3)
+        valid = rel_ok & (ki + q0 - window >= 0)       # clip left padding
+        outs.append(_sdpa(qc, kc, vc, valid[None], scale))
+    return jnp.concatenate(outs, axis=-3)
+
+
+def causal_mask(sq, sk, window=0, offset=0):
+    """bool [sq, sk]; query i attends keys j with j <= i+offset and
+    (window == 0 or j > i+offset-window)."""
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(sk)[None, :]
+    m = kj <= qi
+    if window:
+        m = m & (kj > qi - window)
+    return m
+
+
+def _context_parallel_kv(k, v, nh):
+    """Fallback sharding when heads don't divide the model axis.
+
+    Without this, the 3-D head-sharded weights replicate attention on every
+    model rank (scores bytes x model_size).  Constraining the *KV sequence*
+    dim onto the model axis makes SPMD derive context-parallel attention:
+    scores sharded over the key dim, softmax with tiny stat all-reduces, one
+    small all-reduce of the [.., S_q, nh, hd] output — measured on
+    whisper-base x prefill_32k in EXPERIMENTS.md §Perf.
+    No-op outside a launcher constraint context (see models/sharding.py).
+    """
+    from repro.models import sharding as SH
+    if nh % max(SH.mesh_axis_size("model"), 1) == 0:
+        return k, v                       # heads shard cleanly: leave it
+    k = SH.constrain(k, None, "kv_seq", None, None)
+    v = SH.constrain(v, None, "kv_seq", None, None)
+    return k, v
+
+
+def attention(p, cfg, x, positions, *, window=0, cross_kv=None, bidir=False):
+    """Self (causal / windowed / bidirectional) or cross attention.
+
+    x: [..., S, d]; positions: [..., S] absolute.  cross_kv: (k, v) already
+    projected from the encoder (whisper decoder).
+    """
+    nh, hd = cfg.num_heads, cfg.hd
+    q, k, v = _project_qkv(p, cfg, x)
+    if cross_kv is not None:
+        k, v = cross_kv
+    elif cfg.rope_fraction > 0:
+        cos, sin, rot = rope_cos_sin(positions, hd, cfg.rope_theta, cfg.rope_fraction)
+        q = apply_rope(q, cos, sin, rot)
+        k = apply_rope(k, cos, sin, rot)
+    k = _gqa_expand(k, nh)
+    v = _gqa_expand(v, nh)
+    k, v = _context_parallel_kv(k, v, nh)
+    sq, sk = q.shape[-3], k.shape[-3]
+    scale = 1.0 / math.sqrt(hd)
+    if cfg.flash_attention and cross_kv is None and not bidir:
+        from repro.kernels import ops as kops
+        out = kops.flash_sdpa(q, k, v, scale=scale, causal=True,
+                              window=window)
+    elif cross_kv is not None or bidir:
+        out = _sdpa(q, k, v, jnp.ones((sq, sk), bool), scale)
+    elif window and sq == sk and sq > 2 * window:
+        out = _banded_sdpa(q, k, v, window, scale,
+                           q_chunk=max(min(window, 1024), 128))
+    else:
+        out = _sdpa(q, k, v, causal_mask(sq, sk, window), scale)
+    return jnp.einsum("...nh,nhd->...d", out, p["wo"])
+
+
+def attention_decode(p, cfg, x, cache, pos, *, window=0, cross=False):
+    """Single-token cached decode.  x: [..., 1, d]; pos: [] int32 (count of
+    tokens already in the cache; the new token's absolute position).
+
+    cache: {"k","v": [..., W, nkv, hd]} with W = ring-buffer length (the
+    sliding window, or the full context for dense caches).
+    cross=True: attend over a pre-filled cache without writing (whisper
+    cross-attention; "pos" then is the encoder length).
+    Returns (out, new_cache).
+    """
+    nh, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q, k, v = _project_qkv(p, cfg, x)
+    if not cross and cfg.rope_fraction > 0:
+        cos, sin, rot = rope_cos_sin(jnp.reshape(pos, (1,)), hd,
+                                     cfg.rope_theta, cfg.rope_fraction)
+        q = apply_rope(q, cos, sin, rot)
+        k = apply_rope(k, cos, sin, rot)
+    W = cache["k"].shape[-3]
+    if cross:
+        ck, cv = cache["k"], cache["v"]
+        valid = jnp.arange(W) < pos
+    else:
+        slot = jnp.mod(pos, W)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=-3)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=-3)
+        # absolute position currently stored in each slot
+        slot_ids = jnp.arange(W)
+        slot_pos = pos - jnp.mod(pos - slot_ids, W)
+        valid = (slot_pos >= 0) & (slot_pos <= pos)
+        if window:
+            valid &= slot_pos > pos - window
+    kk = _gqa_expand(ck, nh)
+    vv = _gqa_expand(cv, nh)
+    kk, vv = _context_parallel_kv(kk, vv, nh)
+    mask = valid[None, None, :]                       # [1(h), 1(q), W]
+    out = _sdpa(q, kk, vv, mask, 1.0 / math.sqrt(hd))
+    out = jnp.einsum("...nh,nhd->...d", out, p["wo"])
+    return out, {"k": ck, "v": cv}
+
+
+def init_attn_cache(batch_dims, cfg, length, dtype):
+    nkv, hd = cfg.num_kv_heads, cfg.hd
+    shape = (*batch_dims, length, nkv, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d, f, gated, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d, f, dtype),
+         "w_down": dense_init(ks[1], f, d, dtype, scale=1.0 / math.sqrt(f))}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d, f, dtype)
+    return p
+
+
+def mlp_pspecs(gated):
+    s = {"w_up": ("embed", "mlp"), "w_down": ("mlp", "embed")}
+    if gated:
+        s["w_gate"] = ("embed", "mlp")
+    return s
+
+
+def mlp(p, x, gated):
+    h = x @ p["w_up"]
+    if gated:
+        h = jax.nn.silu(x @ p["w_gate"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["w_down"]

@@ -1,0 +1,186 @@
+"""Mamba2 / SSD block (arXiv:2405.21060 formulation), chunkwise on TPU.
+
+State-space recurrence per head:
+
+    h_t = exp(dt_t * A_h) h_{t-1} + dt_t * x_t B_t^T        h: [hd, N]
+    y_t = h_t C_t + D_h x_t
+
+computed with the standard chunked algorithm (intra-chunk quadratic +
+inter-chunk scanned state), i.e. the "1-semiseparable matmul" decomposition —
+this is the MXU-friendly form (length-c x length-c blocks) rather than a
+sequential loop over S, the key TPU adaptation of Mamba's CUDA scan kernel
+(recorded in DESIGN.md).
+
+Block wiring (simplified Mamba2): in_proj -> (z gate, x, B, C, dt heads),
+causal depthwise conv(width w) on [x,B,C], silu, SSD, RMS-norm gate with z,
+out_proj.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def dims(cfg):
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    nh = cfg.num_heads
+    hd = di // nh
+    ns = cfg.ssm.state_dim
+    return d, di, nh, hd, ns
+
+
+def init_mamba(key, cfg):
+    d, di, nh, hd, ns = dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    conv_ch = di + 2 * ns
+    return {
+        "ln": jnp.ones((d,), dt),
+        # three separate projections, NOT one fused w_in: slicing a fused
+        # [d, 2di+2ns+nh] output at z|xBC|dt boundaries cuts across model-
+        # axis shard boundaries and makes SPMD reshard each slice with
+        # f32 collective-permutes (~270 GB/chip at prefill_32k; §Perf pair B
+        # iteration 4) — separate weights shard independently, no reshard
+        "w_z": L.dense_init(ks[0], d, di, dt),
+        "w_xbc": L.dense_init(ks[3], d, di + 2 * ns, dt),
+        "w_dt": L.dense_init(ks[4], d, nh, dt),
+        "conv": (jax.random.normal(ks[1], (cfg.ssm.conv_width, conv_ch),
+                                   jnp.float32) / math.sqrt(cfg.ssm.conv_width)
+                 ).astype(dt),
+        "a_log": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "w_out": L.dense_init(ks[2], di, d, dt, scale=1.0 / math.sqrt(di)),
+    }
+
+
+def mamba_pspecs():
+    return {"ln": (None,), "w_z": ("embed", "ssm_inner"),
+            "w_xbc": ("embed", "ssm_inner"), "w_dt": ("embed", None),
+            "conv": (None, None),
+            "a_log": (None,), "d_skip": (None,), "dt_bias": (None,),
+            "w_out": ("ssm_inner", "embed")}
+
+
+def _causal_conv(u, w, state=None):
+    """Depthwise causal conv.  u: [B,S,C]; w: [K,C].  state: [B,K-1,C] or None.
+
+    Returns (out [B,S,C], new_state [B,K-1,C])."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((u.shape[0], K - 1, u.shape[-1]), u.dtype)
+    up = jnp.concatenate([state, u], axis=1)
+    out = jnp.zeros_like(u)
+    for k in range(K):
+        out = out + up[:, k:k + u.shape[1]] * w[k]
+    return out, up[:, -(K - 1):] if K > 1 else state
+
+
+def _ssd_chunked(x, dtv, A, Bm, Cm, chunk):
+    """x: [B,S,H,D]; dtv: [B,S,H] (>0); A: [H] (<0); Bm,Cm: [B,S,N].
+
+    Returns (y [B,S,H,D], final_state [B,H,D,N])."""
+    Bsz, S, H, D = x.shape
+    N = Bm.shape[-1]
+    c = min(chunk, S)
+    assert S % c == 0
+    nc = S // c
+    xr = x.reshape(Bsz, nc, c, H, D)
+    dtr = dtv.reshape(Bsz, nc, c, H)
+    Br = Bm.reshape(Bsz, nc, c, N)
+    Cr = Cm.reshape(Bsz, nc, c, N)
+
+    dA = dtr * A[None, None, None, :]               # [B,nc,c,H]  (<0)
+    cums = jnp.cumsum(dA, axis=2)
+    tot = cums[:, :, -1, :]
+
+    # intra-chunk: y[t] += sum_{s<=t} exp(cums_t - cums_s) dt_s (C_t.B_s) x_s
+    expo = cums[:, :, :, None, :] - cums[:, :, None, :, :]     # [B,nc,t,s,H]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    w = jnp.where(tri[None, None, :, :, None], jnp.exp(expo), 0.0)
+    cb = jnp.einsum("bntk,bnsk->bnts", Cr, Br)                  # [B,nc,t,s]
+    aw = (w * cb[..., None] * dtr[:, :, None, :, :]).astype(x.dtype)
+    y_intra = jnp.einsum("bntsh,bnshd->bnthd", aw, xr)
+
+    # chunk boundary states: S_n = sum_s exp(tot - cums_s) dt_s x_s B_s^T
+    wS = (jnp.exp(tot[:, :, None, :] - cums) * dtr).astype(x.dtype)
+    Sn = jnp.einsum("bnsh,bnshd,bnsk->bnhdk", wS, xr, Br)
+
+    def body(h, xs):
+        Sn_i, tot_i = xs
+        hprev = h
+        h = h * jnp.exp(tot_i)[:, :, None, None].astype(h.dtype) + Sn_i
+        return h, hprev
+
+    h0 = jnp.zeros((Bsz, H, D, N), x.dtype)
+    hT, hprevs = jax.lax.scan(body, h0, (jnp.moveaxis(Sn, 1, 0),
+                                         jnp.moveaxis(tot, 1, 0)))
+    hprevs = jnp.moveaxis(hprevs, 0, 1)             # [B,nc,H,D,N]
+
+    wq = jnp.exp(cums).astype(x.dtype)              # decay from chunk start
+    y_inter = jnp.einsum("bnth,bntk,bnhdk->bnthd", wq, Cr, hprevs)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, D)
+    return y, hT
+
+
+def mamba_block(p, cfg, x, state=None):
+    """x: [B,S,d] -> [B,S,d].  state (decode): {"h":[B,H,D,N], "conv":[B,K-1,C]}"""
+    d, di, nh, hd, ns = dims(cfg)
+    B, S, _ = x.shape
+    xin = L.rms_norm(x, p["ln"])
+    z = xin @ p["w_z"]
+    xbc = xin @ p["w_xbc"]
+    dtp = xin @ p["w_dt"]
+    conv_out, _ = _causal_conv(xbc, p["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    xs = conv_out[..., :di].reshape(B, S, nh, hd)
+    Bm = conv_out[..., di:di + ns]
+    Cm = conv_out[..., di + ns:]
+    dtv = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+    y, _ = _ssd_chunked(xs, dtv, A, Bm, Cm, cfg.ssm.chunk)
+    y = y + xs * p["d_skip"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(B, S, di) * jax.nn.silu(z)
+    # NOTE (§Perf pair B iteration 3, REFUTED): an optimization_barrier here
+    # (hypothesis: XLA hoists the next norm's f32 upcast past the SPMD
+    # all-reduce) left all three roofline terms exactly unchanged — the f32
+    # residual all-reduce is intrinsic to how SPMD places this block, not a
+    # convert-hoisting artifact.  Reverted.
+    return x + y @ p["w_out"]
+
+
+def mamba_decode(p, cfg, x, state):
+    """Single-token step.  x: [B,1,d]."""
+    d, di, nh, hd, ns = dims(cfg)
+    B = x.shape[0]
+    xin = L.rms_norm(x, p["ln"])[:, 0]
+    z = xin @ p["w_z"]
+    xbc = xin @ p["w_xbc"]
+    dtp = xin @ p["w_dt"]
+    conv_out, conv_state = _causal_conv(xbc[:, None, :], p["conv"],
+                                        state["conv"])
+    conv_out = jax.nn.silu(conv_out[:, 0])
+    xs = conv_out[..., :di].reshape(B, nh, hd)
+    Bm = conv_out[..., di:di + ns]
+    Cm = conv_out[..., di + ns:]
+    dtv = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"])   # [B,H]
+    A = -jnp.exp(p["a_log"])
+    dA = jnp.exp(dtv * A)                                            # [B,H]
+    h = state["h"] * dA[:, :, None, None].astype(state["h"].dtype) \
+        + (dtv.astype(xs.dtype))[:, :, None, None] * xs[..., None] * Bm[:, None, None, :]
+    y = jnp.einsum("bhdk,bk->bhd", h, Cm) + xs * p["d_skip"][None, :, None].astype(xs.dtype)
+    y = y.reshape(B, 1, di) * jax.nn.silu(z)[:, None]
+    return x + y @ p["w_out"], {"h": h, "conv": conv_state}
+
+
+def init_mamba_state(batch, cfg):
+    d, di, nh, hd, ns = dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    return {"h": jnp.zeros((batch, nh, hd, ns), dt),
+            "conv": jnp.zeros((batch, cfg.ssm.conv_width - 1, di + 2 * ns), dt)}

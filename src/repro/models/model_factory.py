@@ -1,0 +1,329 @@
+"""Uniform Model interface over all assigned architecture families.
+
+A ``Model`` bundles, for one ``ArchConfig``:
+
+  init(key)                    -> single-replica params
+  loss(params, batch)          -> scalar training loss
+  param_logical()              -> tree of logical-axis tuples (see sharding.py)
+  init_cache(batch, shape)     -> decode cache (concrete); shapes via eval_shape
+  cache_logical()              -> logical axes for the cache
+  prefill_logits(params,batch) -> forward at full length (prefill workloads)
+  decode_step(params,cache,tok)-> (logits, new cache)   (decode workloads)
+  batch_spec(shape, kind)      -> {name: (shape, dtype)} for the data pipeline
+                                  and the dry-run ShapeDtypeStructs
+
+Batch layouts are *global* ``[GB, ...]``; the trainer reshapes to the stacked
+worker layout ``[n, GB/n, ...]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import vlm as VLM
+from repro.models import whisper as WH
+from repro.models import xlstm as XL
+from repro.models import zamba as ZB
+
+PyTree = Any
+
+
+def _train_window(cfg) -> int:
+    return cfg.sliding_window
+
+
+def _decode_window(cfg, shape) -> int:
+    if shape.seq_len > 32_768:
+        return cfg.long_context_window
+    return cfg.sliding_window
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ---------------- init / loss ----------------
+    def init(self, key) -> PyTree:
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe"):
+            return T.init_lm(key, cfg)
+        if cfg.family == "vlm":
+            return VLM.init_vlm(key, cfg)
+        if cfg.family == "audio":
+            return WH.init_whisper(key, cfg)
+        if cfg.family == "ssm":
+            return self._init_xlstm(key)
+        if cfg.family == "hybrid":
+            return self._init_zamba(key)
+        raise ValueError(cfg.family)
+
+    def _init_xlstm(self, key):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        V = T.padded_vocab(cfg)
+        ke, kb, kh = jax.random.split(key, 3)
+        blocks = []
+        bkeys = jax.random.split(kb, cfg.num_layers)
+        for i in range(cfg.num_layers):
+            if self._is_slstm(i):
+                blocks.append({"slstm": XL.init_slstm(bkeys[i], cfg)})
+            else:
+                blocks.append({"mlstm": XL.init_mlstm(bkeys[i], cfg)})
+        return {"embed": L.truncated_normal(ke, (V, cfg.d_model), 0.02, dt),
+                "layers": blocks,
+                "ln_f": jnp.ones((cfg.d_model,), dt),
+                "head": L.dense_init(kh, cfg.d_model, V, dt)}
+
+    def _is_slstm(self, i: int) -> bool:
+        k = self.cfg.ssm.slstm_every if self.cfg.ssm else 0
+        return bool(k) and i % k == 0
+
+    def _init_zamba(self, key):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        V = T.padded_vocab(cfg)
+        ke, kb, kh = jax.random.split(key, 3)
+        return {"embed": L.truncated_normal(ke, (V, cfg.d_model), 0.02, dt),
+                "body": ZB.init_zamba(kb, cfg),
+                "ln_f": jnp.ones((cfg.d_model,), dt),
+                "head": L.dense_init(kh, cfg.d_model, V, dt)}
+
+    # ---------------- logical specs ----------------
+    def param_logical(self) -> PyTree:
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe"):
+            return T.lm_pspecs(cfg)
+        if cfg.family == "vlm":
+            return VLM.vlm_pspecs(cfg)
+        if cfg.family == "audio":
+            return WH.whisper_pspecs(cfg)
+        if cfg.family == "ssm":
+            layers = []
+            for i in range(cfg.num_layers):
+                if self._is_slstm(i):
+                    layers.append({"slstm": XL.slstm_pspecs()})
+                else:
+                    layers.append({"mlstm": XL.mlstm_pspecs()})
+            return {"embed": ("vocab", "embed"), "layers": layers,
+                    "ln_f": (None,), "head": ("embed", "vocab")}
+        if cfg.family == "hybrid":
+            return {"embed": ("vocab", "embed"), "body": ZB.zamba_pspecs(cfg),
+                    "ln_f": (None,), "head": ("embed", "vocab")}
+        raise ValueError(cfg.family)
+
+    # ---------------- training loss ----------------
+    def loss(self, params: PyTree, batch: Dict[str, jax.Array]) -> jax.Array:
+        cfg = self.cfg
+        w = _train_window(cfg)
+        if cfg.family in ("dense", "moe"):
+            return T.lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                             window=w)
+        if cfg.family == "vlm":
+            return VLM.vlm_loss(params, cfg, batch["tokens"], batch["labels"],
+                                batch["patch_embeds"], window=w)
+        if cfg.family == "audio":
+            return WH.whisper_loss(params, cfg, batch["enc_embeds"],
+                                   batch["tokens"], batch["labels"])
+        if cfg.family in ("ssm", "hybrid"):
+            h = self._body_hidden(params, batch["tokens"])
+            logits = (h @ params["head"]).astype(jnp.float32)
+            return T.xent(logits, batch["labels"], cfg.vocab_size)
+        raise ValueError(cfg.family)
+
+    def _body_hidden(self, params, tokens):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        B, S = tokens.shape
+        if cfg.family == "ssm":
+            for i, bp in enumerate(params["layers"]):
+                if self._is_slstm(i):
+                    x = XL.slstm_block(bp["slstm"], cfg, x)
+                else:
+                    fn = XL.mlstm_block
+                    if cfg.remat:
+                        fn = jax.checkpoint(fn, static_argnums=(1,))
+                    x = fn(bp["mlstm"], cfg, x)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+            # shared-attention window: decode truncates its cache to
+            # long_context_window, so prefill/train must window identically
+            # once S exceeds it (also 4x cheaper via the banded path)
+            window = cfg.sliding_window
+            if cfg.long_context_window and S > cfg.long_context_window:
+                window = cfg.long_context_window
+            x = ZB.zamba_hidden(params["body"], cfg, x, positions,
+                                window=window)
+        return L.rms_norm(x, params["ln_f"])
+
+    # ---------------- serving ----------------
+    def prefill_logits(self, params, batch, *, last_only: bool = False
+                       ) -> jax.Array:
+        """Forward at full length.  ``last_only=True`` (the serve_step
+        default) projects ONLY the final position through the LM head —
+        serving semantics (the next-token sampler needs one row), removing
+        the [B, S, V] f32 logits materialisation and its S-times-larger
+        head matmul from every prefill workload (EXPERIMENTS.md §Perf)."""
+        cfg = self.cfg
+        w = _train_window(cfg)
+        if cfg.family in ("dense", "moe"):
+            B, S = batch["tokens"].shape
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+            h, _ = T.hidden_states(params, cfg,
+                                   T.embed_tokens(params, cfg,
+                                                  batch["tokens"]),
+                                   positions, window=w)
+            if last_only:
+                h = h[:, -1:]
+            return T.logits_from_hidden(params, cfg, h)
+        if cfg.family == "vlm":
+            h, _ = VLM.vlm_hidden(params, cfg, batch["tokens"],
+                                  batch["patch_embeds"], window=w)
+            if last_only:
+                h = h[:, -1:]
+            return T.logits_from_hidden(params, cfg, h)
+        if cfg.family == "audio":
+            enc = WH.encode(params, cfg, batch["enc_embeds"])
+            h = WH.decoder_hidden(params, cfg, batch["tokens"], enc)
+            if last_only:
+                h = h[:, -1:]
+            return (h @ params["tok_embed"].T).astype(jnp.float32)
+        if cfg.family in ("ssm", "hybrid"):
+            h = self._body_hidden(params, batch["tokens"])
+            if last_only:
+                h = h[:, -1:]
+            return (h @ params["head"]).astype(jnp.float32)
+        raise ValueError(cfg.family)
+
+    def init_cache(self, batch: int, shape: InputShape) -> PyTree:
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "vlm"):
+            return T.init_cache(cfg, batch, T.cache_len(cfg, shape))
+        if cfg.family == "audio":
+            enc_len = min(shape.seq_len // cfg.encoder_downsample, 8192)
+            return WH.init_whisper_cache(cfg, batch, shape.seq_len, enc_len)
+        if cfg.family == "ssm":
+            states = []
+            for i in range(cfg.num_layers):
+                if self._is_slstm(i):
+                    states.append({"slstm": XL.init_slstm_state(batch, cfg)})
+                else:
+                    states.append({"mlstm": XL.init_mlstm_state(batch, cfg)})
+            return {"layers": states, "pos": jnp.zeros((), jnp.int32)}
+        if cfg.family == "hybrid":
+            attn_len = min(shape.seq_len, cfg.long_context_window)
+            return {"body": ZB.init_zamba_cache(cfg, batch, attn_len),
+                    "pos": jnp.zeros((), jnp.int32)}
+        raise ValueError(cfg.family)
+
+    def cache_logical(self, kv_div: bool = True) -> PyTree:
+        """Logical-axis tree mirroring ``init_cache``'s structure.
+
+        kv_div: whether num_kv_heads divides the model mesh axis — if not,
+        KV caches fall back to head-dim (2-D TP) sharding.
+        """
+        cfg = self.cfg
+        # kv heads divide the model axis: shard heads (matches the 3-D TP
+        # weight layout). Otherwise shard the cache's SEQUENCE dim — the
+        # context-parallel placement _context_parallel_kv constrains the
+        # expanded K/V to, so decode reads the cache in place (head_dim
+        # sharding here used to force partial-sum score all-reduces).
+        kv_spec = (("stack", "global_batch", None, "kv", None) if kv_div
+                   else ("stack", "global_batch", "kv_seq", None, None))
+        attn_cache = {"k": kv_spec, "v": kv_spec}
+        if cfg.family in ("dense", "moe", "vlm"):
+            return {"layers": attn_cache, "pos": ()}
+        if cfg.family == "audio":
+            return {"self": dict(attn_cache), "cross": dict(attn_cache),
+                    "pos": (), "enc_len": ()}
+        if cfg.family == "ssm":
+            layers = []
+            for i in range(cfg.num_layers):
+                if self._is_slstm(i):
+                    v = ("global_batch", "heads", None)
+                    layers.append({"slstm": {"h": v, "c": v, "n": v}})
+                else:
+                    layers.append({"mlstm": {
+                        "C": ("global_batch", "heads", None, None),
+                        "n": ("global_batch", "heads", None)}})
+            return {"layers": layers, "pos": ()}
+        if cfg.family == "hybrid":
+            body = {"mamba": {
+                "h": ("stack", "global_batch", "heads", None, None),
+                "conv": ("stack", "global_batch", None, "ssm_inner")}}
+            if cfg.shared_attn_every:
+                body["attn"] = dict(attn_cache)
+            return {"body": body, "pos": ()}
+        raise ValueError(cfg.family)
+
+    def decode_step(self, params, cache, token) -> Tuple[jax.Array, PyTree]:
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "vlm"):
+            # ring-buffer semantics: if the cache is shorter than the context
+            # (long_500k), it is a sliding window of exactly its own length
+            ring = cache["layers"]["k"].shape[-3]
+            return T.decode_step(params, cfg, cache, token, window=ring)
+        if cfg.family == "audio":
+            return WH.whisper_decode_step(params, cfg, cache, token)
+        if cfg.family == "ssm":
+            x = params["embed"][token]
+            new_states = []
+            for i, (bp, st) in enumerate(zip(params["layers"],
+                                             cache["layers"])):
+                if self._is_slstm(i):
+                    x, ns = XL.slstm_decode(bp["slstm"], cfg, x, st["slstm"])
+                    new_states.append({"slstm": ns})
+                else:
+                    x, ns = XL.mlstm_decode(bp["mlstm"], cfg, x, st["mlstm"])
+                    new_states.append({"mlstm": ns})
+            h = L.rms_norm(x, params["ln_f"])
+            logits = (h @ params["head"]).astype(jnp.float32)
+            return logits, {"layers": new_states, "pos": cache["pos"] + 1}
+        if cfg.family == "hybrid":
+            x = params["embed"][token]
+            attn_len = cache["body"]["attn"]["k"].shape[-3] \
+                if "attn" in cache["body"] else 0
+            x, body = ZB.zamba_decode(params["body"], cfg, x, cache["body"],
+                                      cache["pos"], window=attn_len)
+            h = L.rms_norm(x, params["ln_f"])
+            logits = (h @ params["head"]).astype(jnp.float32)
+            return logits, {"body": body, "pos": cache["pos"] + 1}
+        raise ValueError(cfg.family)
+
+    # ---------------- batch specs ----------------
+    def batch_spec(self, shape: InputShape) -> Dict[str, Tuple[tuple, Any]]:
+        cfg = self.cfg
+        GB, S = shape.global_batch, shape.seq_len
+        dt = jnp.dtype(cfg.dtype)
+        i32 = jnp.int32
+        if shape.kind == "decode":
+            return {"token": ((GB, 1), i32)}
+        if cfg.family == "vlm":
+            s_text = max(S - cfg.vision_tokens, 8)
+            spec = {"tokens": ((GB, s_text), i32),
+                    "patch_embeds": ((GB, cfg.vision_tokens,
+                                      cfg.vision_embed_dim), dt)}
+            if shape.kind == "train":
+                spec["labels"] = ((GB, s_text), i32)
+            return spec
+        if cfg.family == "audio":
+            enc_len = S // cfg.encoder_downsample
+            dec_len = min(cfg.decoder_len_cap, max(S // 8, 16))
+            spec = {"enc_embeds": ((GB, enc_len, cfg.d_model), dt),
+                    "tokens": ((GB, dec_len), i32)}
+            if shape.kind == "train":
+                spec["labels"] = ((GB, dec_len), i32)
+            return spec
+        spec = {"tokens": ((GB, S), i32)}
+        if shape.kind == "train":
+            spec["labels"] = ((GB, S), i32)
+        return spec
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

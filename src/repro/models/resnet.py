@@ -1,0 +1,102 @@
+"""CIFAR ResNet (He et al. 2016) — the paper's own experimental model.
+
+ResNet-{20,110} = 3 stages of n={3,18} basic blocks on 32x32 inputs; used by
+the paper-faithful decentralized-training experiments (Sec. 6, Table 2).
+Pure-jnp conv implementation (lax.conv_general_dilated), batch-norm replaced
+by group norm so per-worker statistics stay local (decentralized workers must
+not share BN stats — same choice the paper's PyTorch DDP-free setup implies).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) \
+        * math.sqrt(2.0 / fan_in)
+
+
+def conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def group_norm(x, scale, bias, groups=8, eps=1e-5):
+    N, H, W, C = x.shape
+    g = min(groups, C)
+    xg = x.reshape(N, H, W, g, C // g)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(N, H, W, C) * scale + bias
+
+
+def init_block(key, cin, cout, stride):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"c1": _conv_init(k1, 3, 3, cin, cout),
+         "g1s": jnp.ones((cout,)), "g1b": jnp.zeros((cout,)),
+         "c2": _conv_init(k2, 3, 3, cout, cout),
+         "g2s": jnp.ones((cout,)), "g2b": jnp.zeros((cout,))}
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv_init(k3, 1, 1, cin, cout)
+    return p
+
+
+def block(p, x, stride):
+    h = conv(x, p["c1"], stride)
+    h = jax.nn.relu(group_norm(h, p["g1s"], p["g1b"]))
+    h = conv(h, p["c2"])
+    h = group_norm(h, p["g2s"], p["g2b"])
+    sc = conv(x, p["proj"], stride) if "proj" in p else x
+    return jax.nn.relu(h + sc)
+
+
+def init_resnet(key, depth=20, num_classes=10, width=16):
+    assert (depth - 2) % 6 == 0, depth
+    n = (depth - 2) // 6
+    keys = jax.random.split(key, 3 * n + 2)
+    p = {"stem": _conv_init(keys[0], 3, 3, 3, width),
+         "stem_s": jnp.ones((width,)), "stem_b": jnp.zeros((width,)),
+         "stages": []}
+    ki = 1
+    cin = width
+    for s, cout in enumerate([width, 2 * width, 4 * width]):
+        stage = []
+        for b in range(n):
+            stride = 2 if (s > 0 and b == 0) else 1
+            stage.append(init_block(keys[ki], cin, cout, stride))
+            cin = cout
+            ki += 1
+        p["stages"].append(stage)
+    p["fc_w"] = jax.random.normal(keys[-1], (cin, num_classes)) / math.sqrt(cin)
+    p["fc_b"] = jnp.zeros((num_classes,))
+    return p
+
+
+def resnet_logits(p, x):
+    """x: [N, 32, 32, 3] -> logits [N, classes]."""
+    h = jax.nn.relu(group_norm(conv(x, p["stem"]), p["stem_s"], p["stem_b"]))
+    for s, stage in enumerate(p["stages"]):
+        for b, bp in enumerate(stage):
+            stride = 2 if (s > 0 and b == 0) else 1
+            h = block(bp, h, stride)
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ p["fc_w"] + p["fc_b"]
+
+
+def resnet_loss(p, batch):
+    logits = resnet_logits(p, batch["images"])
+    labels = batch["labels"]
+    lp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(lp, labels[:, None], axis=1))
+
+
+def resnet_accuracy(p, batch):
+    logits = resnet_logits(p, batch["images"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))

@@ -1,0 +1,136 @@
+"""Logical-axis sharding rules (MaxText-style, reduced to what we need).
+
+Params and activations are annotated with *logical* axis names; a
+``ShardingRules`` table maps logical names to mesh axes per distribution mode:
+
+  decentralized:  leading ``worker`` param axis -> the worker mesh axes
+                  (``data`` single-pod, ``('pod','data')`` multi-pod); tensor-
+                  parallel dims (heads/mlp/vocab/experts) -> ``model``;
+                  embed (residual) dim replicated.
+  hierarchical:   no worker param axis on single-pod (workers = pods);
+                  2-D weight sharding: embed dim -> ``data`` (FSDP),
+                  TP dims -> ``model``; batch -> ``data``.
+
+``logical_to_pspec`` turns a tuple of logical names into a PartitionSpec.
+Unknown / None names are unsharded.  Dims that do not divide their mesh axis
+fall back to replication (checked at use site via ``safe_pspec``).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+MeshAxes = Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mode: str                       # "decentralized" | "hierarchical"
+    multi_pod: bool = False
+
+    @property
+    def worker_axes(self) -> Tuple[str, ...]:
+        """Mesh axes forming the decentralized-worker dimension."""
+        if self.mode == "decentralized":
+            return ("pod", "data") if self.multi_pod else ("data",)
+        # hierarchical: workers are pods (leading replica dim only multi-pod)
+        return ("pod",) if self.multi_pod else ()
+
+    @property
+    def fsdp_axis(self) -> Optional[str]:
+        return "data" if self.mode == "hierarchical" else None
+
+    def table(self) -> dict:
+        fsdp = self.fsdp_axis
+        return {
+            "worker": self.worker_axes or None,
+            # inner (per-worker) batch dim of a stacked training batch
+            "batch": ("data",) if self.mode == "hierarchical" else None,
+            # leading batch dim of an (unstacked) serving workload
+            "global_batch": ("pod", "data") if self.multi_pod else ("data",),
+            "embed": fsdp,           # residual / d_model dim
+            "heads": "model",        # nh * hd flattened or nh
+            "kv": "model",           # kv heads (safe_pspec guards divisibility)
+            "head_dim": "model",     # per-head dim (2-D TP fallback for GQA)
+            "mlp": "model",          # d_ff
+            "vocab": "model",
+            "experts": None,         # expert dim: replicate, shard ff inside
+            "ssm_inner": "model",
+            "seq": None,
+            "kv_seq": "model",       # context-parallel KV (attention fallback)
+            "stack": None,           # layer-stack dim (scanned)
+        }
+
+    def pspec(self, *logical: Optional[str]) -> P:
+        t = self.table()
+        out = []
+        for name in logical:
+            ax = t.get(name) if name else None
+            out.append(ax)
+        return P(*out)
+
+
+def dim_divides(dim: int, mesh_shape: dict, axis) -> bool:
+    if axis is None:
+        return True
+    if isinstance(axis, (tuple, list)):
+        total = 1
+        for a in axis:
+            total *= mesh_shape[a]
+        return dim % total == 0
+    return dim % mesh_shape[axis] == 0
+
+
+def safe_pspec(shape: Sequence[int], spec: P, mesh_shape: dict) -> P:
+    """Replicate any dim whose size does not divide its assigned axes."""
+    out = []
+    for i, ax in enumerate(spec):
+        if i < len(shape) and dim_divides(shape[i], mesh_shape, ax):
+            out.append(ax)
+        else:
+            out.append(None)
+    # spec may be shorter than rank; PartitionSpec pads with None implicitly
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# In-model sharding constraints (activation-level).
+#
+# Model code is mesh-agnostic; where SPMD's propagation picks a bad
+# factorisation (measured: partitioning the *contracted* head_dim of the QK
+# einsum, or fully replicating attention when heads don't divide the model
+# axis), the model calls ``constrain(x, *logical_names)``.  This is a no-op
+# unless a launcher has installed a constraint context (dryrun/train do,
+# smoke tests don't) — requires an ambient mesh (``jax.set_mesh``).
+# ---------------------------------------------------------------------------
+
+_CONSTRAINT_CTX: Optional[Tuple["ShardingRules", dict]] = None
+
+
+@contextlib.contextmanager
+def constraint_context(rules: "ShardingRules", mesh_shape: dict):
+    global _CONSTRAINT_CTX
+    prev = _CONSTRAINT_CTX
+    _CONSTRAINT_CTX = (rules, dict(mesh_shape))
+    try:
+        yield
+    finally:
+        _CONSTRAINT_CTX = prev
+
+
+def mesh_axis_size(name: str, default: int = 1) -> int:
+    if _CONSTRAINT_CTX is None:
+        return default
+    return _CONSTRAINT_CTX[1].get(name, default)
+
+
+def constrain(x, *logical: Optional[str]):
+    if _CONSTRAINT_CTX is None:
+        return x
+    rules, ms = _CONSTRAINT_CTX
+    spec = safe_pspec(x.shape, rules.pspec(*logical), ms)
+    return jax.lax.with_sharding_constraint(x, spec)

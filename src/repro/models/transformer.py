@@ -1,0 +1,215 @@
+"""Decoder-only transformer LM (dense + MoE) with scanned layer stacks.
+
+Layer parameters are stacked along a leading ``stack`` dim and the layer loop
+is a ``lax.scan`` so the lowered HLO stays O(1) in depth — essential for the
+80-layer dry-runs.  ``remat`` wraps the scan body with ``jax.checkpoint``.
+
+Also hosts the generic LM plumbing shared by the VLM/audio wrappers:
+embedding, final norm, (untied) LM head, prefill & cached decode.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as M
+
+
+def padded_vocab(cfg) -> int:
+    return -(-cfg.vocab_size // 256) * 256
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# One decoder block
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    p = {"ln1": jnp.ones((cfg.d_model,), dt),
+         "ln2": jnp.ones((cfg.d_model,), dt),
+         "attn": L.init_attention(ks[0], cfg, dtype=dt)}
+    if cfg.family == "moe":
+        p["moe"] = M.init_moe(ks[1], cfg.d_model, cfg.d_ff, cfg.moe,
+                              cfg.gated_mlp, dt)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp, dt)
+    return p
+
+
+def block_pspecs(cfg):
+    s = {"ln1": (None,), "ln2": (None,),
+         "attn": L.attention_pspecs(cfg)}
+    if cfg.family == "moe":
+        s["moe"] = M.moe_pspecs(cfg.gated_mlp)
+    else:
+        s["mlp"] = L.mlp_pspecs(cfg.gated_mlp)
+    return s
+
+
+def block_apply(p, cfg, x, positions, *, window=0):
+    """Pre-norm block. Returns (x, aux_loss)."""
+    h = L.attention(p["attn"], cfg, L.rms_norm(x, p["ln1"]), positions,
+                    window=window)
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        y, aux = M.moe_layer(p["moe"], L.rms_norm(x, p["ln2"]), cfg.moe,
+                             cfg.gated_mlp)
+    else:
+        y = L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]), cfg.gated_mlp)
+    return x + y, aux
+
+
+def block_decode(p, cfg, x, cache, pos, *, window=0):
+    h, cache = L.attention_decode(p["attn"], cfg, L.rms_norm(x, p["ln1"]),
+                                  cache, pos, window=window)
+    x = x + h
+    if cfg.family == "moe":
+        y, _ = M.moe_layer(p["moe"], L.rms_norm(x, p["ln2"]), cfg.moe,
+                           cfg.gated_mlp)
+    else:
+        y = L.mlp(p["mlp"], L.rms_norm(x, p["ln2"]), cfg.gated_mlp)
+    return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# Full LM
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg):
+    dt = _dtype(cfg)
+    V = padded_vocab(cfg)
+    k_emb, k_blocks, k_head = jax.random.split(key, 3)
+    block_keys = jax.random.split(k_blocks, cfg.num_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(block_keys)
+    p = {
+        "embed": L.truncated_normal(k_emb, (V, cfg.d_model), 0.02, dt),
+        "blocks": blocks,
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = L.dense_init(k_head, cfg.d_model, V, dt)
+    return p
+
+
+def lm_pspecs(cfg):
+    bs = jax.tree.map(lambda lg: ("stack",) + lg, block_pspecs(cfg),
+                      is_leaf=lambda v: isinstance(v, tuple))
+    s = {"embed": ("vocab", "embed"), "blocks": bs, "ln_f": (None,)}
+    if not cfg.tie_embeddings:
+        s["head"] = ("embed", "vocab")
+    return s
+
+
+def run_stack(params_blocks, cfg, x, fn):
+    """Scan ``fn(block_params, carry)`` over the stacked layer dim."""
+    def body(carry, bp):
+        return fn(bp, carry)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    unroll = cfg.num_layers if cfg.unroll_layers else 1
+    return jax.lax.scan(body, x, params_blocks, unroll=unroll)
+
+
+def hidden_states(p, cfg, x, positions, *, window=0):
+    """Run embedded inputs through the stack. x: [B, S, d]."""
+    def fn(bp, carry):
+        h, aux_in = carry
+        h, aux = block_apply(bp, cfg, h, positions, window=window)
+        return (h, aux_in + aux), None
+    (x, aux), _ = run_stack(p["blocks"], cfg, (x, jnp.zeros((), jnp.float32)), fn)
+    return L.rms_norm(x, p["ln_f"]), aux
+
+
+def logits_from_hidden(p, cfg, h):
+    w = p["embed"].T if cfg.tie_embeddings else p["head"]
+    return (h @ w).astype(jnp.float32)
+
+
+def embed_tokens(p, cfg, tokens):
+    return p["embed"][tokens]
+
+
+def lm_logits(p, cfg, tokens, *, window=0):
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    h, aux = hidden_states(p, cfg, embed_tokens(p, cfg, tokens), positions,
+                           window=window)
+    return logits_from_hidden(p, cfg, h), aux
+
+
+def lm_loss(p, cfg, tokens, labels, *, window=0):
+    logits, aux = lm_logits(p, cfg, tokens, window=window)
+    return xent(logits, labels, cfg.vocab_size) + (
+        cfg.moe.aux_loss_weight * aux if cfg.family == "moe" else 0.0)
+
+
+def xent(logits, labels, vocab_size):
+    """Mean token cross-entropy; positions with label < 0 are masked."""
+    V = logits.shape[-1]
+    mask_pad = jnp.arange(V) < vocab_size
+    logits = jnp.where(mask_pad, logits, -1e30)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    valid = labels >= 0
+    lbl = jnp.clip(labels, 0)
+    ll = jnp.take_along_axis(lp, lbl[..., None], axis=-1)[..., 0]
+    return -jnp.sum(jnp.where(valid, ll, 0.0)) / jnp.maximum(jnp.sum(valid), 1)
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg, shape) -> int:
+    """Ring-buffer length for a decode workload."""
+    if cfg.sliding_window or shape.seq_len > 32_768:
+        return min(cfg.long_context_window, shape.seq_len)
+    return shape.seq_len
+
+
+def init_cache(cfg, batch, length):
+    dt = _dtype(cfg)
+    def one(_):
+        return L.init_attn_cache((batch,), cfg, length, dt)
+    caches = jax.vmap(one)(jnp.arange(cfg.num_layers))
+    return {"layers": caches, "pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_pspecs(cfg):
+    return {"layers": {"k": ("stack", "batch", None, "kv", None),
+                       "v": ("stack", "batch", None, "kv", None)},
+            "pos": ()}
+
+
+def decode_step(p, cfg, cache, token, *, window=0):
+    """token: [B, 1] int32 -> (logits [B, 1, V], new cache)."""
+    x = embed_tokens(p, cfg, token)
+    pos = cache["pos"]
+
+    def fn(bp_cache, carry):
+        bp, c = bp_cache
+        h, c = block_decode(bp, cfg, carry, c, pos, window=window)
+        return h, c
+
+    def body(carry, bc):
+        h = carry
+        h, c = fn(bc, h)
+        return h, c
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    unroll = cfg.num_layers if cfg.unroll_layers else 1
+    h, new_layer_caches = jax.lax.scan(body, x, (p["blocks"], cache["layers"]),
+                                       unroll=unroll)
+    h = L.rms_norm(h, p["ln_f"])
+    return logits_from_hidden(p, cfg, h), {"layers": new_layer_caches,
+                                           "pos": pos + 1}

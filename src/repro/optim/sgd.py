@@ -1,0 +1,89 @@
+"""SGD with momentum + weight decay (the paper's optimizer) and LR schedules.
+
+The decentralized algorithms (core/algorithms.py) consume a *direction* ``d``
+and apply ``x <- gossip(x) - alpha d``; this module turns raw gradients into
+that direction (heavy-ball momentum, decoupled weight decay) so the optimizer
+is uniform across all update rules, and tracks the running ``||g||_inf`` used
+by the theory-mode theta schedule (Theorem 2; "first method" of Sec. 6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    momentum: float = 0.9
+    weight_decay: float = 5e-4           # paper Sec. 6 hyper-parameters
+    nesterov: bool = False
+
+
+def init_momentum(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def direction(cfg: SGDConfig, grads: PyTree, params: PyTree,
+              mom: PyTree) -> Tuple[PyTree, PyTree, jax.Array]:
+    """Returns (direction, new momentum, ||g||_inf over the whole tree)."""
+    g_inf = jnp.zeros((), jnp.float32)
+    for g in jax.tree.leaves(grads):
+        g_inf = jnp.maximum(g_inf, jnp.max(jnp.abs(g.astype(jnp.float32))))
+
+    def upd(g, p, m):
+        gf = g.astype(jnp.float32) + cfg.weight_decay * p.astype(jnp.float32)
+        mn = cfg.momentum * m + gf
+        d = (gf + cfg.momentum * mn) if cfg.nesterov else mn
+        return d, mn
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_p = jax.tree.leaves(params)
+    flat_m = jax.tree.leaves(mom)
+    ds, ms = [], []
+    for g, p, m in zip(flat_g, flat_p, flat_m):
+        d, mn = upd(g, p, m)
+        ds.append(d)
+        ms.append(mn)
+    return (jax.tree.unflatten(treedef, ds),
+            jax.tree.unflatten(treedef, ms), g_inf)
+
+
+# ---------------------------------------------------------------------------
+# Step-size schedules.  All satisfy the paper's two-constant condition
+# alpha_k / alpha_{k+t} <= C_alpha eta^t (Theorem 2).
+# ---------------------------------------------------------------------------
+
+def constant(lr: float) -> Callable[[int], float]:
+    return lambda k: lr
+
+
+def step_decay(lr: float, boundaries, factor=0.1) -> Callable[[int], float]:
+    """Paper Sec. 6: decay by 0.1 at given steps (epochs 250/280 there)."""
+    bs = tuple(boundaries)
+
+    def f(k):
+        mult = 1.0
+        for b in bs:
+            mult = jnp.where(k >= b, mult * factor, mult)
+        return lr * mult
+    return f
+
+
+def cosine(lr: float, total_steps: int, floor: float = 0.0):
+    def f(k):
+        t = jnp.clip(k / max(total_steps, 1), 0.0, 1.0)
+        return floor + 0.5 * (lr - floor) * (1.0 + jnp.cos(jnp.pi * t))
+    return f
+
+
+def theorem_lr(K: int, n: int, sigma: float = 1.0, zeta: float = 1.0,
+               L: float = 2.0) -> float:
+    """Corollary 1: alpha = 1 / (zeta^(2/3) K^(1/3) + sigma sqrt(K/n) + 2L)."""
+    import math
+    return 1.0 / (zeta ** (2 / 3) * K ** (1 / 3)
+                  + sigma * math.sqrt(K / n) + 2 * L)

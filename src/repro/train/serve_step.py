@@ -1,0 +1,55 @@
+"""Serving steps (prefill forward + cached single-token decode).
+
+Serving carries no decentralized worker dim — the paper's technique moves
+model state between *training* workers; at inference there is one model,
+sharded TP/2-D over the mesh (DESIGN §4).  Decode workloads lower
+``serve_step``: ONE new token against a KV cache / recurrent state of the
+workload's context length.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape
+from repro.models.model_factory import Model
+from repro.models.sharding import ShardingRules, safe_pspec
+
+PyTree = Any
+
+
+def make_prefill_step(model: Model, *, last_only: bool = True
+                      ) -> Callable[[PyTree, PyTree], jax.Array]:
+    """Prefill forward.  last_only=True returns [B, 1, V] logits for the
+    final position only — what a serving sampler consumes (vLLM semantics);
+    the full [B, S, V] f32 logits tensor is never materialised."""
+    def prefill_step(params, batch):
+        return model.prefill_logits(params, batch, last_only=last_only)
+    return prefill_step
+
+
+def make_serve_step(model: Model) -> Callable[..., Tuple[jax.Array, PyTree]]:
+    def serve_step(params, cache, token):
+        return model.decode_step(params, cache, token)
+    return serve_step
+
+
+def abstract_cache(model: Model, shape: InputShape):
+    return jax.eval_shape(lambda: model.init_cache(shape.global_batch, shape))
+
+
+def cache_pspecs(model: Model, shape: InputShape, rules: ShardingRules,
+                 mesh_shape) -> PyTree:
+    ab = abstract_cache(model, shape)
+    kv_div = model.cfg.num_kv_heads % max(mesh_shape.get("model", 1), 1) == 0
+    logical = model.cache_logical(kv_div=kv_div)
+    ab_leaves, treedef = jax.tree.flatten(ab)
+    log_leaves, _ = jax.tree.flatten(
+        logical, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(ab_leaves) == len(log_leaves), (len(ab_leaves), len(log_leaves))
+    specs = [safe_pspec(l.shape, rules.pspec(*n), mesh_shape)
+             for l, n in zip(ab_leaves, log_leaves)]
+    return jax.tree.unflatten(treedef, specs)

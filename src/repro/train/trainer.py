@@ -1,0 +1,123 @@
+"""Host-side training loop tying pipeline, step function, and checkpoints.
+
+Works at two scales with the same code path:
+  * experiment scale: 1 CPU device, worker dim is a plain array axis;
+  * production scale: mesh provided, state/batch placed with NamedShardings
+    from train_step.state_pspecs / batch_pspecs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.comm import gossip
+from repro.core.algorithms import AlgoHyper, get_algorithm
+from repro.core.moniqua import MoniquaCodec
+from repro.core.topology import get_topology
+from repro.data.pipeline import SyntheticLMPipeline
+from repro.models.model_factory import Model
+from repro.models.sharding import ShardingRules
+from repro.train import train_step as TS
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    algo: str = "moniqua"
+    topology: str = "ring"
+    n_workers: int = 8
+    bits: int = 8
+    theta: float = 2.0
+    gamma: float = 1.0          # Choco/DeepSqueeze consensus step size
+    slack: float = 1.0          # Theorem 3 slack matrix W_bar = s W + (1-s) I
+    lr: float = 0.1
+    momentum: float = 0.9
+    weight_decay: float = 5e-4
+    steps: int = 100
+    log_every: int = 10
+    seed: int = 0
+    checkpoint_path: Optional[str] = None
+    checkpoint_every: int = 0
+
+
+def build_hyper(tc: TrainerConfig) -> AlgoHyper:
+    from repro.core.quantizers import QuantSpec
+    topo = get_topology(tc.topology, tc.n_workers)
+    if tc.slack < 1.0:
+        topo = topo.slack(tc.slack)
+    spec = QuantSpec(bits=tc.bits, stochastic=tc.bits > 1)
+    return AlgoHyper(topo=topo, codec=MoniquaCodec(spec), theta=tc.theta,
+                     gamma=tc.gamma)
+
+
+class Trainer:
+    def __init__(self, model: Model, shape, tc: TrainerConfig,
+                 mesh: Optional[Mesh] = None,
+                 rules: Optional[ShardingRules] = None):
+        self.model, self.tc = model, tc
+        self.hp = build_hyper(tc)
+        self.algo = get_algorithm(tc.algo)
+        from repro.core.theta import ThetaSchedule
+        from repro.optim.sgd import SGDConfig
+        self.tcfg = TS.TrainStepConfig(
+            algo=tc.algo,
+            sgd=SGDConfig(momentum=tc.momentum, weight_decay=tc.weight_decay),
+            lr=tc.lr,
+            theta=ThetaSchedule(mode="constant", value=tc.theta,
+                                n=tc.n_workers, rho=self.hp.topo.rho))
+        self.pipeline = SyntheticLMPipeline(model, shape, tc.n_workers,
+                                            seed=tc.seed)
+        self.step_fn = TS.make_train_step(model, self.hp, self.tcfg)
+        self.mesh = mesh
+        if mesh is not None:
+            assert rules is not None
+            mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+            sp = TS.state_pspecs(model, self.algo, self.hp, rules, mesh_shape,
+                                 tc.n_workers)
+            self._state_sh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), sp)
+            self.jstep = jax.jit(self.step_fn, donate_argnums=(0,))
+        else:
+            self.jstep = jax.jit(self.step_fn, donate_argnums=(0,))
+
+    def init_state(self) -> PyTree:
+        key = jax.random.PRNGKey(self.tc.seed)
+        state = TS.init_state(self.model, self.algo, self.hp,
+                              self.tc.n_workers, key)
+        if self.mesh is not None:
+            state = jax.device_put(state, self._state_sh)
+        return state
+
+    def bytes_per_step(self, state) -> int:
+        return self.algo.bytes_per_step(state["params"], self.hp)
+
+    def run(self, state: Optional[PyTree] = None,
+            callback: Optional[Callable[[int, Dict], None]] = None
+            ) -> Dict[str, Any]:
+        from repro.checkpoint import ckpt
+        tc = self.tc
+        state = state if state is not None else self.init_state()
+        history: List[Dict] = []
+        t0 = time.time()
+        for k in range(tc.steps):
+            batch = self.pipeline.worker_batch(k)
+            state, metrics = self.jstep(state, batch)
+            if k % tc.log_every == 0 or k == tc.steps - 1:
+                m = {kk: float(v) for kk, v in metrics.items()}
+                m["step"] = k
+                m["wall"] = time.time() - t0
+                history.append(m)
+                if callback:
+                    callback(k, m)
+            if (tc.checkpoint_path and tc.checkpoint_every
+                    and (k + 1) % tc.checkpoint_every == 0):
+                ckpt.save(tc.checkpoint_path, state["params"],
+                          {"step": k + 1, "algo": tc.algo})
+        return {"state": state, "history": history,
+                "bytes_per_step": self.bytes_per_step(state)}

@@ -1,0 +1,12 @@
+"""Shared fixtures. Tests run on the single CPU device (no forced host
+devices here — the dry-run subprocess test sets its own XLA_FLAGS)."""
+import jax
+import pytest
+
+# Determinism + float32 default for numeric assertions.
+jax.config.update("jax_default_matmul_precision", "float32")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

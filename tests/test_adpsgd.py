@@ -1,0 +1,73 @@
+"""AD-PSGD simulation (paper Sec. 5 / Theorem 5; DESIGN §2 asynchrony note)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adpsgd import ADPSGDConfig, run
+from repro.core.moniqua import MoniquaCodec
+from repro.core.quantizers import QuantSpec
+from repro.core.topology import ring
+from repro.data.synthetic import quadratic_grad
+
+N, D = 6, 16
+DELTA = 0.2
+OPT = DELTA / 2.0
+
+
+def _grad(x, i, key):
+    return quadratic_grad(x, DELTA, key, sigma=0.05)
+
+
+def _final_err(quantized: bool, iters=1500, alpha=0.05):
+    cfg = ADPSGDConfig(topo=ring(N), codec=MoniquaCodec(QuantSpec(bits=8)),
+                       theta=0.5, max_delay=4, quantized=quantized)
+    x0 = jnp.zeros((N, D))
+    Xf, trace = run(x0, _grad, alpha, iters, cfg, jax.random.PRNGKey(0))
+    assert np.isfinite(np.asarray(Xf)).all()
+    mean_final = np.asarray(trace[-1])
+    return float(np.mean((mean_final - OPT) ** 2)), np.asarray(Xf)
+
+
+def test_adpsgd_converges_under_staleness():
+    err, _ = _final_err(quantized=False)
+    assert err < 1e-2
+
+
+def test_moniqua_adpsgd_matches_full_precision():
+    err_fp, _ = _final_err(quantized=False)
+    err_q, Xf = _final_err(quantized=True)
+    assert err_q < max(3.0 * err_fp, 1e-2)
+    # workers stay near consensus despite pairwise-only quantized gossip
+    spread = np.abs(Xf - Xf.mean(0, keepdims=True)).max()
+    assert spread < 0.25
+
+
+def test_pairwise_gossip_mixing_condition():
+    """Supp. E condition: products of the pairwise W_k mix — for the ring's
+    random-edge pair-averaging chain, ||prod W_k mu - 1/n||_1 <= 1/2 within
+    a finite t_mix, even though each individual W_k has rho = 1."""
+    rng = np.random.RandomState(0)
+    n = 6
+    offsets = [1, n - 1]
+    mu = np.zeros(n)
+    mu[0] = 1.0                       # worst-case point mass
+    P = np.eye(n)
+    t = 0
+    while np.abs(P @ mu - 1.0 / n).sum() > 0.5:
+        i = rng.randint(n)
+        j = (i + offsets[rng.randint(2)]) % n
+        W = np.eye(n)
+        W[i, i] = W[j, j] = 0.5
+        W[i, j] = W[j, i] = 0.5
+        P = W @ P
+        t += 1
+        assert t < 500, "pair-averaging chain failed to mix"
+    # t_mix is finite and modest for n=6
+    assert t < 200
+
+
+def test_theorem5_schedule_positive():
+    from repro.core import theta as TH
+    t_mix = 60
+    assert TH.theta_adpsgd(0.05, 1.0, t_mix) == 16 * t_mix * 0.05
+    assert 0 < TH.delta_adpsgd(t_mix) < 0.5

@@ -1,0 +1,55 @@
+"""Depth-probe calibration math + roofline table merge logic."""
+import json
+
+import pytest
+
+from repro.launch.calibrate import _extrapolate, SCANNED_FAMILIES
+from repro.configs import assigned_archs, get_config
+
+
+def test_extrapolate_linear():
+    # cost(L) = a + b L with probes at L=1,2
+    a, b = 5.0, 3.0
+    c1, c2 = a + b, a + 2 * b
+    for L in (1, 2, 6, 48, 80):
+        assert _extrapolate(c1, c2, L) == pytest.approx(a + b * L)
+
+
+def test_extrapolate_never_negative():
+    assert _extrapolate(10.0, 4.0, 100) == 0.0
+
+
+def test_scanned_family_coverage():
+    fams = {get_config(a).family for a in assigned_archs()}
+    # scan-undercount correction covers exactly the scanned-stack families
+    assert set(SCANNED_FAMILIES) == {"dense", "moe", "vlm", "audio"}
+    assert fams - set(SCANNED_FAMILIES) == {"ssm", "hybrid"}
+
+
+def test_roofline_table_merge(tmp_path):
+    from benchmarks import roofline_table as RT
+    raw = tmp_path / "raw.jsonl"
+    cal = tmp_path / "cal.jsonl"
+    row = {"arch": "a", "shape": "train_4k", "mesh": "16x16", "status": "ok",
+           "roofline": {"compute_s": 1.0, "memory_s": 2.0,
+                        "collective_s": 0.5, "dominant": "memory",
+                        "useful_ratio": 5.0, "mfu_upper_bound": 2.0,
+                        "flops_per_chip": 1, "bytes_per_chip": 1,
+                        "collective_bytes_per_chip": 1},
+           "memory": {"peak_estimate_gb": 3.0},
+           "collectives": {"summary": "none", "counts": {}, "bytes": {}}}
+    raw.write_text(json.dumps(row) + "\n")
+    crow = {"arch": "a", "shape": "train_4k", "mesh": "16x16",
+            "status": "ok",
+            "roofline_calibrated": dict(row["roofline"], compute_s=10.0,
+                                        useful_ratio=0.5,
+                                        mfu_upper_bound=0.1,
+                                        dominant="compute"),
+            "collectives_calibrated": {"counts": {}, "bytes": {}}}
+    cal.write_text(json.dumps(crow) + "\n")
+    rows = RT.load(str(raw), str(cal))
+    assert "roofline_calibrated" in rows[0]
+    table = RT.roofline_rows(rows)
+    assert table[0]["status"] == "ok*"
+    assert table[0]["compute_ms"] == pytest.approx(10_000.0)
+    assert table[0]["useful_ratio"] == 0.5

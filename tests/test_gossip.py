@@ -1,0 +1,90 @@
+"""Gossip layer: circulant mix == dense X W, Moniqua gossip error bound."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import gossip
+from repro.core.moniqua import MoniquaCodec
+from repro.core.quantizers import QuantSpec
+from repro.core.topology import exponential, ring, torus
+
+
+@pytest.mark.parametrize("topo", [ring(8), torus(3, 3), exponential(8)],
+                         ids=lambda t: t.name)
+def test_mix_equals_dense_matmul(topo):
+    """roll-gossip must equal the dense W X product (W symmetric)."""
+    X = jax.random.normal(jax.random.PRNGKey(0), (topo.n, 13))
+    mixed = gossip.mix({"w": X}, topo)["w"]
+    dense = jnp.asarray(topo.matrix, jnp.float32) @ X
+    np.testing.assert_allclose(np.asarray(mixed), np.asarray(dense),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_mix_preserves_mean():
+    """Doubly stochastic W preserves the worker average exactly."""
+    topo = ring(8)
+    X = jax.random.normal(jax.random.PRNGKey(1), (8, 31))
+    mixed = gossip.mix({"w": X}, topo)["w"]
+    np.testing.assert_allclose(np.asarray(mixed.mean(0)),
+                               np.asarray(X.mean(0)), atol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_moniqua_gossip_close_to_exact_mix(bits):
+    """One Moniqua round deviates from full-precision mixing by at most
+    O(delta * B) per coordinate (each of the <= 2 neighbor terms and the self
+    term contributes <= delta*B, weighted)."""
+    topo = ring(8)
+    theta = 1.0
+    spec = QuantSpec(bits=bits, stochastic=True)
+    codec = MoniquaCodec(spec)
+    key = jax.random.PRNGKey(0)
+    base = jax.random.normal(key, (1, 64)) * 10.0
+    X = base + jax.random.uniform(jax.random.PRNGKey(1), (8, 64),
+                                  minval=-0.45, maxval=0.45) * theta
+    out = gossip.moniqua_gossip(X, topo, codec, theta, jax.random.PRNGKey(2))
+    exact = gossip.mix(X, topo)
+    B = float(codec.b_theta(theta))
+    tol = 2.0 * spec.delta * B + 1e-4    # 2 terms of delta*B worst case
+    assert float(jnp.max(jnp.abs(out - exact))) <= tol
+
+
+def test_moniqua_gossip_mean_shift_is_noise_only():
+    """Line-4 bias cancellation: the gossip perturbs the global mean only by
+    the *difference* of reconstruction errors, not their sum."""
+    topo = ring(8)
+    theta = 1.0
+    codec = MoniquaCodec(QuantSpec(bits=8, stochastic=True))
+    X = jax.random.uniform(jax.random.PRNGKey(3), (8, 256),
+                           minval=-0.4, maxval=0.4)
+    out = gossip.moniqua_gossip(X, topo, codec, theta, jax.random.PRNGKey(4))
+    drift = float(jnp.max(jnp.abs(out.mean(0) - X.mean(0))))
+    B = float(codec.b_theta(theta))
+    assert drift <= 2 * codec.delta * B   # individual-error scale, not n x
+
+
+def test_single_worker_gossip_is_identity():
+    topo = ring(1)
+    codec = MoniquaCodec(QuantSpec(bits=8))
+    X = jnp.ones((1, 8))
+    out = gossip.moniqua_gossip(X, topo, codec, 1.0, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(X))
+
+
+def test_payload_accounting():
+    codec = MoniquaCodec(QuantSpec(bits=2))
+    X = {"a": jnp.zeros((4, 10, 100)), "b": jnp.zeros((4, 7))}
+    per_worker = gossip.payload_bytes_tree(X, codec)
+    assert per_worker == 10 * 25 + 2          # ceil(100/4)=25, ceil(7/4)=2
+    assert gossip.dtype_bytes_tree(X) == (10 * 100 + 7) * 4
+
+
+def test_ledger():
+    topo = ring(4)
+    codec = MoniquaCodec(QuantSpec(bits=8))
+    led = gossip.BytesLedger()
+    X = jnp.zeros((4, 16))
+    gossip.moniqua_gossip(X, topo, codec, 1.0, jax.random.PRNGKey(0),
+                          ledger=led)
+    assert led.bytes_per_worker == 16 * 2     # 16 bytes payload x 2 neighbors

@@ -1,0 +1,93 @@
+"""Property tests for the modulo arithmetic (paper Lemma 1 & 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import modulo
+from repro.core.moniqua import MoniquaCodec
+from repro.core.quantizers import QuantSpec
+
+F = st.floats(min_value=-100.0, max_value=100.0,
+              allow_nan=False, allow_infinity=False)
+
+
+@settings(max_examples=200, deadline=None)
+@given(z=F, a=st.floats(min_value=0.01, max_value=50.0))
+def test_cmod_range(z, a):
+    out = float(modulo.cmod(jnp.float32(z), a))
+    assert -a / 2 - 1e-4 * a <= out < a / 2 + 1e-4 * a
+
+
+def test_cmod_half_open_convention():
+    # cmod(a/2) == -a/2 (half-open interval [-a/2, a/2))
+    assert float(modulo.cmod(jnp.float32(1.0), 2.0)) == -1.0
+    assert float(modulo.cmod(jnp.float32(-1.0), 2.0)) == -1.0
+    assert float(modulo.cmod(jnp.float32(0.999), 2.0)) == pytest.approx(0.999)
+
+
+@settings(max_examples=200, deadline=None)
+@given(y=F, d=st.floats(min_value=-0.999, max_value=0.999),
+       theta=st.floats(min_value=0.05, max_value=10.0))
+def test_lemma1_recovery_identity(y, d, theta):
+    """Lemma 1: |x-y| < theta => x == cmod(cmod(x,2θ)-cmod(y,2θ), 2θ) + y."""
+    x = y + d * theta            # guarantees |x - y| < theta
+    a = 2.0 * theta
+    lhs = float(modulo.cmod(
+        modulo.cmod(jnp.float32(x), a) - modulo.cmod(jnp.float32(y), a), a)
+        + jnp.float32(y))
+    assert lhs == pytest.approx(x, abs=1e-3 * max(1.0, abs(x), a))
+
+
+@settings(max_examples=150, deadline=None)
+@given(y=F, d=st.floats(min_value=-0.98, max_value=0.98),
+       theta=st.floats(min_value=0.1, max_value=8.0),
+       bits=st.sampled_from([1, 2, 4, 8]),
+       stochastic=st.booleans(),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_lemma2_error_bound(y, d, theta, bits, stochastic, seed):
+    """Lemma 2: |x_hat - x| <= delta * B given |x - y| < theta, delta < 1/2."""
+    spec = QuantSpec(bits=bits, stochastic=stochastic)
+    if spec.delta >= 0.5:        # stochastic 1-bit: rejected by the theory
+        return
+    codec = MoniquaCodec(spec)
+    x = jnp.full((8,), y + d * theta, jnp.float32)
+    yv = jnp.full((8,), y, jnp.float32)
+    key = jax.random.PRNGKey(seed) if stochastic else None
+    packed = codec.encode(x, theta, key)
+    x_hat = codec.decode(packed, yv, theta)
+    bound = codec.max_error(theta)
+    err = float(jnp.max(jnp.abs(x_hat - x)))
+    # f32 wrap arithmetic: allow a few ulp of slack relative to B
+    B = float(codec.b_theta(theta))
+    assert err <= bound + 1e-4 * B
+
+
+def test_b_theta_rejects_half():
+    with pytest.raises(ValueError):
+        modulo.b_theta(1.0, 0.5)
+
+
+def test_error_bound_formula():
+    # theta * 2 delta / (1 - 2 delta)
+    assert modulo.error_bound(2.0, 0.25) == pytest.approx(2.0)
+    assert modulo.error_bound(1.0, 1.0 / 512.0) == pytest.approx(
+        (2.0 / 512.0) / (1.0 - 2.0 / 512.0))
+
+
+def test_local_bias_cancellation():
+    """Line 4/5 structure: for the sender, decode_self - x == q*B - (x mod B).
+
+    Averaging subtracts x_hat_self so the *difference* of reconstructions is
+    what enters the update — verify decode(self payload against own model)
+    equals decode_self exactly when x is within the principal window.
+    """
+    codec = MoniquaCodec(QuantSpec(bits=8, stochastic=False))
+    theta = 2.0
+    x = jnp.linspace(-0.9, 0.9, 16, dtype=jnp.float32)
+    p = codec.encode(x, theta, None)
+    self_rec = codec.decode_self(p, x, theta)
+    remote_rec = codec.decode(p, x, theta)   # y == x (zero distance)
+    np.testing.assert_allclose(np.asarray(self_rec), np.asarray(remote_rec),
+                               atol=1e-5)

@@ -1,0 +1,113 @@
+"""Quantizer properties: Eq. 2 bound, packing, shared randomness (Supp. C)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantizers import (QuantSpec, bits_for_delta, delta_for_bits,
+                                   dequantize_codes, pack_codes, quantize,
+                                   quantize_codes, unpack_codes)
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+@pytest.mark.parametrize("stochastic", [False, True])
+def test_eq2_bounded_error(bits, stochastic):
+    """||Q(x) - x||_inf <= delta on [-1/2, 1/2] (the paper's Eq. 2)."""
+    spec = QuantSpec(bits=bits, stochastic=stochastic)
+    x = jnp.linspace(-0.5, 0.5, 4097, dtype=jnp.float32)
+    key = jax.random.PRNGKey(3) if stochastic else None
+    q = quantize(x, spec, key)
+    err = float(jnp.max(jnp.abs(q - x)))
+    assert err <= spec.delta + 1e-6
+
+
+def test_delta_for_bits_values():
+    assert delta_for_bits(1, stochastic=False) == pytest.approx(0.25)
+    assert delta_for_bits(1, stochastic=True) == pytest.approx(0.5)
+    assert delta_for_bits(8, stochastic=False) == pytest.approx(1 / 512)
+    # 1-bit nearest satisfies Theorem 3's delta < 1/2 requirement
+    assert delta_for_bits(1, stochastic=False) < 0.5
+
+
+def test_bits_for_delta_roundtrip():
+    # Sec. 4: B <= ceil(log2(1/(2 delta) + 1)) is an UPPER bound (it covers
+    # the endpoint lattice {2 delta n}); our midpoint lattice achieves the
+    # same delta with at most one bit less.
+    for bits in (1, 2, 4, 8):
+        b = bits_for_delta(delta_for_bits(bits, stochastic=False))
+        assert bits <= b <= bits + 1
+    # monotone: finer delta needs more bits
+    assert bits_for_delta(0.25) <= bits_for_delta(0.01)
+
+
+def test_stochastic_unbiased():
+    spec = QuantSpec(bits=2, stochastic=True)
+    x = jnp.full((200_000,), 0.1234, jnp.float32)
+    q = quantize(x, spec, jax.random.PRNGKey(0))
+    assert float(jnp.mean(q) - 0.1234) == pytest.approx(0.0, abs=2e-3)
+
+
+@settings(max_examples=60, deadline=None)
+@given(bits=st.sampled_from([1, 2, 4, 8]),
+       lead=st.integers(min_value=1, max_value=5),
+       last=st.integers(min_value=1, max_value=97))
+def test_pack_unpack_roundtrip(bits, lead, last):
+    rng = np.random.RandomState(bits * 1000 + lead * 100 + last)
+    codes = jnp.asarray(rng.randint(0, 2 ** bits, size=(lead, last)),
+                        dtype=jnp.uint8)
+    packed = pack_codes(codes, bits)
+    assert packed.dtype == jnp.uint8
+    vpb = 8 // bits
+    assert packed.shape[-1] == -(-last // vpb)   # exact wire size
+    out = unpack_codes(packed, bits, last)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+
+
+def test_payload_compression_ratio():
+    """bits/8 bytes per parameter — the bandwidth saving the paper claims."""
+    from repro.core.moniqua import MoniquaCodec
+    shape = (1024, 1024)
+    full = int(np.prod(shape)) * 4       # f32 wire bytes
+    for bits in (1, 2, 4, 8):
+        codec = MoniquaCodec(QuantSpec(bits=bits))
+        assert codec.payload_bytes(shape) == full * bits // 32
+
+
+def test_shared_randomness_reduces_pair_error():
+    """Supp. C: with the same u on both workers,
+    E|(Q(x)-x)-(Q(y)-y)|^2 == E|Q(y-x)-(y-x)|^2  <= sqrt(d) delta E||x-y||,
+    which vanishes as x -> y; with independent u it stays ~2 Var[Q].
+    """
+    spec = QuantSpec(bits=4, stochastic=True, shared_randomness=True)
+    d = 50_000
+    key = jax.random.PRNGKey(0)
+    x = jax.random.uniform(key, (d,), minval=-0.45, maxval=0.45)
+    y = x + 1e-4 * jax.random.normal(jax.random.PRNGKey(1), (d,))  # near consensus
+
+    k_shared = jax.random.PRNGKey(42)
+    qx_s = quantize(x, spec, k_shared)
+    qy_s = quantize(y, spec, k_shared)          # same u
+    qy_i = quantize(y, spec, jax.random.PRNGKey(43))  # independent u
+
+    err_shared = float(jnp.mean(((qx_s - x) - (qy_s - y)) ** 2))
+    err_indep = float(jnp.mean(((qx_s - x) - (qy_i - y)) ** 2))
+    assert err_shared < err_indep / 20.0
+
+    # quantitative Supp. C scale: E r^2 ~ delta * E|y - x| element-wise
+    # (bound is per-element E r_h^2 <= delta |Delta_h|; sampling noise over a
+    # finite mean warrants modest slack)
+    assert err_shared <= spec.delta * float(jnp.mean(jnp.abs(y - x))) * 1.5
+
+
+def test_rounding_key_shared_vs_private():
+    from repro.core.quantizers import rounding_key
+    base = jax.random.PRNGKey(0)
+    shared = QuantSpec(shared_randomness=True)
+    private = QuantSpec(shared_randomness=False)
+    k0 = rounding_key(base, 3, worker=0, spec=shared)
+    k1 = rounding_key(base, 3, worker=1, spec=shared)
+    assert (jax.random.key_data(k0) == jax.random.key_data(k1)).all()
+    p0 = rounding_key(base, 3, worker=0, spec=private)
+    p1 = rounding_key(base, 3, worker=1, spec=private)
+    assert not (jax.random.key_data(p0) == jax.random.key_data(p1)).all()

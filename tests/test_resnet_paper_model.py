@@ -1,0 +1,58 @@
+"""The paper's own experimental model (Sec. 6): CIFAR ResNet under Moniqua."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithms import AlgoHyper, get_algorithm
+from repro.core.moniqua import MoniquaCodec
+from repro.core.quantizers import QuantSpec
+from repro.core.topology import ring
+from repro.data.synthetic import cifar_like
+from repro.models import resnet as R
+
+
+def test_resnet20_shapes_and_param_count():
+    p = R.init_resnet(jax.random.PRNGKey(0), depth=20)
+    n = sum(int(l.size) for l in jax.tree.leaves(p))
+    assert 0.2e6 < n < 0.4e6          # ~0.27M published
+    x = jnp.zeros((4, 32, 32, 3))
+    logits = R.resnet_logits(p, x)
+    assert logits.shape == (4, 10)
+
+
+def test_resnet_moniqua_training_step_decreases_loss():
+    """Paper Sec. 6 setup in miniature: 4 workers, ring, 8-bit Moniqua."""
+    n = 4
+    algo = get_algorithm("moniqua")
+    hp = AlgoHyper(topo=ring(n), codec=MoniquaCodec(QuantSpec(bits=8)),
+                   theta=2.0)
+    p0 = R.init_resnet(jax.random.PRNGKey(0), depth=20, width=8)
+    X = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), p0)
+    extra = algo.init(X, hp)
+
+    batches = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[cifar_like(0, 16, worker=w, seed=1) for w in range(n)])
+
+    @jax.jit
+    def step(X, extra, k, key):
+        losses, grads = jax.vmap(jax.value_and_grad(R.resnet_loss))(X, batches)
+        Xn, en = algo.step(X, extra, grads, 0.1, k, key, hp)
+        return Xn, en, jnp.mean(losses)
+
+    key = jax.random.PRNGKey(2)
+    losses = []
+    for k in range(6):
+        key, kk = jax.random.split(key)
+        X, extra, l = step(X, extra, jnp.asarray(k), kk)
+        losses.append(float(l))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0]
+
+
+def test_resnet_accuracy_learnable_signal():
+    p = R.init_resnet(jax.random.PRNGKey(0), depth=20, width=8)
+    batch = cifar_like(0, 64, seed=0)
+    acc = float(R.resnet_accuracy(p, batch))
+    assert 0.0 <= acc <= 1.0

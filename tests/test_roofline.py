@@ -1,0 +1,68 @@
+"""Roofline extraction: HLO collective parsing + term arithmetic."""
+import pytest
+
+from repro.analysis import roofline as RL
+from repro.configs import get_config
+from repro.configs.base import get_input_shape
+
+HLO = """
+HloModule test
+ENTRY %main {
+  %p0 = f32[16,256]{1,0} parameter(0)
+  %ag = f32[16,4096]{1,0} all-gather(%p0), replica_groups=[16,16]<=[256], dimensions={1}
+  %ar = bf16[1024]{0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(%y), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %cp = u8[1000]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %a2a = f32[32,32]{1,0} all-to-all(%w), replica_groups={{0,1}}, dimensions={0}
+  %ags = f32[8,128]{1,0} all-gather-start(%q), replica_groups=[4,2]<=[8], dimensions={1}
+  %agd = f32[8,128]{1,0} all-gather-done(%ags)
+}
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    st = RL.parse_collectives(HLO)
+    assert st.counts == {"all-gather": 2, "all-reduce": 1,
+                         "reduce-scatter": 1, "collective-permute": 1,
+                         "all-to-all": 1}
+    # all-gather operand = result / group (16,4096)*4/16 ; start variant /2
+    ag = 16 * 4096 * 4 // 16 + 8 * 128 * 4 // 2
+    assert st.bytes_by_op["all-gather"] == ag
+    assert st.bytes_by_op["all-reduce"] == 1024 * 2
+    assert st.bytes_by_op["reduce-scatter"] == 64 * 4 * 8
+    assert st.bytes_by_op["collective-permute"] == 1000    # u8
+    assert st.bytes_by_op["all-to-all"] == 32 * 32 * 4
+    assert st.total_bytes == sum(st.bytes_by_op.values())
+
+
+def test_quantized_payload_visible_to_parser():
+    """A u8 collective-permute is 1/4 the bytes of the f32 one — the paper's
+    bandwidth saving must be measurable at the HLO level."""
+    full = RL.parse_collectives(
+        "%cp = f32[1000]{0} collective-permute(%z), source_target_pairs={{0,1}}")
+    quant = RL.parse_collectives(
+        "%cp = u8[1000]{0} collective-permute(%z), source_target_pairs={{0,1}}")
+    assert full.total_bytes == 4 * quant.total_bytes
+
+
+def test_roofline_terms():
+    r = RL.Roofline(flops=197e12, bytes_accessed=819e9,
+                    collective_bytes=50e9, compute_s=1.0, memory_s=1.0,
+                    collective_s=1.0, model_flops=197e12 * 256, chips=256)
+    assert r.bound_s == 1.0
+    assert r.useful_ratio == pytest.approx(1.0)
+    assert r.mfu_upper_bound == pytest.approx(1.0)
+
+
+def test_model_flops_for():
+    cfg = get_config("llama3.2-3b")
+    n = cfg.param_count()
+    tr = RL.model_flops_for(cfg, get_input_shape("train_4k"))
+    assert tr == pytest.approx(6.0 * n * 256 * 4096)
+    de = RL.model_flops_for(cfg, get_input_shape("decode_32k"))
+    assert de == pytest.approx(2.0 * n * 128)
+    # MoE uses active params only
+    moe = get_config("dbrx-132b")
+    assert (RL.model_flops_for(moe, get_input_shape("train_4k"))
+            == pytest.approx(6.0 * moe.active_param_count() * 256 * 4096))
+    assert moe.active_param_count() < 0.5 * moe.param_count()

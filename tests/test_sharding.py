@@ -1,0 +1,88 @@
+"""Sharding rules and PartitionSpec resolution."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models.model_factory import build_model
+from repro.models.sharding import ShardingRules, dim_divides, safe_pspec
+from repro.train import train_step as TS
+
+MESH_1POD = {"data": 16, "model": 16}
+MESH_2POD = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_worker_axes_by_mode():
+    assert ShardingRules("decentralized").worker_axes == ("data",)
+    assert ShardingRules("decentralized", multi_pod=True).worker_axes \
+        == ("pod", "data")
+    assert ShardingRules("hierarchical").worker_axes == ()
+    assert ShardingRules("hierarchical", multi_pod=True).worker_axes \
+        == ("pod",)
+
+
+def test_safe_pspec_fallback():
+    # 48 kv heads /16 ok; 8 kv heads / 16 -> replicate that dim
+    assert safe_pspec((48, 128), P("model", None), MESH_1POD) \
+        == P("model", None)
+    assert safe_pspec((8, 128), P("model", None), MESH_1POD) == P(None, None)
+    assert dim_divides(32, MESH_2POD, ("pod", "data"))
+    assert not dim_divides(24, MESH_2POD, ("pod", "data"))
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "dbrx-132b", "xlstm-125m",
+                                  "zamba2-1.2b", "whisper-base"])
+def test_params_pspecs_align_with_param_tree(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    rules = ShardingRules(cfg.dist_mode)
+    specs = TS.params_pspecs(model, rules, MESH_1POD, stacked=True)
+    ab = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    s_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    a_leaves = jax.tree.leaves(ab)
+    assert len(s_leaves) == len(a_leaves)
+    for sp, leaf in zip(s_leaves, a_leaves):
+        assert isinstance(sp, P)
+        # stacked: rank is leaf rank + 1 (worker dim), spec never longer
+        assert len(sp) <= leaf.ndim + 1
+
+
+def test_n_workers_for():
+    assert TS.n_workers_for(None, ShardingRules("decentralized"),
+                            MESH_1POD) == 16
+    assert TS.n_workers_for(None, ShardingRules("decentralized", True),
+                            MESH_2POD) == 32
+    assert TS.n_workers_for(None, ShardingRules("hierarchical"),
+                            MESH_1POD) == 1
+    assert TS.n_workers_for(None, ShardingRules("hierarchical", True),
+                            MESH_2POD) == 2
+
+
+def test_hierarchical_fsdp_axis():
+    r = ShardingRules("hierarchical")
+    assert r.fsdp_axis == "data"
+    assert r.pspec("embed", "mlp") == P("data", "model")
+    r2 = ShardingRules("decentralized")
+    assert r2.pspec("embed", "mlp") == P(None, "model")
+
+
+def test_constraint_context_noop_without_launcher():
+    """constrain() is a no-op outside a launcher context (smoke tests run
+    un-meshed); inside a context it resolves logical names to specs."""
+    from repro.models import sharding as SH
+    x = jnp.zeros((4, 8))
+    assert SH.constrain(x, None, "kv_seq") is x       # no context: identity
+    assert SH.mesh_axis_size("model") == 1
+    with SH.constraint_context(ShardingRules("decentralized"), MESH_1POD):
+        assert SH.mesh_axis_size("model") == 16
+        # outside jit, with_sharding_constraint needs a mesh; just verify the
+        # spec resolution path by checking divisibility fallback
+        spec = SH.safe_pspec((4, 8), ShardingRules("decentralized")
+                             .pspec(None, "kv_seq"), MESH_1POD)
+        assert spec == P(None, None)                  # 8 % 16 -> replicate
+    assert SH.mesh_axis_size("model") == 1            # context restored
+
+
+def test_kv_seq_rule():
+    assert ShardingRules("decentralized").pspec("kv_seq") == P("model")

@@ -1,0 +1,79 @@
+"""Theory-prescribed theta/delta/bits (Theorems 2-5, Sec. 4 bits bound)."""
+import numpy as np
+import pytest
+
+from repro.core import theta as TH
+from repro.core.topology import exponential, ring
+
+
+def test_bits_bound_dimension_free_loglog():
+    """Sec. 4: B <= ceil(log2(4 log2(16n)/(1-rho) + 3)), O(log log n)."""
+    rho = 0.5
+    bs = [TH.bits_bound(n, rho) for n in (8, 64, 512, 4096, 2 ** 20)]
+    assert bs == sorted(bs)                       # non-decreasing
+    assert bs[-1] - bs[0] <= 2                    # log log growth: tiny
+    assert TH.bits_bound(8, rho) <= 6             # single-digit bits suffice
+
+
+def test_delta_dpsgd_below_half():
+    for n in (2, 8, 256):
+        for rho in (0.1, 0.9, 0.99):
+            d = TH.delta_dpsgd(n, rho)
+            assert 0.0 < d < 0.5
+
+
+def test_theta_dpsgd_scales_with_alpha_and_ginf():
+    t1 = TH.theta_dpsgd(0.1, 1.0, 8, 0.5)
+    assert TH.theta_dpsgd(0.2, 1.0, 8, 0.5) == pytest.approx(2 * t1)
+    assert TH.theta_dpsgd(0.1, 3.0, 8, 0.5) == pytest.approx(3 * t1)
+
+
+def test_gamma_slack_in_unit_interval():
+    for bits_delta in (0.25, 0.1):
+        g = TH.gamma_slack(bits_delta, n=8, K=10_000, rho=2 / 3)
+        assert 0.0 < g <= 1.0
+    # finer quantizer (smaller delta) allows larger gamma (closer to plain W)
+    assert (TH.gamma_slack(0.01, 8, 10_000, 2 / 3)
+            >= TH.gamma_slack(0.25, 8, 10_000, 2 / 3))
+
+
+def test_d2_constants_and_schedules():
+    # the uniform-1/3 ring has lambda_n = -1/3 exactly (the assumption
+    # boundary); a lazier ring satisfies lambda_n > -1/3
+    topo = ring(8, self_weight=0.5)
+    d1, d2 = TH._d2_constants(topo)
+    assert d1 > 0 and d2 > 0
+    th = TH.theta_d2(0.1, 1.0, topo)
+    assert th == pytest.approx((6 * d1 * 8 + 8) * 0.1 * 1.0)
+    dd = TH.delta_d2(topo)
+    assert 0 < dd < 0.5
+    assert dd == pytest.approx(1.0 / (12 * 8 * d2 + 2))
+
+
+def test_d2_lambda_n_guard():
+    """D^2 requires lambda_n > -1/3; a ring with tiny self-weight violates it."""
+    bad = ring(8, self_weight=0.01)
+    lam_n = np.linalg.eigvalsh(bad.matrix).min()
+    if lam_n <= -1 / 3:
+        with pytest.raises(ValueError):
+            TH._d2_constants(bad)
+    # slack matrix repairs it
+    lazy = bad.slack(0.5)
+    TH._d2_constants(lazy)   # must not raise
+
+
+def test_adpsgd_schedules():
+    t_mix = ring(8).t_mix_bound
+    assert TH.theta_adpsgd(0.1, 2.0, t_mix) == pytest.approx(16 * t_mix * 0.2)
+    d = TH.delta_adpsgd(t_mix)
+    assert 0 < d < 0.5
+
+
+def test_theta_schedule_modes():
+    s = TH.ThetaSchedule(mode="constant", value=2.0)
+    assert s(0.1, 5.0) == 2.0
+    s = TH.ThetaSchedule(mode="theory", n=8, rho=ring(8).rho)
+    assert s(0.1, 1.0) == pytest.approx(
+        TH.theta_dpsgd(0.1, 1.0, 8, ring(8).rho))
+    with pytest.raises(ValueError):
+        TH.ThetaSchedule(mode="bogus")(0.1, 1.0)

@@ -1,0 +1,62 @@
+"""Topology invariants: W symmetric doubly stochastic, spectral gap, slack."""
+import numpy as np
+import pytest
+
+from repro.core.topology import (Topology, exponential, fully_connected,
+                                 get_topology, ring, torus)
+
+ALL = [ring(8), ring(16), ring(2), ring(1), torus(4, 4), exponential(8),
+       exponential(16), exponential(10), fully_connected(6)]
+
+
+@pytest.mark.parametrize("topo", ALL, ids=lambda t: f"{t.name}-{t.n}")
+def test_doubly_stochastic_symmetric(topo):
+    W = topo.matrix
+    np.testing.assert_allclose(W.sum(axis=0), 1.0, atol=1e-9)
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-9)
+    np.testing.assert_allclose(W, W.T, atol=1e-12)
+    assert (W >= -1e-12).all()
+
+
+@pytest.mark.parametrize("topo", [t for t in ALL if t.n > 1],
+                         ids=lambda t: f"{t.name}-{t.n}")
+def test_spectral_gap(topo):
+    """Assumption A2: rho < 1 for connected circulant graphs."""
+    assert 0.0 <= topo.rho < 1.0
+    assert topo.t_mix_bound < np.inf
+
+
+def test_exponential_beats_ring_rho():
+    # exponential graph mixes faster (smaller rho) at the same n
+    assert exponential(16).rho < ring(16).rho
+
+
+def test_slack_matrix():
+    """Theorem 3: W_bar = gamma W + (1-gamma) I stays doubly stochastic and
+    its spectral gap scales as 1 - gamma (1 - rho)."""
+    topo = ring(8)
+    gamma = 0.25
+    s = topo.slack(gamma)
+    np.testing.assert_allclose(s.matrix, gamma * topo.matrix
+                               + (1 - gamma) * np.eye(8), atol=1e-12)
+    assert s.rho == pytest.approx(1.0 - gamma * (1.0 - topo.rho), abs=1e-9)
+
+
+def test_phi_smallest_entry():
+    assert ring(8).phi == pytest.approx(1.0 / 3.0)
+    assert fully_connected(6).phi == pytest.approx(1.0 / 6.0)
+
+
+def test_asymmetric_rejected():
+    with pytest.raises(ValueError):
+        Topology("bad", 4, (0, 1), (0.5, 0.5))   # +1 without -1
+
+
+def test_get_topology_dispatch():
+    assert get_topology("ring", 8).name == "ring"
+    assert get_topology("torus", 16).n == 16
+    assert get_topology("exponential", 8).name == "exponential"
+    with pytest.raises(ValueError):
+        get_topology("nope", 4)
+    with pytest.raises(ValueError):
+        get_topology("torus", 15)
