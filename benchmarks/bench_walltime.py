@@ -5,8 +5,16 @@ each algorithm's measured per-step wire bytes and message count feed an
 analytic network model (bandwidth + latency), plus a local-overhead term for
 replica updates / error tracking.  Reported: seconds per step and the
 projected time to reach the D-PSGD target loss, per network config.
+
+Part 2 sweeps the *wire codec* through ``CommEngine`` — fp32 / Moniqua at
+8/4/1 bits / QSGD-style scale+codes — on the same ResNet20-size payload:
+measured on-device mix time (jitted, CPU) + exact payload bytes + projected
+step time on each network.  This is the codec-swap surface the engine makes
+a one-line change.
 """
 from __future__ import annotations
+
+import time
 
 from benchmarks import common as C
 from repro.configs import get_config
@@ -20,21 +28,17 @@ MSGS = {"allreduce": 6.0, "dpsgd": 2.0, "naive": 2.0, "moniqua": 2.0,
 ALGOS = ["allreduce", "dpsgd", "moniqua", "choco", "deepsqueeze", "dcd",
          "ecd"]
 
+N_WORKERS = 8
+D_PARAMS = 272_474                      # ResNet20 parameter count
 
-def run(quick: bool = False) -> dict:
-    # ResNet20-scale model: 0.27M params (the paper's Fig. 1 workload)
-    import jax.numpy as jnp
-    n = 8
-    d_params = 272_474                      # ResNet20 parameter count
-    X = {"w": jnp.zeros((n, d_params), jnp.float32)}
-    grad_seconds = 0.05                     # P100 fwd+bwd estimate @bs128
 
+def _algorithm_rows(X, grad_seconds: float):
     rows = []
     for algo_name in ALGOS:
         algo = get_algorithm(algo_name)
-        hp = C.default_hyper(bits=8, n=n)
+        hp = C.default_hyper(bits=8, n=N_WORKERS)
         wire = algo.bytes_per_step(X, hp)
-        local = (C.LOCAL_OVERHEAD_COPIES[algo_name] * d_params * 4
+        local = (C.LOCAL_OVERHEAD_COPIES[algo_name] * D_PARAMS * 4
                  / C.HOST_COPY_BW)
         row = {"algorithm": algo_name, "wire_bytes_per_step": wire,
                "extra_local_s": local}
@@ -42,20 +46,66 @@ def run(quick: bool = False) -> dict:
             comm = net.step_comm_seconds(wire, MSGS[algo_name])
             row[f"s/step {net.name}"] = grad_seconds + local + comm
         rows.append(row)
+    return rows
+
+
+def _codec_rows(X, grad_seconds: float, quick: bool):
+    """Sweep wire codecs through CommEngine on the same payload."""
+    import jax
+    import jax.numpy as jnp
+
+    rows = []
+    reps = 2 if quick else 5
+    for label, wire, bits in C.ENGINE_CODECS:
+        eng = C.build_engine(wire, bits, n=N_WORKERS)
+        wire_bytes = eng.bytes_per_round(X)
+        key = jax.random.PRNGKey(0)
+        mix = jax.jit(lambda x, k: eng.mix(x, theta=2.0, key=k))
+        out = mix(X, key)                       # compile + warm up
+        jax.block_until_ready(out)
+        t0 = time.time()
+        for _ in range(reps):
+            jax.block_until_ready(mix(X, key))
+        mix_s = (time.time() - t0) / reps
+        row = {"codec": label, "wire_bytes_per_step": wire_bytes,
+               "mix_ms_measured": mix_s * 1e3,
+               "vs_fp32_bytes": wire_bytes / (D_PARAMS * 4 * 2)}
+        for net in C.NETWORKS:
+            comm = net.step_comm_seconds(wire_bytes, 2.0)
+            row[f"s/step {net.name}"] = grad_seconds + mix_s + comm
+        rows.append(row)
+    return rows
+
+
+def run(quick: bool = False) -> dict:
+    # ResNet20-scale model: 0.27M params (the paper's Fig. 1 workload)
+    import jax.numpy as jnp
+    X = {"w": jnp.zeros((N_WORKERS, D_PARAMS), jnp.float32)}
+    grad_seconds = 0.05                     # P100 fwd+bwd estimate @bs128
+
+    rows = _algorithm_rows(X, grad_seconds)
+    codec_rows = _codec_rows(X, grad_seconds, quick)
 
     # ranking on the slowest network: Moniqua must beat every baseline
     slow = f"s/step {C.NETWORKS[-1].name}"
     fastest = min(rows, key=lambda r: r[slow])
+    fastest_codec = min(codec_rows, key=lambda r: r[slow])
     return {
         "table": rows,
+        "codec_table": codec_rows,
         "fastest_on_slow_net": fastest["algorithm"],
+        "fastest_codec_on_slow_net": fastest_codec["codec"],
         "notes": ("Analytic network model (DESIGN §2 change #2): "
                   "step time = grad + local overhead + bytes/bandwidth + "
                   "messages*latency, ResNet20-size payloads, ring n=8, "
                   "8-bit budget. Reproduces Fig. 1's ordering: quantized "
                   "algorithms split from full precision as bandwidth drops, "
                   "AllReduce degrades worst with latency, and Moniqua leads "
-                  "since it pays no replica/error-tracking overhead."),
+                  "since it pays no replica/error-tracking overhead. "
+                  "codec_table sweeps the CommEngine wire codec (fp32 / "
+                  "Moniqua 8/4/1-bit / QSGD 8/4-bit) with measured jitted "
+                  "mix time on this host; Moniqua 1-bit ships 1/32 of the "
+                  "fp32 bytes with no per-tensor scale overhead."),
     }
 
 

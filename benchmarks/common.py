@@ -124,7 +124,7 @@ def quadratic_run(algo_name: str, hp: AlgoHyper, *, n=8, d=32, steps=800,
 
 
 def default_hyper(bits=8, theta=2.0, n=8, naive_delta=0.2, slack=1.0,
-                  gamma=1.0, stochastic=None):
+                  gamma=1.0, stochastic=None, wire="moniqua", backend="jnp"):
     topo = ring(n)
     if slack < 1.0:
         topo = topo.slack(slack)
@@ -132,7 +132,31 @@ def default_hyper(bits=8, theta=2.0, n=8, naive_delta=0.2, slack=1.0,
     return AlgoHyper(topo=topo,
                      codec=MoniquaCodec(QuantSpec(bits=bits,
                                                   stochastic=stochastic)),
-                     theta=theta, gamma=gamma, naive_delta=naive_delta)
+                     theta=theta, gamma=gamma, naive_delta=naive_delta,
+                     wire=wire, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# CommEngine codec sweep (bench_walltime and friends).
+# ---------------------------------------------------------------------------
+
+# (label, wire, bits): every codec CommEngine can put on the wire, from the
+# fp32 baseline down to the paper's 1-bit headline configuration.
+ENGINE_CODECS = [
+    ("fp32", "full", 32),
+    ("moniqua-8bit", "moniqua", 8),
+    ("moniqua-4bit", "moniqua", 4),
+    ("moniqua-1bit", "moniqua", 1),
+    ("qsgd-8bit", "qsgd", 8),
+    ("qsgd-4bit", "qsgd", 4),
+]
+
+
+def build_engine(wire: str, bits: int, n: int = 8, backend: str = "jnp"):
+    """One-liner CommEngine factory for benchmark sweeps."""
+    from repro.comm.engine import CommEngine, make_wire
+    spec = QuantSpec(bits=min(bits, 8), stochastic=1 < bits <= 8)
+    return CommEngine(ring(n), make_wire(wire, spec), backend)
 
 
 # ---------------------------------------------------------------------------

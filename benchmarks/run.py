@@ -62,12 +62,21 @@ def main(argv=None) -> int:
             result = mod.run(quick=args.quick)
             result["seconds"] = time.time() - t0
             path = C.save_result(name, result)
-            print(C.markdown_table(result.get("table", [])))
+            tables = [("table", result.get("table", []))]
+            tables += [(k, v) for k, v in result.items()
+                       if k != "table" and k.endswith("_table") and v]
+            for tname, rows in tables:
+                if tname != "table":
+                    print(f"-- {tname} --")
+                print(C.markdown_table(rows))
             print(f"notes: {result.get('notes','')}")
             print(f"[{name}] done in {result['seconds']:.1f}s -> {path}\n")
-            report += [f"## {name}", "",
-                       C.markdown_table(result.get("table", [])), "",
-                       result.get("notes", ""), ""]
+            report += [f"## {name}", ""]
+            for tname, rows in tables:
+                if tname != "table":
+                    report += [f"### {tname}", ""]
+                report += [C.markdown_table(rows), ""]
+            report += [result.get("notes", ""), ""]
         except Exception as e:  # noqa: BLE001
             failures += 1
             traceback.print_exc()

@@ -154,9 +154,21 @@ class Roofline:
         return self.model_flops / denom if denom else 0.0
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` across jax versions.
+
+    jax 0.4.x returns a list with one dict per computation; newer jax
+    returns the dict directly.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def roofline_from_compiled(compiled, model_flops: float, chips: int,
                            hw: Dict[str, float] = HW) -> Roofline:
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     flops = float(ca.get("flops", 0.0))
     nbytes = float(ca.get("bytes accessed", 0.0))
     stats = parse_collectives(compiled.as_text())

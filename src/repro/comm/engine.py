@@ -1,0 +1,279 @@
+"""CommEngine: one pluggable communication engine for decentralized SGD.
+
+Every decentralized algorithm in this repo reduces its communication to the
+same primitive — *one gossip round*: encode the local model, circulate the
+payload along the topology (``jnp.roll`` on the stacked worker axis, which is
+one ``collective-permute`` on the production mesh), decode each neighbor
+against the local reference, and accumulate the weighted consensus step
+
+    X_{k+1/2}[i] = x_i + sum_{o != 0} w_o * (xhat_{i+o} - xhat_self)     (*)
+
+``CommEngine`` owns that round end-to-end and exposes the three seams the
+paper's algorithm zoo (and every future scaling PR) plugs into:
+
+* **codec** — what rides on the wire: ``FullPrecisionWire`` (D-PSGD baseline;
+  (*) then collapses to the circulant ``X W``), ``MoniquaWire`` (Algorithm 1's
+  bit-packed modulo residue, no scales, no extra state), or ``QSGDWire``
+  (Alistarh et al. 2017 scale+codes, the obvious external comparison).
+* **topology** — any circulant :class:`~repro.core.topology.Topology`; the
+  weights are static so they compile into the mixing (and into the fused
+  kernel's unrolled reduction).
+* **backend** — ``"jnp"`` lowers everywhere (pure jnp, used by the CPU
+  convergence experiments), ``"pallas"`` uses the fused TPU kernels
+  (``kernels/moniqua_encode.py`` + ``kernels/moniqua_decode_reduce.py``),
+  ``"auto"`` picks Pallas on TPU.  Both Moniqua backends draw stochastic
+  rounding from the same counter-based hash of (seed, element index), so they
+  agree **bit-exactly** in interpret mode — the parity contract
+  ``tests/test_engine.py`` enforces.
+
+Why the fused backend matters: the legacy path
+(``comm/gossip.py::moniqua_gossip``) decodes every neighbor payload into a
+full f32 model copy before reducing — ``m`` extra HBM materializations per
+round.  The fused decode-reduce kernel unpacks all payloads, applies the
+modulo recovery and accumulates the weighted delta in VMEM, writing the mixed
+result once (HBM-traffic model in ``docs/kernels.md``).
+
+Bytes accounting is trace-time bookkeeping: ``mix(..., ledger=...)`` records
+payload-bytes-per-worker into a :class:`~repro.comm.gossip.BytesLedger`, and
+``bytes_per_round`` returns the same number without running anything — the
+input to the analytic network model in ``benchmarks/``.
+
+Known limitation (sharded meshes): the Moniqua backends tile-flatten each
+stacked ``[n, ...]`` leaf (``reshape(-1)`` in ``ops._to_tiles``), which
+crosses the sharded worker axis — XLA may insert resharding around the
+encode/decode on the production mesh beyond the one collective-permute of
+the packed payload.  The fix is per-worker tiling (vmap the tile layout
+over axis 0, which also restores exact Supp.-C shared randomness across
+workers); tracked in ROADMAP.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import gossip
+from repro.comm.gossip import BytesLedger
+from repro.core import modulo
+from repro.core.quantizers import (QuantSpec, packed_last_dim, qsgd_decode,
+                                   qsgd_encode, qsgd_payload_bytes)
+from repro.core.topology import Topology
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+PyTree = Any
+
+WIRES = ("full", "moniqua", "qsgd")
+BACKENDS = ("auto", "jnp", "pallas")
+
+
+def resolve_backend(backend: str) -> str:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# Wire codecs: what one worker broadcasts per round.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FullPrecisionWire:
+    """Identity codec: the raw model rides the wire (D-PSGD / D2 baseline)."""
+    name = "full"
+
+    def payload_bytes(self, shape: Tuple[int, ...], itemsize: int = 4) -> int:
+        return int(np.prod(shape, dtype=np.int64)) * itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class MoniquaWire:
+    """Algorithm 1's packed modulo residue: ``bits/8`` bytes/param, no scales."""
+    spec: QuantSpec = QuantSpec()
+    name = "moniqua"
+
+    def payload_bytes(self, shape: Tuple[int, ...], itemsize: int = 4) -> int:
+        if not shape:
+            return 1
+        inner = int(np.prod(shape[:-1], dtype=np.int64))
+        return inner * packed_last_dim(shape[-1], self.spec.bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class QSGDWire:
+    """Scale+codes codec: packed codes + one f32 max-norm scale per tensor."""
+    spec: QuantSpec = QuantSpec()
+    name = "qsgd"
+
+    def payload_bytes(self, shape: Tuple[int, ...], itemsize: int = 4) -> int:
+        return qsgd_payload_bytes(shape, self.spec.bits)
+
+
+def make_wire(name: str, spec: Optional[QuantSpec] = None):
+    spec = spec or QuantSpec()
+    if name == "full":
+        return FullPrecisionWire()
+    if name == "moniqua":
+        return MoniquaWire(spec)
+    if name == "qsgd":
+        return QSGDWire(spec)
+    raise ValueError(f"unknown wire codec {name!r}; one of {WIRES}")
+
+
+# ---------------------------------------------------------------------------
+# The engine.
+# ---------------------------------------------------------------------------
+
+def _leaf_seed(base_seed: jax.Array, leaf_idx: int) -> jax.Array:
+    """Distinct deterministic hash seed per pytree leaf (both backends)."""
+    return jnp.asarray(base_seed, jnp.uint32) ^ jnp.uint32(
+        (leaf_idx * 0x9E3779B1) & 0xFFFFFFFF)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommEngine:
+    """One gossip round, end-to-end: codec x topology x backend + accounting.
+
+    Static (hashable) configuration only — per-round dynamics (``theta``, the
+    PRNG key, the ledger) are call arguments, so an engine can be constructed
+    freely inside a jitted step function.
+    """
+    topo: Topology
+    codec: Any = dataclasses.field(default_factory=MoniquaWire)
+    backend: str = "auto"
+
+    # -- the tentpole primitive --------------------------------------------
+    def mix(self, X: PyTree, theta=None, key: Optional[jax.Array] = None,
+            ledger: Optional[BytesLedger] = None) -> PyTree:
+        """One gossip round on stacked models (leaves ``[n, ...]``).
+
+        Returns ``X_{k+1/2}``; with the full-precision codec this is exactly
+        the circulant ``X W`` of ``gossip.mix``.  ``ledger`` (if given) is
+        credited at trace time with payload-bytes * n_neighbors per leaf.
+        """
+        offsets = self.topo.neighbor_offsets()
+        if not offsets:                      # single worker: nothing on wire
+            return X
+        if ledger is not None:
+            self._record(X, ledger)
+        if self.codec.name == "full":
+            return gossip.mix(X, self.topo)
+        if theta is None and self.codec.name == "moniqua":
+            raise ValueError("MoniquaWire needs the a-priori bound theta")
+        backend = resolve_backend(self.backend)
+        self._require_key(key)
+        base_seed = kops._key_to_seed(key)
+        leaves, td = jax.tree.flatten(X)
+        out = [self._mix_leaf(l, theta, _leaf_seed(base_seed, i), backend)
+               for i, l in enumerate(leaves)]
+        return jax.tree.unflatten(td, out)
+
+    def _mix_leaf(self, x: jax.Array, theta, seed: jax.Array,
+                  backend: str) -> jax.Array:
+        offsets = self.topo.neighbor_offsets()
+        weights = self._neighbor_weights()
+        if self.codec.name == "moniqua":
+            spec = self.codec.spec
+            B = modulo.b_theta(theta, spec.delta)
+            if backend == "pallas":
+                packed = kops.moniqua_encode(x, B, spec, None, seed=seed)
+                p_nbrs = jnp.stack([gossip._roll(packed, o) for o in offsets])
+                return kops.moniqua_decode_reduce(packed, p_nbrs, x, B,
+                                                  weights, spec)
+            packed = kops.moniqua_encode_jnp(x, B, spec, seed)
+            p_nbrs = jnp.stack([gossip._roll(packed, o) for o in offsets])
+            return kops.moniqua_decode_reduce_jnp(packed, p_nbrs, x, B,
+                                                  weights, spec)
+        # qsgd: reference-free decode; each worker ships (codes, own scale)
+        spec = self.codec.spec
+        packed, scale = qsgd_encode(x, spec, seed)
+        xq_self = qsgd_decode(packed, scale, spec, x.shape[-1])
+        acc = None
+        for o, w in zip(offsets, weights):
+            xq_j = qsgd_decode(gossip._roll(packed, o),
+                               gossip._roll(scale, o), spec, x.shape[-1])
+            t = (xq_j - xq_self) * w
+            acc = t if acc is None else acc + t
+        return (x.astype(jnp.float32) + acc).astype(x.dtype)
+
+    def _neighbor_weights(self) -> Tuple[float, ...]:
+        return tuple(w for o, w in zip(self.topo.offsets, self.topo.weights)
+                     if o % self.topo.n != 0)
+
+    def _require_key(self, key) -> None:
+        """Stochastic rounding without a key would silently reuse seed 0
+        every round, losing the across-step unbiasedness the convergence
+        argument needs — fail loudly instead (matches the legacy path)."""
+        spec = getattr(self.codec, "spec", None)
+        if key is None and spec is not None and spec.stochastic:
+            raise ValueError(
+                f"{self.codec.name} wire with stochastic rounding needs a "
+                "PRNG key (pass key=, or use a nearest-rounding QuantSpec)")
+
+    # -- AD-PSGD's primitive: one edge exchange ----------------------------
+    def pair_average(self, xi: jax.Array, xj: jax.Array, theta=None,
+                     key: Optional[jax.Array] = None
+                     ) -> Tuple[jax.Array, jax.Array]:
+        """One gossip on edge (i, j) with the pair-averaging ``W_k``.
+
+        Quantized codecs exchange payloads and decode against each endpoint's
+        own model (Algorithm 3 lines 4-7); both endpoints encode under the
+        same seed (shared randomness).  Simulator-scale API: always pure-jnp
+        (AD-PSGD runs under ``lax.scan`` on host devices).
+        """
+        if self.codec.name == "full":
+            avg = 0.5 * (xi + xj)
+            return avg, avg
+        self._require_key(key)
+        seed = kops._key_to_seed(key)
+        if self.codec.name == "moniqua":
+            spec = self.codec.spec
+            B = modulo.b_theta(theta, spec.delta)
+            pi = kops.moniqua_encode_jnp(xi, B, spec, seed)
+            pj = kops.moniqua_encode_jnp(xj, B, spec, seed)
+            n_last = xi.shape[-1]
+
+            def val(p):
+                return kref.value_ref(p, B, spec.bits)[..., :n_last]
+
+            xj_at_i = modulo.recover(val(pj), xi, B)
+            xi_at_j = modulo.recover(val(pi), xj, B)
+            xi_self = modulo.local_bias(val(pi), xi, B)
+            xj_self = modulo.local_bias(val(pj), xj, B)
+            return (xi + 0.5 * (xj_at_i - xi_self),
+                    xj + 0.5 * (xi_at_j - xj_self))
+        spec = self.codec.spec
+        pi, si = qsgd_encode(xi, spec, seed, worker_axis=False)
+        pj, sj = qsgd_encode(xj, spec, seed, worker_axis=False)
+        qi = qsgd_decode(pi, si, spec, xi.shape[-1])
+        qj = qsgd_decode(pj, sj, spec, xj.shape[-1])
+        return xi + 0.5 * (qj - qi), xj + 0.5 * (qi - qj)
+
+    # -- gossip building blocks shared by the algorithm zoo ----------------
+    def neighbor_sum(self, X: PyTree, transform) -> PyTree:
+        """``sum_{o != 0} w_o * transform(roll(X, -o), o)`` leaf-wise."""
+        return gossip.neighbor_sum(X, self.topo, transform)
+
+    def self_weight(self) -> float:
+        return gossip.self_weight(self.topo)
+
+    # -- accounting --------------------------------------------------------
+    def bytes_per_round(self, X: PyTree) -> int:
+        """Payload bytes *sent* per worker per gossip round (all leaves)."""
+        m = len(self.topo.neighbor_offsets())
+        total = 0
+        for leaf in jax.tree.leaves(X):
+            total += self.codec.payload_bytes(leaf.shape[1:],
+                                              leaf.dtype.itemsize)
+        return total * m
+
+    def _record(self, X: PyTree, ledger: BytesLedger) -> None:
+        m = len(self.topo.neighbor_offsets())
+        for leaf in jax.tree.leaves(X):
+            ledger.add(self.codec.payload_bytes(leaf.shape[1:],
+                                                leaf.dtype.itemsize), m)

@@ -15,6 +15,12 @@ Weighted circulant mixing implements ``X W`` for circulant ``W``:
 ``gossip_*`` functions operate leaf-wise over pytrees and return a
 ``BytesLedger`` recording bytes-on-wire per step per worker (used by the
 wall-clock network model in benchmarks/).
+
+Layering: this module is the roll-gossip *primitive* layer.  Algorithms
+route their rounds through ``repro.comm.engine.CommEngine`` (codec x
+topology x backend orchestration); ``moniqua_gossip`` below is the legacy
+unfused reference round — it materialises one f32 model copy per neighbor,
+which the engine's fused decode-reduce path avoids (docs/kernels.md).
 """
 from __future__ import annotations
 

@@ -26,6 +26,7 @@ from typing import Callable, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.comm.engine import CommEngine, FullPrecisionWire, make_wire
 from repro.core.moniqua import MoniquaCodec
 from repro.core.topology import Topology
 
@@ -37,31 +38,25 @@ class ADPSGDConfig:
     theta: float = 2.0
     max_delay: int = 4
     quantized: bool = False     # False = plain AD-PSGD, True = Moniqua
+    wire: str = "moniqua"       # wire codec when quantized (moniqua | qsgd)
+
+    def engine(self) -> CommEngine:
+        """Pair-exchange engine: the quantized wire or the exact baseline."""
+        codec = (make_wire(self.wire, self.codec.spec) if self.quantized
+                 else FullPrecisionWire())
+        return CommEngine(self.topo, codec, backend="jnp")
 
 
 def _pair_average(X: jax.Array, i: jax.Array, j: jax.Array,
                   cfg: ADPSGDConfig, key: jax.Array) -> jax.Array:
     """One gossip on edge (i, j):  x_i, x_j <- (x_i + x_j)/2 (pair W_k).
 
-    In the quantized variant each endpoint receives the packed modulo residue
-    of the other and decodes against its own model.
+    In the quantized variant each endpoint receives the packed payload of the
+    other and decodes against its own model (CommEngine.pair_average,
+    Algorithm 3 lines 4-7; shared randomness via one key for both encodes).
     """
-    xi, xj = X[i], X[j]
-    if not cfg.quantized:
-        avg = 0.5 * (xi + xj)
-        X = X.at[i].set(avg)
-        X = X.at[j].set(avg)
-        return X
-    codec, theta = cfg.codec, cfg.theta
-    # shared randomness: one key for both encodes
-    pi = codec.encode(xi, theta, key)
-    pj = codec.encode(xj, theta, key)
-    xj_at_i = codec.decode(pj, xi, theta)       # i's view of j
-    xi_at_j = codec.decode(pi, xj, theta)       # j's view of i
-    xi_self = codec.decode_self(pi, xi, theta)  # bias cancellation (line 4)
-    xj_self = codec.decode_self(pj, xj, theta)
-    new_i = xi + 0.5 * (xj_at_i - xi_self)
-    new_j = xj + 0.5 * (xi_at_j - xj_self)
+    new_i, new_j = cfg.engine().pair_average(X[i], X[j], theta=cfg.theta,
+                                             key=key)
     X = X.at[i].set(new_i)
     X = X.at[j].set(new_j)
     return X

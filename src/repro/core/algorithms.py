@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm import gossip
+from repro.comm.engine import CommEngine, FullPrecisionWire, make_wire
 from repro.core.moniqua import MoniquaCodec
 from repro.core.quantizers import QuantSpec
 from repro.core.topology import Topology
@@ -44,12 +44,28 @@ PyTree = Any
 
 @dataclasses.dataclass(frozen=True)
 class AlgoHyper:
-    """Static hyper-parameters shared by the update rules."""
+    """Static hyper-parameters shared by the update rules.
+
+    All communication routes through :class:`~repro.comm.engine.CommEngine`:
+    ``engine()`` builds the configured wire codec (``wire`` x ``codec.spec``
+    x ``backend``) for the quantized-gossip algorithms, ``exact_engine()``
+    the full-precision engine the baselines (and replica mixing) use.
+    Swapping codec, topology, or backend is a one-field change here.
+    """
     topo: Topology
     codec: MoniquaCodec = MoniquaCodec()
     theta: float = 2.0            # Moniqua a-priori bound (paper used 2.0)
     gamma: float = 1.0            # consensus step size (Choco/DeepSqueeze/Thm 3 slack)
     naive_delta: float = 0.05     # absolute lattice pitch for the naive baseline
+    wire: str = "moniqua"         # wire codec for quantized gossip (engine())
+    backend: str = "auto"         # comm backend: jnp | pallas | auto
+
+    def engine(self) -> CommEngine:
+        return CommEngine(self.topo, make_wire(self.wire, self.codec.spec),
+                          self.backend)
+
+    def exact_engine(self) -> CommEngine:
+        return CommEngine(self.topo, FullPrecisionWire(), self.backend)
 
 
 # ---------------------------------------------------------------------------
@@ -161,10 +177,10 @@ class DPSGD(Algorithm):
     name = "dpsgd"
 
     def step(self, X, extra, g, alpha, k, key, hp):
-        return _sgd(gossip.mix(X, hp.topo), g, alpha), extra
+        return _sgd(hp.exact_engine().mix(X), g, alpha), extra
 
     def bytes_per_step(self, X, hp):
-        return self._model_bytes(X) * len(hp.topo.neighbor_offsets())
+        return hp.exact_engine().bytes_per_round(X)
 
 
 class NaiveQuant(Algorithm):
@@ -183,10 +199,10 @@ class NaiveQuant(Algorithm):
         leaves, td = jax.tree.flatten(X)
         keys = [None] * len(leaves) if key is None else list(jax.random.split(key, len(leaves)))
         Q = jax.tree.unflatten(td, [q(l, kk) for l, kk in zip(leaves, keys)])
-        sw = gossip.self_weight(hp.topo)
+        eng = hp.exact_engine()
         mixed = jax.tree.map(
-            lambda x, nb: x * sw + nb,
-            X, gossip.neighbor_sum(Q, hp.topo, lambda v, o: v))
+            lambda x, nb: x * eng.self_weight() + nb,
+            X, eng.neighbor_sum(Q, lambda v, o: v))
         return _sgd(mixed, g, alpha), extra
 
     def bytes_per_step(self, X, hp):
@@ -195,17 +211,16 @@ class NaiveQuant(Algorithm):
 
 
 class Moniqua(Algorithm):
-    """Algorithm 1."""
+    """Algorithm 1 (gossip through the engine's configured wire codec)."""
     name = "moniqua"
     quantized = True
 
     def step(self, X, extra, g, alpha, k, key, hp):
-        Xm = gossip.moniqua_gossip(X, hp.topo, hp.codec, hp.theta, key)
+        Xm = hp.engine().mix(X, theta=hp.theta, key=key)
         return _sgd(Xm, g, alpha), extra
 
     def bytes_per_step(self, X, hp):
-        return (gossip.payload_bytes_tree(X, hp.codec)
-                * len(hp.topo.neighbor_offsets()))
+        return hp.engine().bytes_per_round(X)
 
 
 class ChocoSGD(Algorithm):
@@ -222,7 +237,7 @@ class ChocoSGD(Algorithm):
         q = _nq_tree(jax.tree.map(lambda a, b: a - b, Xh, x_hat),
                      hp.codec.spec.bits, key)
         x_hat = jax.tree.map(lambda a, b: a + b, x_hat, q)
-        mixed_hat = gossip.mix(x_hat, hp.topo)
+        mixed_hat = hp.exact_engine().mix(x_hat)
         Xn = jax.tree.map(
             lambda x, mh, h: (x + hp.gamma * (mh - h)).astype(x.dtype),
             Xh, mixed_hat, x_hat)
@@ -251,7 +266,7 @@ class DeepSqueeze(Algorithm):
         v = jax.tree.map(lambda a, b: a + b, Xh, e)
         c = _nq_tree(v, hp.codec.spec.bits, key)
         e = jax.tree.map(lambda a, b: a - b, v, c)
-        mixed_c = gossip.mix(c, hp.topo)
+        mixed_c = hp.exact_engine().mix(c)
         Xn = jax.tree.map(
             lambda x, mc, ci: (x + hp.gamma * (mc - ci)).astype(x.dtype),
             Xh, mixed_c, c)
@@ -277,7 +292,7 @@ class DCD(Algorithm):
 
     def step(self, X, extra, g, alpha, k, key, hp):
         x_hat = extra["x_hat"]
-        mixed_hat = gossip.mix(x_hat, hp.topo)
+        mixed_hat = hp.exact_engine().mix(x_hat)
         Xn = _sgd(jax.tree.map(lambda x, mh, h: x + (mh - h), X, mixed_hat, x_hat),
                   g, alpha)
         z = jax.tree.map(lambda a, b: a - b, Xn, x_hat)
@@ -299,7 +314,7 @@ class ECD(DCD):
 
     def step(self, X, extra, g, alpha, k, key, hp):
         x_hat = extra["x_hat"]
-        mixed_hat = gossip.mix(x_hat, hp.topo)
+        mixed_hat = hp.exact_engine().mix(x_hat)
         Xn = _sgd(jax.tree.map(lambda x, mh, h: x + (mh - h), X, mixed_hat, x_hat),
                   g, alpha)
         z = jax.tree.map(lambda a, b: 2.0 * a - b, Xn, x_hat)  # extrapolation
@@ -327,13 +342,14 @@ class D2(Algorithm):
 
     def step(self, X, extra, g, alpha, k, key, hp):
         Xh = self._half_step(X, extra, g, alpha)
-        Xn = jax.tree.map(lambda a, x: a.astype(x.dtype), gossip.mix(Xh, hp.topo), X)
+        Xn = jax.tree.map(lambda a, x: a.astype(x.dtype),
+                          hp.exact_engine().mix(Xh), X)
         extra = {"x_prev": jax.tree.map(lambda x: x.astype(jnp.float32), X),
                  "g_prev": g, "alpha_prev": jnp.asarray(alpha, jnp.float32)}
         return Xn, extra
 
     def bytes_per_step(self, X, hp):
-        return self._model_bytes(X) * len(hp.topo.neighbor_offsets())
+        return hp.exact_engine().bytes_per_round(X)
 
     def extra_memory_bytes(self, X, hp):
         return 2 * self._model_bytes(X)  # x_prev + g_prev (inherent to D^2)
@@ -346,15 +362,14 @@ class MoniquaD2(D2):
 
     def step(self, X, extra, g, alpha, k, key, hp):
         Xh = self._half_step(X, extra, g, alpha)
-        Xn = gossip.moniqua_gossip(Xh, hp.topo, hp.codec, hp.theta, key)
+        Xn = hp.engine().mix(Xh, theta=hp.theta, key=key)
         Xn = jax.tree.map(lambda a, x: a.astype(x.dtype), Xn, X)
         extra = {"x_prev": jax.tree.map(lambda x: x.astype(jnp.float32), X),
                  "g_prev": g, "alpha_prev": jnp.asarray(alpha, jnp.float32)}
         return Xn, extra
 
     def bytes_per_step(self, X, hp):
-        return (gossip.payload_bytes_tree(X, hp.codec)
-                * len(hp.topo.neighbor_offsets()))
+        return hp.engine().bytes_per_round(X)
 
 
 ALGORITHMS: Dict[str, Algorithm] = {a.name: a for a in [

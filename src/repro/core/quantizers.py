@@ -168,6 +168,74 @@ def unpack_codes(packed: jax.Array, bits: int, n: int) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# QSGD-style scale + codes codec (Alistarh et al., 2017).
+#
+# Unlike Moniqua, QSGD transmits an explicit per-tensor scale alongside the
+# codes: the sender normalizes by its own max-norm, quantizes the normalized
+# value on the same midpoint lattice, and ships (packed codes, f32 scale).
+# Payload = bits/8 bytes per parameter + 4 bytes per tensor per worker.  It
+# needs no a-priori theta bound but pays the extra scale word and loses the
+# modulo trick's reference-free exactness — the comparison CommEngine exposes.
+# ---------------------------------------------------------------------------
+
+def _counter_uniform(seed: jax.Array, idx: jax.Array) -> jax.Array:
+    """murmur3-finalizer hash of (seed, idx) -> uniform f32 in [0, 1).
+
+    Counter-based so that encode needs no PRNG-state threading and so the
+    same (seed, element) pair draws the same uniform on every worker — the
+    shared-randomness convention the Pallas encode kernel also uses.
+    """
+    h = (idx.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)) ^ seed.astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return (h >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def qsgd_encode(x: jax.Array, spec: QuantSpec,
+                seed: Optional[jax.Array] = None,
+                worker_axis: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Encode ``x`` -> (packed codes, per-worker scale).
+
+    With ``worker_axis`` the leading dim of ``x`` indexes workers and each
+    worker row gets its own max-norm scale (shape ``[n, 1, ..., 1]``);
+    otherwise one scalar scale covers the whole tensor.
+    """
+    xf = x.astype(jnp.float32)
+    red = tuple(range(1, x.ndim)) if (worker_axis and x.ndim > 1) else None
+    scale = jnp.max(jnp.abs(xf), axis=red, keepdims=True) + 1e-12
+    r = xf / (2.0 * scale)                      # in [-1/2, 1/2]
+    lat = _to_lattice(r, spec.levels)
+    if spec.stochastic:
+        if seed is None:
+            raise ValueError("stochastic QSGD rounding needs a seed")
+        idx = jnp.arange(x.size, dtype=jnp.uint32).reshape(x.shape)
+        codes = jnp.floor(lat + _counter_uniform(jnp.asarray(seed, jnp.uint32),
+                                                 idx))
+    else:
+        codes = jnp.floor(lat + 0.5)
+    codes = jnp.clip(codes, 0, spec.levels - 1).astype(jnp.uint8)
+    return pack_codes(codes, spec.bits), scale
+
+
+def qsgd_decode(packed: jax.Array, scale: jax.Array, spec: QuantSpec,
+                last_dim: int) -> jax.Array:
+    """Inverse of :func:`qsgd_encode`: codes -> values in [-scale, scale]."""
+    codes = unpack_codes(packed, spec.bits, last_dim)
+    return _from_lattice(codes, spec.levels) * (2.0 * scale)
+
+
+def qsgd_payload_bytes(x_shape: tuple[int, ...], bits: int) -> int:
+    """Wire bytes for one tensor: packed codes + one f32 scale."""
+    if not x_shape:
+        return 1 + 4
+    inner = int(np.prod(x_shape[:-1], dtype=np.int64))
+    return inner * packed_last_dim(x_shape[-1], bits) + 4
+
+
+# ---------------------------------------------------------------------------
 # Worker-indexed keys for (non-)shared randomness.
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: fused Moniqua decode-reduce (one gossip round's mixing).
+
+Receiver side of Algorithm 1 lines 4-6, fused across *all* neighbors.  Given
+the worker's own packed payload, the stack of its neighbors' packed payloads
+(already circulated by the quantized collective-permute), and the local model
+tile ``y``, produce in one VMEM pass
+
+    out = y + sum_s  w_s * (x_hat_s - x_hat_self)
+
+where (per element, all f32 in VREGs)
+
+    q_s        = dequant(unpack(p_s)) * B
+    x_hat_s    = (q_s - y) mod B + y          (line 5, Lemma 1 recovery)
+    x_hat_self = q_self - (y mod B) + y       (line 4, bias cancellation)
+
+HBM traffic per tile: ``(m+1) * bits/8`` bytes of packed payloads + one read
+of ``y`` + one write of the mixed tile.  The unfused path (see
+``comm/gossip.py::moniqua_gossip``) materialises a *full f32 model copy per
+neighbor* — ``m`` extra HBM writes + reads of ``4`` bytes/elem each — so for
+a ring (m=2) at 1 bit the fused kernel moves ~8/25 of the unfused bytes, and
+the advantage grows with neighbor count (docs/kernels.md derives the model).
+
+The neighbor weights are *compile-time constants* (they come from the static
+``Topology``), so the reduction fully unrolls with no weight operand; only
+``B`` (a function of the traced theta schedule) is a runtime scalar.
+
+Bit-exactness contract: ``decode_reduce_values`` is the single source of the
+per-element math for BOTH the kernel body and the pure-jnp backend
+(``ops.moniqua_decode_reduce_jnp``).  Every *inexact* multiply is routed
+through ``_shield`` — ``where(v == v, v, 0)``, a per-element NaN check no
+optimizer can fold — because LLVM's FMA contraction otherwise fuses the
+multiply with a downstream add/sub *through* HLO ``optimization_barrier``s
+(barriers are dropped before codegen), and does so differently depending on
+the surrounding fusion, leaving the two backends 1 ulp apart.  A select
+between the mul and the add breaks the contractible adjacency at the
+instruction level; a loop-invariant condition would be undone by loop
+unswitching, hence the per-element form.  Exact multiplies (power-of-two
+scalings) need no shield: contracting them is rounding-free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+DEFAULT_BLOCK_COLS = 1024
+
+
+def _shield(v: jax.Array) -> jax.Array:
+    """Identity for finite v that no compiler pass can see through (see above)."""
+    return jnp.where(v == v, v, jnp.zeros_like(v))
+
+
+def unpack_values(p: jax.Array, bits: int, B) -> jax.Array:
+    """packed uint8 array -> dequantized f32 values scaled by B (q * B)."""
+    levels = 2 ** bits
+    vpb = 8 // bits
+    p = p.astype(jnp.uint32)
+    if vpb == 1:
+        codes = p.astype(jnp.float32)
+    else:
+        mask = jnp.uint32(2 ** bits - 1)
+        subs = [((p >> jnp.uint32(s * bits)) & mask) for s in range(vpb)]
+        codes = jnp.stack(subs, axis=-1).reshape(*p.shape[:-1],
+                                                 p.shape[-1] * vpb)
+        codes = codes.astype(jnp.float32)
+    # /levels is a power of two (exact); the *B product is not — shield it
+    return _shield(((codes + 0.5) / levels - 0.5) * B)
+
+
+def decode_reduce_values(qb_self: jax.Array, qb_nbrs, y: jax.Array, B,
+                         weights) -> jax.Array:
+    """Algorithm 1 lines 4-6 on dequantized payload values (shared math)."""
+    y = y.astype(jnp.float32)
+    ymod = y - _shield(B * jnp.floor(y / B + 0.5))      # cmod(y, B)
+    xhat_self = qb_self - ymod + y                      # line 4
+    acc = jnp.zeros_like(y)
+    for qb, w in zip(qb_nbrs, weights):                 # static unroll over m
+        d = qb - y
+        xhat = (d - _shield(B * jnp.floor(d / B + 0.5))) + y    # line 5
+        acc = acc + _shield(jnp.float32(w) * (xhat - xhat_self))
+    return y + acc                                      # line 6
+
+
+def _decode_reduce_kernel(ps_ref, pn_ref, y_ref, b_ref, o_ref, *,
+                          bits: int, weights: tuple):
+    B = b_ref[0]
+    qb_self = unpack_values(ps_ref[...], bits, B)
+    qb_nbrs = [unpack_values(pn_ref[s], bits, B) for s in range(len(weights))]
+    out = decode_reduce_values(qb_self, qb_nbrs, y_ref[...], B, weights)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "weights", "block_rows",
+                                             "block_cols", "interpret"))
+def decode_reduce(p_self: jax.Array, p_nbrs: jax.Array, y2d: jax.Array,
+                  B: jax.Array, *, bits: int, weights: tuple,
+                  block_rows: int = DEFAULT_BLOCK_ROWS,
+                  block_cols: int = DEFAULT_BLOCK_COLS,
+                  interpret: bool = False) -> jax.Array:
+    """Fused mix of ``m = len(weights)`` neighbor payloads into local ``y2d``.
+
+    Shapes: ``p_self (rows, cols*bits/8)``, ``p_nbrs (m, rows, cols*bits/8)``
+    (neighbor s in topology offset order), ``y2d (rows, cols)``.
+    """
+    rows, cols = y2d.shape
+    vpb = 8 // bits
+    m = len(weights)
+    if p_nbrs.shape != (m, rows, cols // vpb):
+        raise ValueError(f"p_nbrs {p_nbrs.shape} != {(m, rows, cols // vpb)}")
+    if cols % block_cols or rows % block_rows:
+        raise ValueError(f"shape {y2d.shape} not tiled by "
+                         f"({block_rows},{block_cols}); pad in ops.py")
+    grid = (rows // block_rows, cols // block_cols)
+    kernel = functools.partial(_decode_reduce_kernel, bits=bits,
+                               weights=tuple(weights))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, block_cols // vpb), lambda i, j: (i, j)),
+            pl.BlockSpec((m, block_rows, block_cols // vpb),
+                         lambda i, j: (0, i, j)),
+            pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), y2d.dtype),
+        interpret=interpret,
+    )(p_self, p_nbrs, y2d, jnp.asarray(B, jnp.float32).reshape(1))

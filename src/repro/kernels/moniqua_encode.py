@@ -25,18 +25,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# the shared counter-based hash: kernel and every jnp path must draw the
+# same uniform per (seed, element) or bit-exactness breaks
+from repro.core.quantizers import _counter_uniform as _hash_uniform
+
 DEFAULT_BLOCK_ROWS = 256
 DEFAULT_BLOCK_COLS = 1024  # multiple of 128 * max vpb (8)
-
-
-def _hash_uniform(seed: jax.Array, idx: jax.Array) -> jax.Array:
-    h = (idx.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)) ^ seed
-    h = h ^ (h >> 16)
-    h = h * jnp.uint32(0x85EBCA6B)
-    h = h ^ (h >> 13)
-    h = h * jnp.uint32(0xC2B2AE35)
-    h = h ^ (h >> 16)
-    return (h >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
 
 
 def _encode_kernel(x_ref, seed_ref, b_ref, o_ref, *, bits: int,

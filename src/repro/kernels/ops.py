@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.core.quantizers import QuantSpec, packed_last_dim
 from repro.kernels import moniqua_decode as _dec
+from repro.kernels import moniqua_decode_reduce as _dr
 from repro.kernels import moniqua_encode as _enc
 from repro.kernels import ref as kref
 
@@ -45,26 +46,50 @@ def _key_to_seed(key: Optional[jax.Array]) -> jax.Array:
     return jax.random.key_data(key).reshape(-1)[-1].astype(jnp.uint32)
 
 
+def _encode_layout(x: jax.Array, vpb: int):
+    """Shared pad-to-tiles prologue for the kernel and pure-jnp encodes."""
+    n_last = x.shape[-1] if x.ndim else 1
+    pad = (-n_last) % vpb
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if pad else x
+    x2d, n = _to_tiles(xp, _enc.DEFAULT_BLOCK_ROWS, _enc.DEFAULT_BLOCK_COLS)
+    return x2d, n, xp.shape[:-1], n_last, pad
+
+
 def moniqua_encode(x: jax.Array, B: jax.Array, spec: QuantSpec,
                    key: Optional[jax.Array], *,
+                   seed: Optional[jax.Array] = None,
                    interpret: Optional[bool] = None) -> jax.Array:
     """Encode any-shape ``x`` -> packed uint8 with last dim ceil(n/vpb).
 
     Kernel-internal layout is a flat row-major tile grid; the public layout
     (matching ``pack_codes``) is recovered by unpack/repack only when the last
     dim is not already byte-aligned — the common aligned case is zero-copy.
+
+    ``seed`` overrides the key-derived hash seed (CommEngine passes seeds
+    directly so its jnp and Pallas backends draw identical uniforms).
     """
     if interpret is None:
         interpret = not _on_tpu()
-    seed = _key_to_seed(key)
+    if seed is None:
+        seed = _key_to_seed(key)
     vpb = spec.values_per_byte
-    n_last = x.shape[-1] if x.ndim else 1
-    pad = (-n_last) % vpb
-    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if pad else x
-    lead_shape = xp.shape[:-1]
-    x2d, n = _to_tiles(xp, _enc.DEFAULT_BLOCK_ROWS, _enc.DEFAULT_BLOCK_COLS)
+    x2d, n, lead_shape, n_last, pad = _encode_layout(x, vpb)
     p = _enc.encode(x2d, B, seed, bits=spec.bits, stochastic=spec.stochastic,
                     interpret=interpret)
+    p = p.reshape(-1)[: n // vpb]
+    return p.reshape(*lead_shape, (n_last + pad) // vpb)
+
+
+def moniqua_encode_jnp(x: jax.Array, B: jax.Array, spec: QuantSpec,
+                       seed: jax.Array) -> jax.Array:
+    """Pure-jnp encode, bit-identical to :func:`moniqua_encode`.
+
+    Uses the same padded tile layout so the counter-based hash draws the same
+    uniform per element as the kernel — the CommEngine jnp backend.
+    """
+    vpb = spec.values_per_byte
+    x2d, n, lead_shape, n_last, pad = _encode_layout(x, vpb)
+    p = kref.encode_ref(x2d, B, spec.bits, spec.stochastic, seed)
     p = p.reshape(-1)[: n // vpb]
     return p.reshape(*lead_shape, (n_last + pad) // vpb)
 
@@ -80,10 +105,7 @@ def _decode_common(packed: jax.Array, y: jax.Array, B, spec: QuantSpec,
     br = _dec.DEFAULT_BLOCK_ROWS
     bc = _dec.DEFAULT_BLOCK_COLS
     y2d, n = _to_tiles(yp, br, bc)
-    pflat = packed.reshape(-1)
-    p_need = y2d.size // vpb
-    pfull = jnp.zeros((p_need,), jnp.uint8).at[: pflat.shape[0]].set(pflat)
-    p2d = pfull.reshape(y2d.shape[0], y2d.shape[1] // vpb)
+    p2d = _p2d(packed, y2d.size // vpb, y2d.shape[0], y2d.shape[1] // vpb)
     out = _dec.decode(p2d, y2d, B, bits=spec.bits, mode=mode,
                       interpret=interpret)
     out = out.reshape(-1)[:n].reshape(yp.shape)
@@ -100,6 +122,65 @@ def moniqua_decode_remote(packed, y, B, spec: QuantSpec, *,
 def moniqua_decode_self(packed, x, B, spec: QuantSpec, *,
                         interpret: Optional[bool] = None):
     return _decode_common(packed, x, B, spec, "self", interpret)
+
+
+# ---------------------------------------------------------------------------
+# Fused decode-reduce: one gossip round's mixing in a single pass.
+# ---------------------------------------------------------------------------
+
+def _p2d(packed: jax.Array, p_need: int, rows: int, pcols: int) -> jax.Array:
+    pflat = packed.reshape(-1)
+    pfull = jnp.zeros((p_need,), jnp.uint8).at[: pflat.shape[0]].set(pflat)
+    return pfull.reshape(rows, pcols)
+
+
+def moniqua_decode_reduce(p_self: jax.Array, p_nbrs: jax.Array, y: jax.Array,
+                          B, weights, spec: QuantSpec, *,
+                          interpret: Optional[bool] = None) -> jax.Array:
+    """Fused gossip mix: ``y + sum_s w_s (xhat_s - xhat_self)`` (kernel path).
+
+    ``p_nbrs`` stacks the neighbors' packed payloads on a new leading axis in
+    topology offset order; ``weights`` are the matching static gossip weights.
+    Handles arbitrary ``y`` shapes via the shared pad/tile layout.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    vpb = spec.values_per_byte
+    n_last = y.shape[-1]
+    pad = (-n_last) % vpb
+    yp = jnp.pad(y, [(0, 0)] * (y.ndim - 1) + [(0, pad)]) if pad else y
+    br, bc = _dr.DEFAULT_BLOCK_ROWS, _dr.DEFAULT_BLOCK_COLS
+    y2d, n = _to_tiles(yp, br, bc)
+    rows, pcols = y2d.shape[0], y2d.shape[1] // vpb
+    p_need = rows * pcols
+    ps2d = _p2d(p_self, p_need, rows, pcols)
+    pn2d = jnp.stack([_p2d(p_nbrs[s], p_need, rows, pcols)
+                      for s in range(p_nbrs.shape[0])])
+    out = _dr.decode_reduce(ps2d, pn2d, y2d, B, bits=spec.bits,
+                            weights=tuple(float(w) for w in weights),
+                            interpret=interpret)
+    out = out.reshape(-1)[:n].reshape(yp.shape)
+    return out[..., :n_last] if pad else out
+
+
+def moniqua_decode_reduce_jnp(p_self: jax.Array, p_nbrs: jax.Array,
+                              y: jax.Array, B, weights,
+                              spec: QuantSpec) -> jax.Array:
+    """Pure-jnp twin of :func:`moniqua_decode_reduce` (bit-exact off-TPU).
+
+    Shares ``decode_reduce_values`` with the kernel body — same per-element
+    f32 op sequence, same accumulation order, same optimization-barrier
+    fences — so the CommEngine parity test asserts exact equality.
+    """
+    Bf = jnp.asarray(B, jnp.float32)
+    n_last = y.shape[-1]
+
+    def val(p):
+        return _dr.unpack_values(p, spec.bits, Bf)[..., :n_last]
+
+    qb_nbrs = [val(p_nbrs[s]) for s in range(p_nbrs.shape[0])]
+    out = _dr.decode_reduce_values(val(p_self), qb_nbrs, y, Bf, weights)
+    return out.astype(y.dtype)
 
 
 # Reference-path conveniences used by MoniquaCodec(use_pallas=True)

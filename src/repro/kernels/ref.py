@@ -16,16 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-
-def hash_uniform(seed: jax.Array, idx: jax.Array) -> jax.Array:
-    """murmur3 finalizer on (seed ^ idx) -> float32 uniform in [0, 1)."""
-    h = (idx.astype(jnp.uint32) * jnp.uint32(0x9E3779B9)) ^ seed.astype(jnp.uint32)
-    h = h ^ (h >> 16)
-    h = h * jnp.uint32(0x85EBCA6B)
-    h = h ^ (h >> 13)
-    h = h * jnp.uint32(0xC2B2AE35)
-    h = h ^ (h >> 16)
-    return (h >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+# one source of truth for the bit-exactness-critical hash (every backend
+# must draw identical uniforms per (seed, element) pair)
+from repro.core.quantizers import _counter_uniform as hash_uniform
 
 
 def cmod(z: jax.Array, a) -> jax.Array:

@@ -38,7 +38,8 @@ from repro.core.moniqua import MoniquaCodec
 from repro.core.quantizers import QuantSpec
 from repro.core.theta import ThetaSchedule
 from repro.core.topology import ring
-from repro.launch.mesh import make_production_mesh, mesh_shape_dict
+from repro.launch.mesh import (make_production_mesh, mesh_context,
+                               mesh_shape_dict)
 from repro.models.model_factory import build_model
 from repro.models.sharding import ShardingRules
 from repro.optim.sgd import SGDConfig
@@ -88,6 +89,7 @@ class DryrunResult:
 
 def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                mesh=None, algo: str = "moniqua", bits: int = 8,
+               wire: str = "moniqua", comm_backend: str = "auto",
                verbose: bool = True, override: Optional[dict] = None
                ) -> DryrunResult:
     cfg = get_config(arch)
@@ -111,10 +113,11 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         n_workers = TS.n_workers_for(cfg, rules, ms)
 
         from repro.models import sharding as SH
-        with jax.set_mesh(mesh), SH.constraint_context(rules, ms):
+        with mesh_context(mesh), SH.constraint_context(rules, ms):
             if shape.kind == "train":
                 lowered = _lower_train(model, shape, mesh, ms, rules,
-                                       n_workers, algo, bits)
+                                       n_workers, algo, bits, wire,
+                                       comm_backend)
             elif shape.kind == "prefill":
                 lowered = _lower_prefill(model, shape, mesh, ms, rules)
             else:
@@ -123,7 +126,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         mem = compiled.memory_analysis()
         print(f"[{arch} x {shape_name} x {mesh_name}] memory_analysis:",
               mem)
-        ca = compiled.cost_analysis()
+        ca = RL.cost_analysis_dict(compiled)
         print(f"[{arch} x {shape_name} x {mesh_name}] cost_analysis: "
               f"flops={ca.get('flops', 0):.3e} "
               f"bytes={ca.get('bytes accessed', 0):.3e}")
@@ -176,15 +179,17 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                             seconds=time.time() - t0, error=f"{e}\n{tb}")
 
 
-def _hyper(cfg, n_workers, algo, bits):
+def _hyper(cfg, n_workers, algo, bits, wire="moniqua", comm_backend="auto"):
     topo = ring(n_workers)
     spec = QuantSpec(bits=bits, stochastic=bits > 1)
-    return AlgoHyper(topo=topo, codec=MoniquaCodec(spec), theta=2.0)
+    return AlgoHyper(topo=topo, codec=MoniquaCodec(spec), theta=2.0,
+                     wire=wire, backend=comm_backend)
 
 
-def _lower_train(model, shape, mesh, ms, rules, n_workers, algo_name, bits):
+def _lower_train(model, shape, mesh, ms, rules, n_workers, algo_name, bits,
+                 wire="moniqua", comm_backend="auto"):
     algo = get_algorithm(algo_name)
-    hp = _hyper(model.cfg, n_workers, algo_name, bits)
+    hp = _hyper(model.cfg, n_workers, algo_name, bits, wire, comm_backend)
     tcfg = TS.TrainStepConfig(algo=algo_name, sgd=SGDConfig(), lr=0.1,
                               theta=ThetaSchedule(mode="constant", value=2.0))
     step = TS.make_train_step(model, hp, tcfg)
@@ -239,6 +244,12 @@ def main(argv=None) -> int:
                     help="run single-pod AND multi-pod")
     ap.add_argument("--algo", default="moniqua")
     ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--wire", default="moniqua",
+                    choices=["moniqua", "qsgd", "full"],
+                    help="CommEngine wire codec for quantized gossip")
+    ap.add_argument("--comm-backend", default="auto",
+                    choices=["auto", "jnp", "pallas"],
+                    help="CommEngine backend")
     ap.add_argument("--out", default=None, help="append JSONL results here")
     args = ap.parse_args(argv)
 
@@ -253,7 +264,9 @@ def main(argv=None) -> int:
         for arch in archs:
             for shape in shapes:
                 res = dryrun_one(arch, shape, multi_pod=mp, mesh=mesh,
-                                 algo=args.algo, bits=args.bits)
+                                 algo=args.algo, bits=args.bits,
+                                 wire=args.wire,
+                                 comm_backend=args.comm_backend)
                 if res.status == "error":
                     failures += 1
                 if args.out:

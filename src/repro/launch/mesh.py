@@ -2,11 +2,40 @@
 
 Functions, not module-level constants: importing this module never touches
 jax device state (required for smoke tests that must see 1 device).
+
+Version compatibility: ``AxisType`` / ``axis_types=`` and the ambient-mesh
+setter ``jax.set_mesh`` only exist in newer jax releases.  ``_make_mesh`` and
+``mesh_context`` paper over both so the same call sites run on the pinned
+jax (0.4.x: ``Mesh`` is its own context manager, meshes are untyped) and on
+current jax (explicit ``AxisType.Auto`` axes, ``jax.set_mesh``).
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: typed mesh axes
+    from jax.sharding import AxisType
+except ImportError:  # pinned jax 0.4.x: untyped meshes only
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_context(mesh):
+    """Ambient-mesh context manager across jax versions.
+
+    Newer jax wants ``jax.set_mesh(mesh)``; on 0.4.x the ``Mesh`` object is
+    itself a context manager with the same scoping semantics.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,17 +46,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 4, model: int = 2, pod: int = 0):
     """Small mesh for subprocess tests (requires forced host devices)."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return _make_mesh((pod, data, model), ("pod", "data", "model"))
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def mesh_shape_dict(mesh) -> dict:

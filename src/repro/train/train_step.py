@@ -4,7 +4,10 @@ Layout: every training-state leaf carries a leading worker dim ``[n, ...]``
 (n = 16 decentralized single-pod, 32 multi-pod; 1/2 hierarchical), sharded
 over the worker mesh axes.  Per-worker gradients are ``vmap(grad(loss))`` —
 XLA keeps them communication-free along the worker axis; the only cross-worker
-traffic is the algorithm's gossip (quantized collective-permutes for Moniqua).
+traffic is the algorithm's gossip, which every algorithm routes through
+``repro.comm.engine.CommEngine`` (quantized collective-permutes for Moniqua;
+``AlgoHyper.wire`` / ``AlgoHyper.backend`` select codec and backend, and the
+per-step wire bytes are reported in the step metrics).
 
 ``state_pspecs`` / ``batch_pspecs`` resolve the logical-axis annotations into
 PartitionSpecs for jit shardings (trainer and launch/dryrun share them).
@@ -167,8 +170,11 @@ def make_train_step(model: Model, hp: AlgoHyper, tcfg: TrainStepConfig
 
         new_state = {"params": X, "mom": mom, "extra": extra,
                      "step": step + 1, "g_inf": g_inf, "key": key}
+        # bytes_per_step is shape-only bookkeeping: a trace-time constant
         metrics = {"loss": jnp.mean(losses), "alpha": alpha,
-                   "theta": jnp.asarray(theta, jnp.float32), "g_inf": g_inf}
+                   "theta": jnp.asarray(theta, jnp.float32), "g_inf": g_inf,
+                   "wire_bytes": jnp.asarray(
+                       algo.bytes_per_step(X, hp), jnp.float32)}
         return new_state, metrics
 
     return train_step

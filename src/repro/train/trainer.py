@@ -44,6 +44,8 @@ class TrainerConfig:
     seed: int = 0
     checkpoint_path: Optional[str] = None
     checkpoint_every: int = 0
+    wire: str = "moniqua"       # CommEngine wire codec (moniqua | qsgd | full)
+    backend: str = "auto"       # CommEngine backend (jnp | pallas | auto)
 
 
 def build_hyper(tc: TrainerConfig) -> AlgoHyper:
@@ -53,7 +55,7 @@ def build_hyper(tc: TrainerConfig) -> AlgoHyper:
         topo = topo.slack(tc.slack)
     spec = QuantSpec(bits=tc.bits, stochastic=tc.bits > 1)
     return AlgoHyper(topo=topo, codec=MoniquaCodec(spec), theta=tc.theta,
-                     gamma=tc.gamma)
+                     gamma=tc.gamma, wire=tc.wire, backend=tc.backend)
 
 
 class Trainer:

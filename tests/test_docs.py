@@ -1,0 +1,34 @@
+"""Docs stay truthful: every repo path/symbol referenced in README.md and
+docs/*.md exists (tools/check_docs.py), and the README quickstart's imports
+resolve."""
+import importlib.util
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", os.path.join(REPO, "tools", "check_docs.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_no_dangling_doc_references():
+    checker = _load_checker()
+    errors = []
+    for md in checker.DOC_FILES:
+        if os.path.exists(os.path.join(REPO, md)):
+            errors.extend(checker.check_file(md))
+    assert not errors, "\n".join(errors)
+
+
+def test_readme_quickstart_runs():
+    """Execute the README's first python code block verbatim."""
+    import re
+    text = open(os.path.join(REPO, "README.md")).read()
+    blocks = re.findall(r"```python\n(.*?)```", text, flags=re.S)
+    assert blocks, "README.md lost its python quickstart block"
+    exec(compile(blocks[0], "README.md:quickstart", "exec"), {})

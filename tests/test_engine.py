@@ -1,0 +1,221 @@
+"""CommEngine: codec/backend parity, fused decode-reduce, bytes accounting.
+
+The three contracts from the engine design (docs/architecture.md):
+
+1. ``CommEngine(full_precision).mix == gossip.mix`` exactly (the engine's
+   full-precision round IS the circulant ``X W``).
+2. ``CommEngine(moniqua, pallas)`` (interpret off-TPU) is **bit-exact** with
+   ``CommEngine(moniqua, jnp)`` — same counter-hash randomness, same fenced
+   per-element math (kernels/moniqua_decode_reduce.py documents why the jnp
+   path is compared as written, i.e. eagerly; under re-jit XLA may legally
+   FMA-contract and drift by 1 ulp, checked separately with a tight bound).
+3. BytesLedger: 1-bit Moniqua payloads are exactly 1/32 of f32 bytes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import gossip
+from repro.comm.engine import (CommEngine, FullPrecisionWire, MoniquaWire,
+                               QSGDWire, make_wire)
+from repro.core import modulo
+from repro.core.quantizers import QuantSpec
+from repro.core.topology import exponential, ring
+
+BITS = [1, 2, 4, 8]
+
+
+def _stacked(scale=0.3, n=8, d=300, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, d)) * scale
+
+
+# ---------------------------------------------------------------------------
+# 1. full-precision parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topo", [ring(8), exponential(8)],
+                         ids=lambda t: t.name)
+def test_full_precision_equals_gossip_mix(topo):
+    X = {"w": _stacked(), "b": _stacked(d=17, seed=1)}
+    eng = CommEngine(topo, FullPrecisionWire())
+    out = eng.mix(X)
+    ref = gossip.mix(X, topo)
+    for k in X:
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(ref[k]))
+
+
+# ---------------------------------------------------------------------------
+# 2. moniqua backend parity (pallas interpret vs pure jnp)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("topo", [ring(8), exponential(8)],
+                         ids=lambda t: t.name)
+def test_moniqua_pallas_vs_jnp_bit_exact(bits, topo):
+    spec = QuantSpec(bits=bits, stochastic=bits > 1)
+    X = _stacked()
+    key = jax.random.PRNGKey(3)
+    a = CommEngine(topo, MoniquaWire(spec), backend="jnp").mix(
+        X, theta=2.0, key=key)
+    b = CommEngine(topo, MoniquaWire(spec), backend="pallas").mix(
+        X, theta=2.0, key=key)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("bits", [1, 4])
+def test_moniqua_parity_on_pytrees(bits):
+    spec = QuantSpec(bits=bits, stochastic=bits > 1)
+    X = {"w": _stacked(), "b": _stacked(d=17, seed=7).reshape(8, 17)}
+    key = jax.random.PRNGKey(1)
+    a = CommEngine(ring(8), MoniquaWire(spec), backend="jnp").mix(
+        X, theta=2.0, key=key)
+    b = CommEngine(ring(8), MoniquaWire(spec), backend="pallas").mix(
+        X, theta=2.0, key=key)
+    for k in X:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+def test_moniqua_parity_under_jit_close():
+    """Re-jitting the jnp path lets XLA contract FMAs: bounded by ~1 ulp."""
+    spec = QuantSpec(bits=4)
+    X = _stacked()
+    key = jax.random.PRNGKey(3)
+    ej = CommEngine(ring(8), MoniquaWire(spec), backend="jnp")
+    b = CommEngine(ring(8), MoniquaWire(spec), backend="pallas").mix(
+        X, theta=2.0, key=key)
+    aj = jax.jit(lambda x, k: ej.mix(x, theta=2.0, key=k))(X, key)
+    np.testing.assert_allclose(np.asarray(aj), np.asarray(b),
+                               rtol=0, atol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_moniqua_engine_close_to_exact_mix(bits):
+    """One engine round deviates from full-precision mixing by O(delta*B).
+
+    Valid only under the a-priori bound |x_i - x_j| < theta, so workers are
+    bounded perturbations of a common base model (as in test_gossip).
+    """
+    topo = ring(8)
+    theta = 1.0
+    spec = QuantSpec(bits=bits, stochastic=True)
+    base = jax.random.normal(jax.random.PRNGKey(0), (1, 300)) * 10.0
+    X = base + jax.random.uniform(jax.random.PRNGKey(1), (8, 300),
+                                  minval=-0.45, maxval=0.45) * theta
+    out = CommEngine(topo, MoniquaWire(spec), backend="jnp").mix(
+        X, theta=theta, key=jax.random.PRNGKey(2))
+    exact = gossip.mix(X, topo)
+    B = float(modulo.b_theta(theta, spec.delta))
+    assert float(jnp.max(jnp.abs(out - exact))) <= 2.0 * spec.delta * B + 1e-4
+
+
+def test_single_worker_is_identity():
+    eng = CommEngine(ring(1), MoniquaWire(QuantSpec(bits=8)))
+    X = jnp.ones((1, 16))
+    np.testing.assert_array_equal(
+        np.asarray(eng.mix(X, theta=1.0, key=jax.random.PRNGKey(0))),
+        np.asarray(X))
+
+
+# ---------------------------------------------------------------------------
+# QSGD wire
+# ---------------------------------------------------------------------------
+
+def test_qsgd_mix_close_to_exact():
+    topo = ring(8)
+    X = _stacked(scale=0.25)
+    out = CommEngine(topo, QSGDWire(QuantSpec(bits=8)), backend="jnp").mix(
+        X, key=jax.random.PRNGKey(2))
+    exact = gossip.mix(X, topo)
+    # per-worker scale <= max|x|; 8-bit lattice pitch = 2*scale/256
+    tol = 2.0 * float(jnp.max(jnp.abs(X))) * (2.0 / 256.0) + 1e-4
+    assert float(jnp.max(jnp.abs(out - exact))) <= tol
+
+
+def test_qsgd_preserves_mean_roughly():
+    topo = ring(8)
+    X = _stacked(scale=0.25)
+    out = CommEngine(topo, QSGDWire(QuantSpec(bits=8)), backend="jnp").mix(
+        X, key=jax.random.PRNGKey(4))
+    drift = float(jnp.max(jnp.abs(out.mean(0) - X.mean(0))))
+    assert drift <= 2.0 * float(jnp.max(jnp.abs(X))) * (2.0 / 256.0) + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# 3. bytes accounting
+# ---------------------------------------------------------------------------
+
+def test_ledger_one_bit_is_one_thirtysecond_of_f32():
+    topo = ring(8)
+    X = jnp.zeros((8, 256))
+    led_1bit, led_f32 = gossip.BytesLedger(), gossip.BytesLedger()
+    CommEngine(topo, MoniquaWire(QuantSpec(bits=1, stochastic=False)),
+               backend="jnp").mix(X, theta=2.0, ledger=led_1bit)
+    CommEngine(topo, FullPrecisionWire()).mix(X, ledger=led_f32)
+    assert led_1bit.bytes_per_worker > 0
+    assert led_1bit.bytes_per_worker * 32 == led_f32.bytes_per_worker
+
+
+def test_bytes_per_round_matches_ledger():
+    topo = ring(8)
+    X = {"a": jnp.zeros((8, 100)), "b": jnp.zeros((8, 3, 7))}
+    eng = CommEngine(topo, MoniquaWire(QuantSpec(bits=2)), backend="jnp")
+    led = gossip.BytesLedger()
+    eng.mix(X, theta=2.0, key=jax.random.PRNGKey(0), ledger=led)
+    assert led.bytes_per_worker == eng.bytes_per_round(X)
+    # 2 bits -> ceil(100/4)=25 and 3*ceil(7/4)=6 bytes per leaf, 2 neighbors
+    assert eng.bytes_per_round(X) == (25 + 6) * 2
+
+
+def test_qsgd_bytes_include_scale():
+    eng = CommEngine(ring(8), QSGDWire(QuantSpec(bits=8)), backend="jnp")
+    X = jnp.zeros((8, 100))
+    # 100 code bytes + 4 scale bytes, 2 neighbors
+    assert eng.bytes_per_round(X) == (100 + 4) * 2
+
+
+# ---------------------------------------------------------------------------
+# pair_average (AD-PSGD primitive)
+# ---------------------------------------------------------------------------
+
+def test_pair_average_full_is_exact_average():
+    eng = CommEngine(ring(8), FullPrecisionWire())
+    xi, xj = jnp.arange(4.0), jnp.arange(4.0) + 1.0
+    ni, nj = eng.pair_average(xi, xj)
+    np.testing.assert_allclose(np.asarray(ni), np.asarray(0.5 * (xi + xj)))
+    np.testing.assert_allclose(np.asarray(ni), np.asarray(nj))
+
+
+@pytest.mark.parametrize("wire", ["moniqua", "qsgd"])
+def test_pair_average_quantized_close(wire):
+    theta = 1.0
+    spec = QuantSpec(bits=8)
+    eng = CommEngine(ring(8), make_wire(wire, spec), backend="jnp")
+    xi = jax.random.normal(jax.random.PRNGKey(5), (64,)) * 0.2
+    xj = xi + jax.random.uniform(jax.random.PRNGKey(6), (64,),
+                                 minval=-0.4, maxval=0.4) * theta
+    ni, nj = eng.pair_average(xi, xj, theta=theta, key=jax.random.PRNGKey(7))
+    avg = 0.5 * (xi + xj)
+    B = float(modulo.b_theta(theta, spec.delta))
+    tol = (2.0 * spec.delta * B if wire == "moniqua"
+           else 2.0 * float(jnp.max(jnp.abs(xj))) * (2.0 / 256.0)) + 1e-4
+    assert float(jnp.max(jnp.abs(ni - avg))) <= tol
+    assert float(jnp.max(jnp.abs(nj - avg))) <= tol
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+def test_unknown_wire_and_backend_raise():
+    with pytest.raises(ValueError):
+        make_wire("zstd")
+    with pytest.raises(ValueError):
+        CommEngine(ring(8), MoniquaWire(), backend="cuda").mix(
+            jnp.zeros((8, 8)), theta=1.0)
+
+
+def test_moniqua_requires_theta():
+    eng = CommEngine(ring(8), MoniquaWire())
+    with pytest.raises(ValueError):
+        eng.mix(jnp.zeros((8, 8)))
