@@ -14,6 +14,7 @@ Each bench maps to a paper artifact:
     bench_d2_hetero         Fig. 2a     (D^2 / decentralized data)
     bench_adpsgd            Fig. 2b     (asynchronous gossip)
     bench_bits_bound        Sec. 4      (O(log log n) bits bound)
+    bench_network_sim       Fig. 5 analog (repro.sim wall-clock-to-target)
     roofline_table          deliverable g (dry-run roofline terms)
 
 Writes benchmarks/results/<name>.json and a combined markdown report to
@@ -40,6 +41,7 @@ BENCHES = [
     "bench_d2_hetero",
     "bench_adpsgd",
     "bench_bits_bound",
+    "bench_network_sim",
     "roofline_table",
 ]
 

@@ -17,7 +17,10 @@ are derived from the result shape and the replica-group size:
     all-gather:     operand == result / group_size
     reduce-scatter: operand == result * group_size
 
-Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM; the network
+term prices bytes on the shared ``repro.sim.network.TPU_V5E_ICI`` link
+model (alpha-beta with alpha = 0: the roofline charges pure bandwidth,
+per-message latency belongs to the event simulator in ``repro.sim``).
 """
 from __future__ import annotations
 
@@ -27,10 +30,12 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.sim.network import TPU_V5E_ICI
+
 HW = {
-    "peak_flops": 197e12,   # bf16 / chip
-    "hbm_bw": 819e9,        # B/s
-    "ici_bw": 50e9,         # B/s per link
+    "peak_flops": 197e12,             # bf16 / chip
+    "hbm_bw": 819e9,                  # B/s
+    "ici_bw": TPU_V5E_ICI.beta_Bps,   # B/s per link (sim.network model)
 }
 
 _DTYPE_BYTES = {

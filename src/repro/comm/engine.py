@@ -38,13 +38,17 @@ payload-bytes-per-worker into a :class:`~repro.comm.gossip.BytesLedger`, and
 ``bytes_per_round`` returns the same number without running anything — the
 input to the analytic network model in ``benchmarks/``.
 
-Known limitation (sharded meshes): the Moniqua backends tile-flatten each
-stacked ``[n, ...]`` leaf (``reshape(-1)`` in ``ops._to_tiles``), which
-crosses the sharded worker axis — XLA may insert resharding around the
-encode/decode on the production mesh beyond the one collective-permute of
-the packed payload.  The fix is per-worker tiling (vmap the tile layout
-over axis 0, which also restores exact Supp.-C shared randomness across
-workers); tracked in ROADMAP.md.
+Sharded meshes: the Moniqua backends tile each worker's slice separately
+(``kernels/ops.py`` stacked wrappers vmap the tile layout over the worker
+axis), so the only cross-worker traffic in a round is the packed
+collective-permute of the payload, and — because every worker hashes the
+same (seed, element) pairs — stochastic rounding uses Supp.-C shared
+randomness exactly: identical models encode to identical payloads on
+every worker.
+
+Wall-clock prediction: the byte counts this engine produces feed the
+event-driven simulator (``repro.sim``), which prices them under explicit
+link/compute models per named scenario — see ``docs/simulator.md``.
 """
 from __future__ import annotations
 
@@ -180,15 +184,16 @@ class CommEngine:
         if self.codec.name == "moniqua":
             spec = self.codec.spec
             B = modulo.b_theta(theta, spec.delta)
-            if backend == "pallas":
-                packed = kops.moniqua_encode(x, B, spec, None, seed=seed)
-                p_nbrs = jnp.stack([gossip._roll(packed, o) for o in offsets])
-                return kops.moniqua_decode_reduce(packed, p_nbrs, x, B,
-                                                  weights, spec)
-            packed = kops.moniqua_encode_jnp(x, B, spec, seed)
+            # per-worker tiling: each worker's slice is encoded/decoded in
+            # its own tile grid (kops stacked wrappers), so only the packed
+            # payload roll crosses the worker axis and all workers share
+            # one rounding-uniform stream per element (Supp. C)
+            packed = kops.moniqua_encode_stacked(x, B, spec, seed,
+                                                 backend=backend)
             p_nbrs = jnp.stack([gossip._roll(packed, o) for o in offsets])
-            return kops.moniqua_decode_reduce_jnp(packed, p_nbrs, x, B,
-                                                  weights, spec)
+            return kops.moniqua_decode_reduce_stacked(packed, p_nbrs, x, B,
+                                                      weights, spec,
+                                                      backend=backend)
         # qsgd: reference-free decode; each worker ships (codes, own scale)
         spec = self.codec.spec
         packed, scale = qsgd_encode(x, spec, seed)

@@ -116,20 +116,24 @@ def torus(rows: int, cols: int) -> Topology:
 
 
 def exponential(n: int) -> Topology:
-    """Exponential graph: hops ±2^j; O(log n) degree, small rho."""
-    hops = []
+    """Exponential graph: hops ±2^j; O(log n) degree, small rho.
+
+    Built by an explicit dedupe-mod-n loop: for each hop ``h = 2^j`` up to
+    ``n // 2`` try both ``+h`` and ``-h`` and keep an offset only if its
+    residue mod n is new.  The self-inverse hop ``h = n/2`` (even n) falls
+    out naturally — ``-h ≡ +h (mod n)`` so the second direction dedupes —
+    as does ``n = 2`` where ``+1 ≡ -1``.  The offset set is symmetric mod
+    n by construction, so W is symmetric doubly stochastic.
+    """
+    seen = {0}
+    offsets = [0]
     h = 1
     while h <= n // 2:
-        hops.append(h)
+        for o in (h, -h):
+            if o % n not in seen:
+                seen.add(o % n)
+                offsets.append(o)
         h *= 2
-    offs = [0] + [o for h in hops for o in ((h, -h) if (2 * h) % n or h != n // 2 or n % 2 else (h,))]
-    # dedupe mod n (e.g. +n/2 == -n/2)
-    seen, offsets = set(), []
-    for o in offs:
-        m = o % n
-        if m not in seen:
-            seen.add(m)
-            offsets.append(o)
     w = 1.0 / len(offsets)
     return Topology("exponential", n, tuple(offsets), tuple([w] * len(offsets)))
 

@@ -183,6 +183,44 @@ def moniqua_decode_reduce_jnp(p_self: jax.Array, p_nbrs: jax.Array,
     return out.astype(y.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Stacked-worker wrappers: per-worker tiling over the leading [n, ...] axis.
+#
+# The tile layout above flattens a whole array (``_to_tiles``'s
+# ``reshape(-1)``); applied directly to a stacked ``[n, ...]`` leaf that
+# would cross the (sharded) worker axis — XLA could insert resharding
+# around the encode/decode, and the counter-hash element index would differ
+# per worker, breaking Supp. C's shared randomness.  These wrappers vmap
+# the layout over axis 0 instead: each worker tiles its own slice with
+# element indices 0..d-1 and the SAME seed, so (a) the only cross-worker
+# traffic left in a CommEngine round is the packed collective-permute and
+# (b) every worker draws identical rounding uniforms per element (Supp. C).
+# ---------------------------------------------------------------------------
+
+def moniqua_encode_stacked(x: jax.Array, B, spec: QuantSpec,
+                           seed: jax.Array, *, backend: str) -> jax.Array:
+    """Encode a stacked ``[n, ...]`` leaf with per-worker tile layout."""
+    if backend == "pallas":
+        return jax.vmap(
+            lambda xi: moniqua_encode(xi, B, spec, None, seed=seed))(x)
+    return jax.vmap(lambda xi: moniqua_encode_jnp(xi, B, spec, seed))(x)
+
+
+def moniqua_decode_reduce_stacked(p_self: jax.Array, p_nbrs: jax.Array,
+                                  y: jax.Array, B, weights, spec: QuantSpec,
+                                  *, backend: str) -> jax.Array:
+    """Fused decode-reduce over a stacked leaf, tiled per worker.
+
+    ``p_self``/``y`` carry the worker axis at 0; ``p_nbrs`` stacks the
+    neighbor payloads at axis 0 with the worker axis at 1 (the layout one
+    ``jnp.roll`` per offset produces).
+    """
+    fn = (moniqua_decode_reduce if backend == "pallas"
+          else moniqua_decode_reduce_jnp)
+    return jax.vmap(lambda ps, pn, yi: fn(ps, pn, yi, B, weights, spec),
+                    in_axes=(0, 1, 0))(p_self, p_nbrs, y)
+
+
 # Reference-path conveniences used by MoniquaCodec(use_pallas=True)
 
 def moniqua_unpack_value(packed, B, spec: QuantSpec, last_dim: int):

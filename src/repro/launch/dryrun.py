@@ -82,6 +82,7 @@ class DryrunResult:
     memory: Dict[str, float] = dataclasses.field(default_factory=dict)
     roofline: Dict[str, Any] = dataclasses.field(default_factory=dict)
     collectives: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    sim: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def row(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -90,6 +91,7 @@ class DryrunResult:
 def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                mesh=None, algo: str = "moniqua", bits: int = 8,
                wire: str = "moniqua", comm_backend: str = "auto",
+               scenario: Optional[str] = None,
                verbose: bool = True, override: Optional[dict] = None
                ) -> DryrunResult:
     cfg = get_config(arch)
@@ -133,6 +135,16 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         roof = RL.roofline_from_compiled(
             compiled, RL.model_flops_for(cfg, shape), chips)
         stats = RL.parse_collectives(compiled.as_text())
+        sim_pred: Dict[str, Any] = {}
+        if scenario and shape.kind == "train":
+            hp = _hyper(cfg, n_workers, algo, bits, wire, comm_backend)
+            sim_pred = _sim_predict(scenario, model, hp, n_workers, roof)
+            if verbose:
+                print(f"[{arch} x {shape_name} x {mesh_name}] sim "
+                      f"{scenario}: round="
+                      f"{sim_pred['predicted_round_s']*1e3:.3f}ms "
+                      f"({sim_pred['network_overhead_x']:.2f}x roofline "
+                      f"bound)")
         res = DryrunResult(
             arch, shape_name, mesh_name, "ok", seconds=time.time() - t0,
             memory={
@@ -161,6 +173,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             collectives={"counts": stats.counts,
                          "bytes": stats.bytes_by_op,
                          "summary": stats.summary()},
+            sim=sim_pred,
         )
         if verbose:
             r = res.roofline
@@ -184,6 +197,36 @@ def _hyper(cfg, n_workers, algo, bits, wire="moniqua", comm_backend="auto"):
     spec = QuantSpec(bits=bits, stochastic=bits > 1)
     return AlgoHyper(topo=topo, codec=MoniquaCodec(spec), theta=2.0,
                      wire=wire, backend=comm_backend)
+
+
+def _sim_predict(scenario_name: str, model, hp, n_workers: int, roof):
+    """Price one gossip round of this config on a named sim scenario.
+
+    Compute time per round = the roofline bound of the compiled step (the
+    best the chips can do); network time = the engine's wire bytes under
+    the scenario's link model.  The ratio says how much the scenario's
+    network inflates the step beyond the hardware bound.
+    """
+    from repro.sim import events as SE
+    from repro.sim import scenarios as SC
+
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    X_ab = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct((n_workers,) + a.shape, a.dtype),
+        params)
+    eng = hp.engine()
+    bytes_round = eng.bytes_per_round(X_ab)
+    m = max(len(hp.topo.neighbor_offsets()), 1)
+    compute_s = max(roof.bound_s, 1e-9)
+    sc = SC.get_scenario(scenario_name, n=n_workers, compute_s=compute_s)
+    trace = SE.simulate_sync_rounds(sc, bytes_round // m, num_rounds=25)
+    return {
+        "scenario": sc.name,
+        "bytes_per_round": bytes_round,
+        "predicted_round_s": trace.mean_round_seconds,
+        "roofline_bound_s": roof.bound_s,
+        "network_overhead_x": trace.mean_round_seconds / compute_s,
+    }
 
 
 def _lower_train(model, shape, mesh, ms, rules, n_workers, algo_name, bits,
@@ -250,6 +293,10 @@ def main(argv=None) -> int:
     ap.add_argument("--comm-backend", default="auto",
                     choices=["auto", "jnp", "pallas"],
                     help="CommEngine backend")
+    ap.add_argument("--scenario", default=None,
+                    help="repro.sim scenario name: price one gossip round "
+                         "of each train config on this simulated network "
+                         "(see repro/sim/scenarios.py)")
     ap.add_argument("--out", default=None, help="append JSONL results here")
     args = ap.parse_args(argv)
 
@@ -266,7 +313,8 @@ def main(argv=None) -> int:
                 res = dryrun_one(arch, shape, multi_pod=mp, mesh=mesh,
                                  algo=args.algo, bits=args.bits,
                                  wire=args.wire,
-                                 comm_backend=args.comm_backend)
+                                 comm_backend=args.comm_backend,
+                                 scenario=args.scenario)
                 if res.status == "error":
                     failures += 1
                 if args.out:

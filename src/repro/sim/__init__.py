@@ -1,0 +1,40 @@
+"""repro.sim: event-driven network/cluster simulator.
+
+Turns the byte counts CommEngine already produces (``bytes_per_round`` /
+``BytesLedger``) into *wall-clock predictions* under explicit link and
+compute models, across heterogeneous named scenarios — the layer that lets
+the repo reproduce the paper's wall-clock comparisons without a physical
+cluster.  Layout:
+
+* :mod:`repro.sim.network`   — per-edge link models (alpha-beta cost
+  ``T = alpha + bytes / beta``, jitter, heterogeneous links keyed by
+  topology offsets) and the deterministic counter-hash RNG every sim
+  module draws from.
+* :mod:`repro.sim.cluster`   — per-worker compute-time models with
+  straggler distributions (static multipliers, exponential and Pareto
+  tails).
+* :mod:`repro.sim.events`    — the deterministic event engine: a
+  synchronous-round mode (D-PSGD / D2 / Moniqua) and an asynchronous
+  AD-PSGD event loop that replays ``CommEngine.pair_average`` edge by
+  edge with staleness tracking.
+* :mod:`repro.sim.scenarios` — the named scenario catalog (homogeneous
+  10GbE ring, WAN exponential graph, long-tail straggler,
+  bandwidth-starved 1-bit) and factories for custom ones.
+
+Everything is pure Python + numpy-free arithmetic on floats, fully
+deterministic given (scenario, seed): same inputs produce an *identical*
+event trace, which ``tests/test_sim.py`` enforces.
+"""
+from repro.sim.cluster import ComputeModel
+from repro.sim.events import (SimEvent, SimTrace, replay_adpsgd,
+                              simulate_async_gossip, simulate_sync_rounds)
+from repro.sim.network import LinkModel, NetworkModel, sim_uniform
+from repro.sim.scenarios import (Scenario, get_scenario, list_scenarios,
+                                 scenario_from_netconfig)
+
+__all__ = [
+    "ComputeModel", "LinkModel", "NetworkModel", "Scenario", "SimEvent",
+    "SimTrace", "get_scenario", "list_scenarios", "replay_adpsgd",
+    "scenario_from_netconfig", "sim_uniform", "simulate_async_gossip",
+    "simulate_sync_rounds",
+]

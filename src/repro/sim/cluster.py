@@ -1,0 +1,91 @@
+"""Per-worker compute-time models with straggler distributions.
+
+A :class:`ComputeModel` prices one local step (forward + backward + update)
+for worker ``i`` at global step ``k``:
+
+    t(i, k) = base_s * mult_i * (1 + tail(i, k))
+
+* ``mult_i`` — static heterogeneity (mixed hardware generations); defaults
+  to 1 for every worker.
+* ``tail(i, k)`` — a per-step stochastic straggler term, drawn
+  deterministically from :func:`~repro.sim.network.sim_uniform`:
+
+    - ``"none"``:    0
+    - ``"exp"``:     ``scale * Exp(1)``      (occasional pauses: GC, page
+                     faults — light tail)
+    - ``"pareto"``:  ``scale * (Pareto(shape) - 1)`` (heavy tail: the
+                     long-tail straggler scenario; shape <= 2 has
+                     unbounded variance, the regime where synchronous
+                     rounds collapse to the slowest worker)
+
+``tail_workers`` restricts the stochastic term to a subset (e.g. one bad
+host); the static multipliers always apply.  All draws are keyed by
+(seed, worker, step), so a model is a frozen value object and two runs of
+the same scenario agree event-for-event.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+from repro.sim.network import STREAM_COMPUTE, sim_uniform
+
+TAILS = ("none", "exp", "pareto")
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeModel:
+    """Per-worker local-step time model."""
+    base_s: float                           # homogeneous per-step seconds
+    multipliers: Tuple[float, ...] = ()     # static per-worker factors
+    tail: str = "none"                      # none | exp | pareto
+    tail_scale: float = 0.0                 # strength of the random term
+    tail_workers: Tuple[int, ...] = ()      # affected workers; () = all
+    pareto_shape: float = 1.5               # heavy-tail exponent
+
+    def __post_init__(self):
+        if self.tail not in TAILS:
+            raise ValueError(f"unknown tail {self.tail!r}; one of {TAILS}")
+        if self.base_s <= 0:
+            raise ValueError(f"base_s must be positive, got {self.base_s}")
+
+    def multiplier(self, worker: int) -> float:
+        """Static factor for ``worker``; workers past the tuple get 1.0,
+        so a prefix like ``(4.0,)`` means "worker 0 is 4x slower"."""
+        if worker < len(self.multipliers):
+            return self.multipliers[worker]
+        return 1.0
+
+    def compute_seconds(self, worker: int, step: int, seed: int) -> float:
+        t = self.base_s * self.multiplier(worker)
+        if self.tail == "none" or self.tail_scale == 0.0:
+            return t
+        if self.tail_workers and worker not in self.tail_workers:
+            return t
+        u = sim_uniform(seed, STREAM_COMPUTE, worker, step)
+        # clamp away u == 1 so the inverse-CDF transforms stay finite
+        u = min(u, 1.0 - 1e-12)
+        if self.tail == "exp":
+            extra = -math.log1p(-u)
+        else:  # pareto, mean-shifted to start at 0
+            extra = (1.0 - u) ** (-1.0 / self.pareto_shape) - 1.0
+        return t * (1.0 + self.tail_scale * extra)
+
+    def expected_seconds(self, worker: int) -> float:
+        """Mean per-step time ignoring the stochastic tail (planning aid)."""
+        return self.base_s * self.multiplier(worker)
+
+
+def homogeneous(base_s: float) -> ComputeModel:
+    return ComputeModel(base_s=base_s)
+
+
+def one_straggler(base_s: float, worker: int = 0, slow: float = 4.0,
+                  tail_scale: float = 2.0,
+                  pareto_shape: float = 1.2) -> ComputeModel:
+    """One chronically slow worker with a heavy-tailed per-step term."""
+    return ComputeModel(base_s=base_s, tail="pareto", tail_scale=tail_scale,
+                        tail_workers=(worker,), pareto_shape=pareto_shape,
+                        multipliers=tuple(slow if i == worker else 1.0
+                                          for i in range(worker + 1)))

@@ -1,0 +1,319 @@
+"""Deterministic event-driven engine: bytes ledger -> wall clock.
+
+Two execution modes, matching the repo's two communication regimes:
+
+**Synchronous rounds** (D-PSGD / D2 / Moniqua — everything that calls
+``CommEngine.mix``).  One round per worker ``i`` at step ``k``:
+
+    ready(i) = max( compute(i),
+                    max_{j in in-nbrs(i)}  depart(j -> i) + alpha + jitter )
+    round_k  = max_i ready(i)                       (bulk-synchronous barrier)
+
+where ``depart(j -> i)`` is when the payload for ``i`` clears ``j``'s NIC:
+a sender's per-neighbor payloads serialize on the bandwidth term
+(``LinkModel.occupancy_seconds``) while their latencies overlap — so on a
+homogeneous ring the round time reduces to the familiar
+
+    round = compute + m * bytes/beta + alpha
+
+i.e. round time = max over workers of compute + slowest-neighbor transfer.
+The payload size comes straight from the ``CommEngine`` bytes ledger
+(``bytes_per_round / num_neighbors``), which is what makes the simulator's
+wall clock composable with any codec the engine can put on the wire.
+
+**Asynchronous AD-PSGD** (Algorithm 3 / the analysis model of
+``core/adpsgd.py``).  Workers free-run: compute a gradient on a snapshot of
+their model, gossip with one deterministic-randomly chosen neighbor (the
+transfer priced by the link model), apply the now-stale gradient, repeat.
+The passive peer is never blocked (AD-PSGD's wait-free design), so the
+loop cannot deadlock however extreme the stragglers; staleness — how many
+times a worker's model changed between gradient snapshot and gradient
+application — is tracked per update.  :func:`replay_adpsgd` runs the same
+event loop while *applying the actual mixing math* through
+``CommEngine.pair_average`` edge by edge, so predicted wall clock and
+realized convergence come from one run.
+
+Determinism: every stochastic choice (jitter, straggler tails, edge
+choice) is a counter hash of (scenario.seed, semantic counters) — replays
+are event-for-event identical, which :meth:`SimTrace.fingerprint` makes
+cheap to assert.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import heapq
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.sim.network import (STREAM_EDGE_CHOICE, STREAM_NET, sim_randint,
+                               sim_uniform)
+
+# event kinds, in the order they appear inside one sync round
+COMPUTE = "compute"      # worker finished local grad/update work
+TRANSFER = "transfer"    # payload worker -> peer fully arrived
+ROUND = "round"          # barrier: every worker finished the round
+GOSSIP = "gossip"        # async: pair exchange (worker, peer) completed
+UPDATE = "update"        # async: worker applied its (stale) gradient
+
+
+@dataclasses.dataclass(frozen=True)
+class SimEvent:
+    """One timestamped event; the trace is the ordered tuple of these."""
+    t: float
+    kind: str
+    worker: int
+    peer: int = -1
+    step: int = -1
+    nbytes: int = 0
+
+    def row(self) -> Tuple[float, str, int, int, int, int]:
+        return (round(self.t, 12), self.kind, self.worker, self.peer,
+                self.step, self.nbytes)
+
+
+@dataclasses.dataclass
+class SimTrace:
+    """Result of one simulation: the event list plus aggregate predictions."""
+    events: List[SimEvent]
+    total_seconds: float
+    bytes_on_wire: int
+    round_seconds: List[float] = dataclasses.field(default_factory=list)
+    staleness: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def mean_round_seconds(self) -> float:
+        if not self.round_seconds:
+            return 0.0
+        return sum(self.round_seconds) / len(self.round_seconds)
+
+    @property
+    def staleness_max(self) -> int:
+        return max(self.staleness) if self.staleness else 0
+
+    @property
+    def staleness_mean(self) -> float:
+        if not self.staleness:
+            return 0.0
+        return sum(self.staleness) / len(self.staleness)
+
+    def cumulative_seconds(self) -> List[float]:
+        """Wall clock at the end of each round (sync traces)."""
+        out, acc = [], 0.0
+        for r in self.round_seconds:
+            acc += r
+            out.append(acc)
+        return out
+
+    def fingerprint(self) -> str:
+        """Stable digest of the full event trace (determinism tests)."""
+        h = hashlib.sha256()
+        for e in self.events:
+            h.update(repr(e.row()).encode())
+        return h.hexdigest()
+
+    def count(self, kind: str) -> int:
+        return sum(1 for e in self.events if e.kind == kind)
+
+
+# ---------------------------------------------------------------------------
+# Synchronous-round mode.
+# ---------------------------------------------------------------------------
+
+def simulate_sync_rounds(scenario, bytes_per_neighbor: int, num_rounds: int,
+                         ) -> SimTrace:
+    """Wall-clock for ``num_rounds`` bulk-synchronous gossip rounds.
+
+    ``bytes_per_neighbor`` is one worker's payload to ONE neighbor per
+    round — ``CommEngine.bytes_per_round(X) / len(topo.neighbor_offsets())``.
+    The trace carries per-round barrier times (``round_seconds``) so a
+    loss-vs-step trajectory converts to loss-vs-wall-clock by indexing
+    :meth:`SimTrace.cumulative_seconds`.
+    """
+    topo, net, comp, seed = (scenario.topo, scenario.network,
+                             scenario.compute, scenario.seed)
+    n = topo.n
+    offsets = topo.neighbor_offsets()
+    events: List[SimEvent] = []
+    round_seconds: List[float] = []
+    total_bytes = 0
+    t_start = 0.0
+    for k in range(num_rounds):
+        compute = [comp.compute_seconds(i, k, seed) for i in range(n)]
+        for i in range(n):
+            events.append(SimEvent(t_start + compute[i], COMPUTE, i, step=k))
+        # arrival[i] accumulates the latest in-payload; senders serialize
+        # their per-neighbor payloads on the NIC bandwidth term
+        ready = [t_start + compute[i] for i in range(n)]
+        for j in range(n):
+            nic_free = t_start + compute[j]
+            for s, o in enumerate(offsets):
+                dst = (j - o) % n       # i = j - o receives FROM j = i + o
+                link = net.link(j, dst, n)
+                nic_free += link.occupancy_seconds(bytes_per_neighbor)
+                u = sim_uniform(seed, STREAM_NET, k, j, dst)
+                arrive = nic_free + link.alpha_s + link.jitter_s * u
+                events.append(SimEvent(arrive, TRANSFER, j, peer=dst, step=k,
+                                       nbytes=bytes_per_neighbor))
+                ready[dst] = max(ready[dst], arrive)
+                total_bytes += bytes_per_neighbor
+        t_end = max(ready)
+        events.append(SimEvent(t_end, ROUND, -1, step=k))
+        round_seconds.append(t_end - t_start)
+        t_start = t_end
+    return SimTrace(events=events, total_seconds=t_start,
+                    bytes_on_wire=total_bytes, round_seconds=round_seconds)
+
+
+# ---------------------------------------------------------------------------
+# Asynchronous AD-PSGD mode.
+# ---------------------------------------------------------------------------
+
+def simulate_async_gossip(
+    scenario,
+    bytes_per_exchange: int,
+    num_updates: int,
+    on_gossip: Optional[Callable[[int, int, int], None]] = None,
+    on_update: Optional[Callable[[int, int, int], None]] = None,
+) -> SimTrace:
+    """Event loop for AD-PSGD: one gossip + one stale gradient per update.
+
+    Each worker cycles compute -> gossip(random incident edge) -> apply.
+    Exactly ``num_updates`` update events (and exactly one gossip each) are
+    processed in deterministic time order; ties break on a monotonic
+    sequence number, never on worker identity.  Callbacks:
+
+    * ``on_gossip(i, j, gossip_idx)`` — the edge exchange completed; the
+      caller mutates its models here (``replay_adpsgd`` routes this to
+      ``CommEngine.pair_average``).
+    * ``on_update(i, local_step, staleness)`` — worker ``i`` applies the
+      gradient snapshot taken ``staleness`` model-versions ago.
+
+    ``bytes_per_exchange`` is ONE endpoint's payload; a pair exchange
+    ships it in both directions (``pair_average`` encodes both models),
+    so each gossip puts ``2 * bytes_per_exchange`` on the wire while the
+    transfer time stays one payload's worth — the two payloads cross
+    concurrently on the full-duplex link.
+
+    The passive peer never blocks, so straggler-heavy scenarios slow the
+    straggler's own update rate but cannot deadlock the loop (contract
+    tested in ``tests/test_sim.py``).
+    """
+    topo, net, comp, seed = (scenario.topo, scenario.network,
+                             scenario.compute, scenario.seed)
+    n = topo.n
+    offsets = [o % n for o in topo.neighbor_offsets()]
+    if not offsets:
+        raise ValueError("async gossip needs a topology with neighbors")
+    events: List[SimEvent] = []
+    heap: List[Tuple[float, int, str, int]] = []   # (time, seq, kind, worker)
+    seq = 0
+    # per-worker state: model version (bumped by every gossip touching the
+    # worker and every applied update) and the version at gradient snapshot
+    version = [0] * n
+    snap_version = [0] * n
+    local_step = [0] * n
+    pending_peer: Dict[int, int] = {}     # worker -> peer of in-flight gossip
+    staleness: List[int] = []
+    total_bytes = 0
+    gossip_idx = 0
+    updates_done = 0
+
+    for i in range(n):
+        dt = comp.compute_seconds(i, 0, seed)
+        heapq.heappush(heap, (dt, seq, COMPUTE, i))
+        seq += 1
+        snap_version[i] = version[i]
+
+    t_now = 0.0
+    while updates_done < num_updates and heap:
+        t_now, _, kind, i = heapq.heappop(heap)
+        if kind == COMPUTE:
+            # gradient ready; gossip on a deterministic-random incident edge
+            o = offsets[sim_randint(seed, len(offsets), STREAM_EDGE_CHOICE,
+                                    i, local_step[i])]
+            j = (i + o) % n
+            u = sim_uniform(seed, STREAM_NET, gossip_idx, i, j)
+            dt = net.transfer_seconds(i, j, n, bytes_per_exchange, u)
+            heapq.heappush(heap, (t_now + dt, seq, GOSSIP, i))
+            seq += 1
+            pending_peer[i] = j
+            events.append(SimEvent(t_now, COMPUTE, i, peer=j,
+                                   step=local_step[i]))
+            gossip_idx += 1
+        elif kind == GOSSIP:
+            j = pending_peer.pop(i)
+            # credited at completion: gossips still in flight when the loop
+            # hits num_updates never touched models and are not counted
+            total_bytes += 2 * bytes_per_exchange
+            if on_gossip is not None:
+                on_gossip(i, j, len(staleness))
+            version[i] += 1
+            version[j] += 1
+            events.append(SimEvent(t_now, GOSSIP, i, peer=j,
+                                   step=local_step[i],
+                                   nbytes=2 * bytes_per_exchange))
+            # apply the stale gradient immediately after the exchange
+            stale = version[i] - snap_version[i]
+            staleness.append(stale)
+            if on_update is not None:
+                on_update(i, local_step[i], stale)
+            version[i] += 1
+            events.append(SimEvent(t_now, UPDATE, i, step=local_step[i]))
+            local_step[i] += 1
+            updates_done += 1
+            # next compute phase; snapshot the model version it reads
+            snap_version[i] = version[i]
+            dt = comp.compute_seconds(i, local_step[i], seed)
+            heapq.heappush(heap, (t_now + dt, seq, COMPUTE, i))
+            seq += 1
+    return SimTrace(events=events, total_seconds=t_now,
+                    bytes_on_wire=total_bytes, staleness=staleness)
+
+
+def replay_adpsgd(scenario, engine, x0, grad_fn, alpha: float,
+                  num_updates: int, theta: float = 2.0) -> Dict[str, Any]:
+    """Replay AD-PSGD through ``CommEngine.pair_average`` edge by edge.
+
+    ``x0`` is the stacked ``[n, d]`` initial model, ``grad_fn(x, i, key)``
+    the per-worker stochastic gradient (the :mod:`repro.core.adpsgd`
+    signature).  Each simulated gossip applies the engine's pair exchange
+    (quantized or exact, per its wire codec) to the live models; each
+    update applies the gradient *snapshot* its worker took at compute
+    start — the same staleness the wall clock prices.  Returns the final
+    stacked models, the trace, and per-update mean-model distances.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.sim.network import STREAM_GRAD, STREAM_PAIR
+
+    n = x0.shape[0]
+    X = [x0[i] for i in range(n)]
+    snap = [x0[i] for i in range(n)]
+    grads: List[Optional[Any]] = [None] * n
+    scenario_seed = scenario.seed
+
+    def on_gossip(i: int, j: int, idx: int) -> None:
+        # snapshot & gradient for the exchange initiator were taken at its
+        # compute start; compute them lazily here (values equal by purity)
+        if grads[i] is None:
+            kg = jax.random.PRNGKey(
+                sim_randint(scenario_seed, 2**31 - 1, STREAM_GRAD, i, idx))
+            grads[i] = grad_fn(snap[i], i, kg)
+        kp = jax.random.PRNGKey(
+            sim_randint(scenario_seed, 2**31 - 1, STREAM_PAIR, idx))
+        X[i], X[j] = engine.pair_average(X[i], X[j], theta=theta, key=kp)
+
+    def on_update(i: int, step: int, stale: int) -> None:
+        X[i] = X[i] - alpha * grads[i]
+        grads[i] = None
+        snap[i] = X[i]          # next gradient reads the post-update model
+
+    nbytes = engine.codec.payload_bytes(tuple(x0.shape[1:]))
+    trace = simulate_async_gossip(scenario, bytes_per_exchange=nbytes,
+                                  num_updates=num_updates,
+                                  on_gossip=on_gossip, on_update=on_update)
+    Xf = jnp.stack(X)
+    consensus = float(jnp.mean(jnp.sum(
+        (Xf - jnp.mean(Xf, axis=0, keepdims=True)) ** 2, axis=1)))
+    return {"X": Xf, "trace": trace, "consensus_sq": consensus}

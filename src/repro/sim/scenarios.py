@@ -1,0 +1,165 @@
+"""Named simulation scenarios: topology x network x cluster presets.
+
+A :class:`Scenario` bundles everything the event engine needs — a
+circulant :class:`~repro.core.topology.Topology`, a
+:class:`~repro.sim.network.NetworkModel`, a
+:class:`~repro.sim.cluster.ComputeModel`, and the seed all deterministic
+draws key off.  The catalog covers the regimes the paper's wall-clock
+claims span:
+
+``lan-10gbe-ring``
+    Homogeneous datacenter baseline: 10 GbE ring, microsecond latency.
+    Compute-bound — codecs barely matter; the control scenario.
+``wan-exponential``
+    Geo-distributed exponential graph: 200 Mbit/s links, 20 ms base
+    latency, and the long ``2^j`` hops (hop distance >= 4) at half
+    bandwidth and double latency — heterogeneous links keyed by topology
+    offsets.
+``straggler-longtail``
+    1 GbE ring with one chronically slow worker carrying a Pareto
+    (shape 1.2, unbounded-variance) per-step tail: the regime where
+    synchronous rounds collapse to the slowest worker and the async
+    AD-PSGD loop shines.
+``bandwidth-starved``
+    25 Mbit/s, 5 ms links (Fig. 1's worst network, further starved):
+    fp32 payloads dominate the round; Moniqua's 1-bit wire is the
+    headline win here.
+
+Factories take ``n`` so benchmarks can match the scenario to their
+worker count; ``get_scenario(name, n=...)`` is the registry entry point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.core.topology import Topology, exponential, ring
+from repro.sim.cluster import ComputeModel, homogeneous, one_straggler
+from repro.sim.network import LinkModel, NetworkModel, gbit, mbit
+
+# default local-step cost: ResNet20-scale fwd+bwd on a P100 at batch 128
+# (the paper's Fig. 1 workload; bench_walltime uses the same constant)
+DEFAULT_COMPUTE_S = 0.05
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """Everything one simulation run needs, as a frozen value object."""
+    name: str
+    topo: Topology
+    network: NetworkModel
+    compute: ComputeModel
+    seed: int = 0
+    description: str = ""
+
+    def with_compute(self, base_s: float) -> "Scenario":
+        """Same scenario, different per-step compute cost (e.g. measured)."""
+        comp = dataclasses.replace(self.compute, base_s=base_s)
+        return dataclasses.replace(self, compute=comp)
+
+    def with_seed(self, seed: int) -> "Scenario":
+        return dataclasses.replace(self, seed=seed)
+
+
+def lan_10gbe_ring(n: int = 8, compute_s: float = DEFAULT_COMPUTE_S,
+                   seed: int = 0) -> Scenario:
+    return Scenario(
+        name="lan-10gbe-ring",
+        topo=ring(n),
+        network=NetworkModel.homogeneous(alpha_s=50e-6, beta_Bps=gbit(10.0),
+                                         jitter_s=10e-6),
+        compute=homogeneous(compute_s),
+        seed=seed,
+        description="homogeneous 10 GbE datacenter ring (compute-bound)")
+
+
+def wan_exponential(n: int = 16, compute_s: float = DEFAULT_COMPUTE_S,
+                    seed: int = 0) -> Scenario:
+    short = LinkModel(alpha_s=20e-3, beta_Bps=mbit(200.0), jitter_s=2e-3)
+    long_ = LinkModel(alpha_s=40e-3, beta_Bps=mbit(100.0), jitter_s=4e-3)
+    topo = exponential(n)
+    # hops of distance >= 4 cross regions: half bandwidth, double latency
+    far = {min(o % n, (-o) % n) for o in topo.neighbor_offsets()
+           if min(o % n, (-o) % n) >= 4}
+    return Scenario(
+        name="wan-exponential",
+        topo=topo,
+        network=NetworkModel(short).with_offset_links(
+            {h: long_ for h in far}),
+        compute=homogeneous(compute_s),
+        seed=seed,
+        description="geo-distributed exponential graph; long 2^j hops "
+                    "slower (heterogeneous links keyed by offset)")
+
+
+def straggler_longtail(n: int = 8, compute_s: float = DEFAULT_COMPUTE_S,
+                       seed: int = 0) -> Scenario:
+    return Scenario(
+        name="straggler-longtail",
+        topo=ring(n),
+        network=NetworkModel.homogeneous(alpha_s=0.15e-3,
+                                         beta_Bps=gbit(1.0),
+                                         jitter_s=30e-6),
+        compute=one_straggler(compute_s, worker=0, slow=4.0,
+                              tail_scale=2.0, pareto_shape=1.2),
+        seed=seed,
+        description="1 GbE ring; worker 0 is 4x slower with a Pareto "
+                    "long-tail per-step term")
+
+
+def bandwidth_starved(n: int = 8, compute_s: float = DEFAULT_COMPUTE_S,
+                      seed: int = 0) -> Scenario:
+    return Scenario(
+        name="bandwidth-starved",
+        topo=ring(n),
+        network=NetworkModel.homogeneous(alpha_s=5e-3, beta_Bps=mbit(25.0),
+                                         jitter_s=0.5e-3),
+        compute=homogeneous(compute_s),
+        seed=seed,
+        description="25 Mbit/s, 5 ms links: fp32 payloads dominate; the "
+                    "1-bit wire's headline scenario")
+
+
+_REGISTRY: Dict[str, Callable[..., Scenario]] = {
+    "lan-10gbe-ring": lan_10gbe_ring,
+    "wan-exponential": wan_exponential,
+    "straggler-longtail": straggler_longtail,
+    "bandwidth-starved": bandwidth_starved,
+}
+
+
+def list_scenarios() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_scenario(name: str, n: Optional[int] = None,
+                 compute_s: Optional[float] = None,
+                 seed: int = 0) -> Scenario:
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown scenario {name!r}; "
+                         f"available: {list(list_scenarios())}") from None
+    kw = {"seed": seed}
+    if n is not None:
+        kw["n"] = n
+    if compute_s is not None:
+        kw["compute_s"] = compute_s
+    return factory(**kw)
+
+
+def scenario_from_netconfig(name: str, bandwidth_bps: float, latency_s: float,
+                            topo: Topology, compute_s: float,
+                            seed: int = 0) -> Scenario:
+    """Bridge from ``benchmarks.common.NetworkConfig``-style constants.
+
+    ``bandwidth_bps`` is in bits/s (how the benchmark tables quote links);
+    jitter is zero so the prediction is directly comparable with the
+    closed-form analytic model it replaces.
+    """
+    return Scenario(
+        name=name, topo=topo,
+        network=NetworkModel.homogeneous(alpha_s=latency_s,
+                                         beta_Bps=bandwidth_bps / 8.0),
+        compute=homogeneous(compute_s), seed=seed,
+        description=f"from NetworkConfig {name}")

@@ -118,6 +118,46 @@ def test_single_worker_is_identity():
 
 
 # ---------------------------------------------------------------------------
+# per-worker tiling (stacked wrappers in kernels/ops.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_stacked_encode_is_per_worker(backend):
+    """Each worker's payload equals its solo encode: the tile layout (and
+    hence the counter-hash element index) must not depend on the worker's
+    position in the stack or on n."""
+    from repro.core import modulo
+    from repro.kernels import ops as kops
+    spec = QuantSpec(bits=4)
+    B = modulo.b_theta(2.0, spec.delta)
+    seed = jnp.uint32(77)
+    X = _stacked(n=6, d=37)
+    stacked = kops.moniqua_encode_stacked(X, B, spec, seed, backend=backend)
+    for i in range(6):
+        solo = (kops.moniqua_encode(X[i], B, spec, None, seed=seed)
+                if backend == "pallas"
+                else kops.moniqua_encode_jnp(X[i], B, spec, seed))
+        np.testing.assert_array_equal(np.asarray(stacked[i]),
+                                      np.asarray(solo))
+
+
+def test_shared_randomness_identical_rows_identical_payloads():
+    """Supp. C: workers holding the same model must emit the same payload
+    (same uniforms per element), which per-worker tiling guarantees."""
+    from repro.core import modulo
+    from repro.kernels import ops as kops
+    spec = QuantSpec(bits=8, stochastic=True)
+    B = modulo.b_theta(2.0, spec.delta)
+    row = jax.random.normal(jax.random.PRNGKey(9), (123,)) * 0.3
+    X = jnp.broadcast_to(row, (5, 123))
+    packed = kops.moniqua_encode_stacked(X, B, spec, jnp.uint32(3),
+                                         backend="jnp")
+    for i in range(1, 5):
+        np.testing.assert_array_equal(np.asarray(packed[i]),
+                                      np.asarray(packed[0]))
+
+
+# ---------------------------------------------------------------------------
 # QSGD wire
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,329 @@
+"""repro.sim contracts: determinism, alpha-beta pricing, async liveness.
+
+The three contracts the subsystem design promises (docs/simulator.md):
+
+1. **Determinism** — same (scenario, seed) => identical event trace and
+   identical wall-clock totals, for both the sync-round and async modes.
+2. **alpha-beta semantics** — sync round time on a homogeneous network
+   reduces to ``compute + m * bytes/beta + alpha (+ jitter)``; bytes are
+   priced exactly once per edge per round.
+3. **Async liveness** — the AD-PSGD event loop processes every scheduled
+   gossip exactly once (one gossip per update, every edge in the
+   topology) and never deadlocks, however heavy the straggler tail.
+"""
+import math
+
+import pytest
+
+from repro.core.topology import exponential, ring
+from repro.sim import cluster as SCL
+from repro.sim import events as SE
+from repro.sim import network as SN
+from repro.sim import scenarios as SC
+
+
+# ---------------------------------------------------------------------------
+# network: the alpha-beta link model
+# ---------------------------------------------------------------------------
+
+def test_alpha_beta_cost():
+    lm = SN.LinkModel(alpha_s=1e-3, beta_Bps=1e6)
+    assert lm.transfer_seconds(0) == pytest.approx(1e-3)
+    assert lm.transfer_seconds(1_000_000) == pytest.approx(1e-3 + 1.0)
+    assert lm.occupancy_seconds(500_000) == pytest.approx(0.5)
+
+
+def test_jitter_is_deterministic_and_bounded():
+    lm = SN.LinkModel(alpha_s=0.0, beta_Bps=1e9, jitter_s=1e-3)
+    u = SN.sim_uniform(7, 1, 2, 3)
+    assert 0.0 <= u < 1.0
+    assert SN.sim_uniform(7, 1, 2, 3) == u          # pure counter hash
+    assert SN.sim_uniform(8, 1, 2, 3) != u          # seed matters
+    assert lm.transfer_seconds(0, u) <= 1e-3
+
+
+def test_heterogeneous_links_keyed_by_offset():
+    slow = SN.LinkModel(alpha_s=0.0, beta_Bps=1e6)
+    fast = SN.LinkModel(alpha_s=0.0, beta_Bps=1e9)
+    net = SN.NetworkModel(fast).with_offset_links({4: slow})
+    n = 16
+    assert net.link(0, 1, n) is fast
+    assert net.link(0, 4, n) is slow           # hop distance 4
+    assert net.link(4, 0, n) is slow           # symmetric
+    assert net.link(0, 12, n) is slow          # (0-12) % 16 = 4 the short way
+    assert net.link(0, 8, n) is fast           # hop 8 not overridden
+
+
+def test_per_edge_beats_per_offset():
+    a = SN.LinkModel(alpha_s=0.0, beta_Bps=1.0)
+    b = SN.LinkModel(alpha_s=0.0, beta_Bps=2.0)
+    c = SN.LinkModel(alpha_s=0.0, beta_Bps=3.0)
+    net = SN.NetworkModel(a, per_offset=((1, b),), per_edge=(((2, 3), c),))
+    assert net.link(2, 3, 8) is c
+    assert net.link(3, 2, 8) is c
+    assert net.link(0, 1, 8) is b
+
+
+# ---------------------------------------------------------------------------
+# cluster: straggler distributions
+# ---------------------------------------------------------------------------
+
+def test_compute_model_static_multipliers():
+    cm = SCL.ComputeModel(base_s=0.1, multipliers=(4.0,))
+    assert cm.compute_seconds(0, 0, seed=0) == pytest.approx(0.4)
+    assert cm.compute_seconds(1, 0, seed=0) == pytest.approx(0.1)
+
+
+@pytest.mark.parametrize("tail", ["exp", "pareto"])
+def test_compute_model_tails_deterministic_and_positive(tail):
+    cm = SCL.ComputeModel(base_s=0.1, tail=tail, tail_scale=1.0)
+    ts = [cm.compute_seconds(2, k, seed=5) for k in range(50)]
+    assert ts == [cm.compute_seconds(2, k, seed=5) for k in range(50)]
+    assert all(t >= 0.1 for t in ts)
+    assert len(set(ts)) > 1                    # actually stochastic
+    assert all(math.isfinite(t) for t in ts)
+
+
+def test_tail_workers_scopes_the_tail():
+    cm = SCL.ComputeModel(base_s=0.1, tail="pareto", tail_scale=2.0,
+                          tail_workers=(0,))
+    assert cm.compute_seconds(1, 3, seed=0) == pytest.approx(0.1)
+    assert cm.compute_seconds(0, 3, seed=0) > 0.1
+
+
+def test_unknown_tail_rejected():
+    with pytest.raises(ValueError):
+        SCL.ComputeModel(base_s=0.1, tail="weibull")
+
+
+# ---------------------------------------------------------------------------
+# determinism: same scenario + seed => identical trace
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", SC.list_scenarios())
+def test_sync_trace_deterministic(name):
+    sc = SC.get_scenario(name, n=8)
+    a = SE.simulate_sync_rounds(sc, bytes_per_neighbor=10_000, num_rounds=5)
+    b = SE.simulate_sync_rounds(sc, bytes_per_neighbor=10_000, num_rounds=5)
+    assert a.fingerprint() == b.fingerprint()
+    assert a.total_seconds == b.total_seconds
+    assert a.round_seconds == b.round_seconds
+    assert [e.row() for e in a.events] == [e.row() for e in b.events]
+
+
+def test_sync_trace_seed_sensitivity():
+    sc = SC.get_scenario("straggler-longtail", n=8)
+    a = SE.simulate_sync_rounds(sc, 10_000, 5)
+    b = SE.simulate_sync_rounds(sc.with_seed(1), 10_000, 5)
+    assert a.fingerprint() != b.fingerprint()
+
+
+@pytest.mark.parametrize("name", SC.list_scenarios())
+def test_async_trace_deterministic(name):
+    sc = SC.get_scenario(name, n=8)
+    a = SE.simulate_async_gossip(sc, bytes_per_exchange=1000, num_updates=60)
+    b = SE.simulate_async_gossip(sc, bytes_per_exchange=1000, num_updates=60)
+    assert a.fingerprint() == b.fingerprint()
+    assert a.total_seconds == b.total_seconds
+    assert a.staleness == b.staleness
+
+
+# ---------------------------------------------------------------------------
+# sync-round semantics
+# ---------------------------------------------------------------------------
+
+def test_sync_round_closed_form_homogeneous():
+    """No jitter, homogeneous: round = compute + m*bytes/beta + alpha."""
+    n, nbytes = 8, 100_000
+    sc = SC.Scenario(
+        name="t", topo=ring(n),
+        network=SN.NetworkModel.homogeneous(alpha_s=1e-3, beta_Bps=1e7),
+        compute=SCL.homogeneous(0.05))
+    tr = SE.simulate_sync_rounds(sc, nbytes, num_rounds=3)
+    expect = 0.05 + 2 * nbytes / 1e7 + 1e-3
+    for r in tr.round_seconds:
+        assert r == pytest.approx(expect, rel=1e-9)
+
+
+def test_sync_bytes_accounting():
+    n, m, nbytes, rounds = 8, 2, 12_345, 4
+    sc = SC.get_scenario("lan-10gbe-ring", n=n)
+    tr = SE.simulate_sync_rounds(sc, nbytes, rounds)
+    assert tr.bytes_on_wire == n * m * nbytes * rounds
+    assert tr.count(SE.TRANSFER) == n * m * rounds
+    assert tr.count(SE.ROUND) == rounds
+
+
+def test_sync_straggler_dominates_round():
+    base = SC.Scenario("t", ring(8),
+                       SN.NetworkModel.homogeneous(1e-4, 1e9),
+                       SCL.homogeneous(0.05))
+    slow = SC.Scenario("t", ring(8),
+                       SN.NetworkModel.homogeneous(1e-4, 1e9),
+                       SCL.ComputeModel(base_s=0.05, multipliers=(10.0,)))
+    t_fast = SE.simulate_sync_rounds(base, 1000, 3).total_seconds
+    t_slow = SE.simulate_sync_rounds(slow, 1000, 3).total_seconds
+    assert t_slow > 9 * t_fast          # barrier collapses to the straggler
+
+
+def test_bandwidth_starved_one_bit_beats_fp32():
+    """The headline: on starved links 1-bit wall clock << fp32 wall clock."""
+    sc = SC.get_scenario("bandwidth-starved", n=8)
+    d = 272_474                          # ResNet20 params
+    fp32 = SE.simulate_sync_rounds(sc, d * 4, 5)
+    onebit = SE.simulate_sync_rounds(sc, d // 8, 5)
+    assert onebit.total_seconds < 0.25 * fp32.total_seconds
+
+
+def test_cumulative_seconds_monotone():
+    sc = SC.get_scenario("wan-exponential", n=16)
+    tr = SE.simulate_sync_rounds(sc, 50_000, 6)
+    cum = tr.cumulative_seconds()
+    assert len(cum) == 6
+    assert all(b > a for a, b in zip(cum, cum[1:]))
+    assert cum[-1] == pytest.approx(tr.total_seconds)
+
+
+# ---------------------------------------------------------------------------
+# async AD-PSGD loop: exactly-once gossip, no deadlock
+# ---------------------------------------------------------------------------
+
+def test_async_every_gossip_processed_exactly_once():
+    sc = SC.get_scenario("lan-10gbe-ring", n=8)
+    seen = []
+    tr = SE.simulate_async_gossip(
+        sc, 1000, num_updates=120,
+        on_gossip=lambda i, j, idx: seen.append((idx, i, j)))
+    assert tr.count(SE.GOSSIP) == 120
+    assert tr.count(SE.UPDATE) == 120
+    # one callback per gossip, indices dense 0..119, edges in the topology
+    assert [s[0] for s in seen] == list(range(120))
+    offsets = {o % 8 for o in ring(8).neighbor_offsets()}
+    for _, i, j in seen:
+        assert (j - i) % 8 in offsets
+
+
+@pytest.mark.parametrize("n", [4, 8])
+def test_async_no_deadlock_under_heavy_stragglers(n):
+    """Pareto-tailed straggler 100x slower: the loop still completes and
+    every worker keeps making progress (wait-free passive peers)."""
+    sc = SC.Scenario(
+        "heavy", ring(n),
+        SN.NetworkModel.homogeneous(1e-3, 1e6),
+        SCL.ComputeModel(base_s=0.01, multipliers=(100.0,),
+                         tail="pareto", tail_scale=5.0, pareto_shape=1.05,
+                         tail_workers=(0,)))
+    tr = SE.simulate_async_gossip(sc, 5000, num_updates=150)
+    assert tr.count(SE.UPDATE) == 150      # the loop completed: no deadlock
+    by_worker = {e.worker for e in tr.events if e.kind == SE.UPDATE}
+    assert by_worker >= set(range(1, n))   # all healthy workers progress
+    # the straggler still participates passively (peers gossip with it)
+    peers = {e.peer for e in tr.events if e.kind == SE.GOSSIP}
+    assert 0 in peers
+    assert math.isfinite(tr.total_seconds)
+
+
+def test_async_staleness_tracked_and_bounded():
+    sc = SC.get_scenario("straggler-longtail", n=8)
+    tr = SE.simulate_async_gossip(sc, 1000, num_updates=200)
+    assert len(tr.staleness) == 200
+    assert tr.staleness_max >= 1            # own gossip always intervenes
+    assert tr.staleness_mean >= 1.0
+    # staleness counts model-version bumps, bounded by total events
+    assert tr.staleness_max < 2 * 200
+
+
+def test_async_bytes_credited_at_completion_only():
+    """Slow links leave gossips in flight when the loop hits num_updates;
+    only COMPLETED exchanges may be on the bytes ledger."""
+    sc = SC.Scenario("slownet", ring(8),
+                     SN.NetworkModel.homogeneous(alpha_s=1e-3, beta_Bps=1e6),
+                     SCL.homogeneous(0.001))
+    tr = SE.simulate_async_gossip(sc, bytes_per_exchange=5000,
+                                  num_updates=100)
+    assert tr.bytes_on_wire == 2 * 5000 * tr.count(SE.GOSSIP)
+    # and some computes really were left in flight (the interesting case)
+    assert tr.count(SE.COMPUTE) > tr.count(SE.GOSSIP)
+
+
+def test_async_needs_neighbors():
+    sc = SC.Scenario("solo", ring(1),
+                     SN.NetworkModel.homogeneous(1e-3, 1e9),
+                     SCL.homogeneous(0.01))
+    with pytest.raises(ValueError):
+        SE.simulate_async_gossip(sc, 100, num_updates=5)
+
+
+# ---------------------------------------------------------------------------
+# replay: CommEngine.pair_average edge by edge
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wire_bits", [("full", 8), ("moniqua", 8)])
+def test_replay_adpsgd_converges_and_prices_bytes(wire_bits):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.comm.engine import CommEngine, make_wire, FullPrecisionWire
+    from repro.core.quantizers import QuantSpec
+
+    wire, bits = wire_bits
+    codec = (FullPrecisionWire() if wire == "full"
+             else make_wire(wire, QuantSpec(bits=bits)))
+    eng = CommEngine(ring(8), codec, backend="jnp")
+    sc = SC.get_scenario("lan-10gbe-ring", n=8, compute_s=0.01)
+    x0 = jax.random.normal(jax.random.PRNGKey(0), (8, 32)) * 0.2
+    out = SE.replay_adpsgd(sc, eng, x0, lambda x, i, k: x, alpha=0.05,
+                           num_updates=200, theta=2.0)
+    # gradient flow on ||x||^2/2 contracts toward 0; gossip keeps consensus
+    assert float(jnp.mean(jnp.abs(out["X"]))) < 0.5 * float(
+        jnp.mean(jnp.abs(x0)))
+    assert out["consensus_sq"] < 0.05
+    tr = out["trace"]
+    # each pair exchange ships one payload in each direction
+    expected = 2 * codec.payload_bytes((32,))
+    assert tr.bytes_on_wire == expected * tr.count(SE.GOSSIP)
+    assert tr.total_seconds > 0
+
+
+def test_replay_deterministic():
+    import jax
+
+    from repro.comm.engine import CommEngine, FullPrecisionWire
+
+    eng = CommEngine(ring(8), FullPrecisionWire(), backend="jnp")
+    sc = SC.get_scenario("straggler-longtail", n=8, compute_s=0.01)
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (8, 16))
+    a = SE.replay_adpsgd(sc, eng, x0, lambda x, i, k: x, 0.05, 100)
+    b = SE.replay_adpsgd(sc, eng, x0, lambda x, i, k: x, 0.05, 100)
+    assert a["trace"].fingerprint() == b["trace"].fingerprint()
+    assert a["consensus_sq"] == b["consensus_sq"]
+
+
+# ---------------------------------------------------------------------------
+# scenarios registry
+# ---------------------------------------------------------------------------
+
+def test_scenario_registry_roundtrip():
+    assert set(SC.list_scenarios()) >= {
+        "lan-10gbe-ring", "wan-exponential", "straggler-longtail",
+        "bandwidth-starved"}
+    for name in SC.list_scenarios():
+        sc = SC.get_scenario(name, n=8)
+        assert sc.topo.n == 8
+        assert sc.compute.base_s > 0
+    with pytest.raises(ValueError):
+        SC.get_scenario("localhost")
+
+
+def test_wan_exponential_long_hops_slower():
+    sc = SC.get_scenario("wan-exponential", n=16)
+    short = sc.network.link(0, 1, 16)
+    long_ = sc.network.link(0, 4, 16)
+    assert long_.beta_Bps < short.beta_Bps
+    assert long_.alpha_s > short.alpha_s
+
+
+def test_scenario_with_compute_override():
+    sc = SC.get_scenario("lan-10gbe-ring", n=8).with_compute(0.123)
+    assert sc.compute.base_s == 0.123
+    assert sc.name == "lan-10gbe-ring"

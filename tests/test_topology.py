@@ -31,6 +31,50 @@ def test_exponential_beats_ring_rho():
     assert exponential(16).rho < ring(16).rho
 
 
+# --- exponential() offset-construction regressions (explicit dedupe loop) ---
+
+EXP_NS = [2, 3, 4, 6, 8, 16]
+
+
+@pytest.mark.parametrize("n", EXP_NS)
+def test_exponential_doubly_stochastic_symmetric(n):
+    W = exponential(n).matrix
+    np.testing.assert_allclose(W.sum(axis=0), 1.0, atol=1e-9)
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-9)
+    np.testing.assert_allclose(W, W.T, atol=1e-12)
+
+
+@pytest.mark.parametrize("n", EXP_NS)
+def test_exponential_offsets_symmetric_and_deduped(n):
+    topo = exponential(n)
+    residues = [o % n for o in topo.offsets]
+    # no offset appears twice mod n (the n/2 self-inverse hop in particular)
+    assert len(residues) == len(set(residues))
+    # symmetric: -o present (mod n) for every o
+    assert {(-r) % n for r in residues} == set(residues)
+
+
+@pytest.mark.parametrize("n", EXP_NS)
+def test_exponential_expected_offsets(n):
+    """Hops are exactly {0, ±2^j : 2^j <= n/2} deduped mod n."""
+    expected = {0}
+    h = 1
+    while h <= n // 2:
+        expected |= {h % n, (-h) % n}
+        h *= 2
+    assert {o % n for o in exponential(n).offsets} == expected
+
+
+@pytest.mark.parametrize("n", EXP_NS)
+def test_exponential_rho_no_worse_than_ring(n):
+    """Denser 2^j hops must not mix slower than the ring; strictly faster
+    once the graphs actually differ (n >= 6)."""
+    e, r = exponential(n).rho, ring(n).rho
+    assert e <= r + 1e-12
+    if n >= 6:
+        assert e < r - 1e-9
+
+
 def test_slack_matrix():
     """Theorem 3: W_bar = gamma W + (1-gamma) I stays doubly stochastic and
     its spectral gap scales as 1 - gamma (1 - rho)."""

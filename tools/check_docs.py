@@ -8,7 +8,9 @@ Checked references are inline code spans (`...`) that look like repo paths:
 * ``benchmarks/`` — directory must exist;
 * ``src/repro/kernels/ops.py::moniqua_encode`` /
   ``tests/test_engine.py::test_x`` — file must exist AND define the symbol
-  (its last ``.``-component appears as a word in the file).
+  (its last ``.``-component appears as a word in the file);
+* ``BENCH_network_sim.json`` — repo-root benchmark artifacts (the
+  ``BENCH_*.json`` perf trajectory) must exist at the repo root.
 
 Run from anywhere:  python tools/check_docs.py   (exit 1 on any dangling
 reference; listed one per line).  Wired into CI and tests/test_docs.py.
@@ -30,13 +32,14 @@ DOC_FILES = ["README.md"] + sorted(
 ROOTS = ("src/", "docs/", "tests/", "benchmarks/", "examples/", "tools/",
          ".github/")
 SPAN_RE = re.compile(r"`([^`\n]+)`")
+BENCH_RE = re.compile(r"^BENCH_\w+\.json$")
 
 
 def candidate(span: str) -> str | None:
     token = span.strip().split()[0] if span.strip() else ""
     if not token or any(c in token for c in "<>*$(){}="):
         return None
-    if token.startswith(ROOTS):
+    if token.startswith(ROOTS) or BENCH_RE.match(token):
         return token
     return None
 
