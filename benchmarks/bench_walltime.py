@@ -97,8 +97,40 @@ def _codec_rows(X, grad_seconds: float, quick: bool):
         slow = C.NETWORKS[-1]
         row["sim_vs_analytic"] = (row[f"sim s/step {slow.name}"]
                                   / row[f"s/step {slow.name}"])
+        # contended column: same bytes on the oversubscribed-ToR fabric,
+        # where concurrent payloads share uplink bandwidth (water-filling)
+        sc_tor = SC.get_scenario("oversubscribed-tor", n=N_WORKERS,
+                                 compute_s=grad_seconds + mix_s)
+        tor = SE.simulate_sync_rounds(sc_tor, wire_bytes // m, num_rounds=3)
+        row["sim s/step oversubscribed-tor"] = tor.mean_round_seconds
         rows.append(row)
     return rows
+
+
+def _calibration_check(codec_rows, grad_seconds: float):
+    """Fit alpha/beta back out of this run's own codec table.
+
+    The codec sweep measured 6 payload sizes on each analytic network —
+    exactly the probes ``repro.sim.calibrate`` fits.  Fitting the slowest
+    network's column must recover its bandwidth (beta = bps/8) and
+    two-message latency (alpha = 2 * latency_s): the self-consistency
+    check that the calibrated mode reproduces the constants it probed.
+    """
+    from repro.sim import calibrate as CAL
+
+    net = C.NETWORKS[-1]
+    fit = CAL.calibrate_from_walltime({"codec_table": codec_rows}, net.name,
+                                      compute_s=grad_seconds)
+    true_beta = net.bandwidth_bps / 8.0
+    true_alpha = 2.0 * net.latency_s
+    return {
+        "network": net.name,
+        "alpha_fit_s": fit.alpha_s, "alpha_true_s": true_alpha,
+        "beta_fit_Bps": fit.beta_Bps, "beta_true_Bps": true_beta,
+        "alpha_rel_err": abs(fit.alpha_s - true_alpha) / true_alpha,
+        "beta_rel_err": abs(fit.beta_Bps - true_beta) / true_beta,
+        "r2": fit.r2,
+    }
 
 
 def run(quick: bool = False) -> dict:
@@ -117,6 +149,7 @@ def run(quick: bool = False) -> dict:
     return {
         "table": rows,
         "codec_table": codec_rows,
+        "calibration": _calibration_check(codec_rows, grad_seconds),
         "fastest_on_slow_net": fastest["algorithm"],
         "fastest_codec_on_slow_net": fastest_codec["codec"],
         "notes": ("Analytic network model (DESIGN §2 change #2): "
@@ -134,7 +167,12 @@ def run(quick: bool = False) -> dict:
                   "predictions for the same bytes (sender NIC "
                   "serialization with overlapped latency); "
                   "sim_vs_analytic ~ 1 on the slowest network is the "
-                  "predicted-vs-measured agreement check."),
+                  "predicted-vs-measured agreement check. The "
+                  "'sim s/step oversubscribed-tor' column prices the same "
+                  "bytes on a contended ToR fabric (repro.sim.contention); "
+                  "'calibration' fits alpha/beta back out of this run's "
+                  "own probes via repro.sim.calibrate and reports the "
+                  "relative recovery error."),
     }
 
 

@@ -38,6 +38,23 @@ HW = {
     "ici_bw": TPU_V5E_ICI.beta_Bps,   # B/s per link (sim.network model)
 }
 
+
+def hw_with_ici(ici) -> Dict[str, float]:
+    """HW table with a calibrated interconnect bandwidth.
+
+    ``ici`` is a :class:`repro.sim.network.LinkModel` (e.g. the output of
+    a ``sim/calibrate.py`` fit on measured collective times) or a plain
+    bytes/s float.  Pass the result as ``roofline_from_compiled(..., hw=)``
+    to price the collective term on measured rather than datasheet
+    bandwidth — the ICI constant is a fit input, not a hardcode.
+    """
+    beta = getattr(ici, "beta_Bps", None)
+    if beta is None:
+        beta = float(ici)
+    if beta <= 0:
+        raise ValueError(f"ici bandwidth must be positive, got {beta}")
+    return dict(HW, ici_bw=beta)
+
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
     "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,

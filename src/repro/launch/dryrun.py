@@ -294,7 +294,9 @@ def main(argv=None) -> int:
                     choices=["auto", "jnp", "pallas"],
                     help="CommEngine backend")
     ap.add_argument("--scenario", default=None,
-                    help="repro.sim scenario name: price one gossip round "
+                    help="repro.sim scenario name (incl. contended fabrics "
+                         "like oversubscribed-tor / shared-uplink-ring and "
+                         "calibrated-from-bench): price one gossip round "
                          "of each train config on this simulated network "
                          "(see repro/sim/scenarios.py)")
     ap.add_argument("--out", default=None, help="append JSONL results here")

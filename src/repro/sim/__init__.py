@@ -17,15 +17,27 @@ cluster.  Layout:
   synchronous-round mode (D-PSGD / D2 / Moniqua) and an asynchronous
   AD-PSGD event loop that replays ``CommEngine.pair_average`` edge by
   edge with staleness tracking.
+* :mod:`repro.sim.contention` — shared-resource link scheduling: NICs and
+  switches as capacity-limited resources, max-concurrency or exact
+  progressive-filling (water-filling) bandwidth sharing, and the fluid
+  :class:`~repro.sim.contention.FlowScheduler` both event modes use to
+  serialize contended transfers.
+* :mod:`repro.sim.calibrate`  — least-squares ``alpha + bytes/beta`` fits
+  from measured ``bench_walltime`` probes (or synthetic traces), emitting
+  a :class:`~repro.sim.network.NetworkModel` the scenario catalog loads.
 * :mod:`repro.sim.scenarios` — the named scenario catalog (homogeneous
   10GbE ring, WAN exponential graph, long-tail straggler,
-  bandwidth-starved 1-bit) and factories for custom ones.
+  bandwidth-starved 1-bit, oversubscribed ToR, shared-uplink medium,
+  calibrated-from-bench) and factories for custom ones.
 
 Everything is pure Python + numpy-free arithmetic on floats, fully
 deterministic given (scenario, seed): same inputs produce an *identical*
 event trace, which ``tests/test_sim.py`` enforces.
 """
+from repro.sim.calibrate import LinkFit, fit_link, fit_network
 from repro.sim.cluster import ComputeModel
+from repro.sim.contention import (Fabric, FlowScheduler, Switch,
+                                  schedule_transfers, solve_rates)
 from repro.sim.events import (SimEvent, SimTrace, replay_adpsgd,
                               simulate_async_gossip, simulate_sync_rounds)
 from repro.sim.network import LinkModel, NetworkModel, sim_uniform
@@ -33,8 +45,10 @@ from repro.sim.scenarios import (Scenario, get_scenario, list_scenarios,
                                  scenario_from_netconfig)
 
 __all__ = [
-    "ComputeModel", "LinkModel", "NetworkModel", "Scenario", "SimEvent",
-    "SimTrace", "get_scenario", "list_scenarios", "replay_adpsgd",
-    "scenario_from_netconfig", "sim_uniform", "simulate_async_gossip",
-    "simulate_sync_rounds",
+    "ComputeModel", "Fabric", "FlowScheduler", "LinkFit", "LinkModel",
+    "NetworkModel", "Scenario", "SimEvent", "SimTrace", "Switch",
+    "fit_link", "fit_network", "get_scenario", "list_scenarios",
+    "replay_adpsgd", "scenario_from_netconfig", "schedule_transfers",
+    "sim_uniform", "simulate_async_gossip", "simulate_sync_rounds",
+    "solve_rates",
 ]

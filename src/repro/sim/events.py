@@ -21,6 +21,16 @@ The payload size comes straight from the ``CommEngine`` bytes ledger
 (``bytes_per_round / num_neighbors``), which is what makes the simulator's
 wall clock composable with any codec the engine can put on the wire.
 
+**Contended fabrics.**  A scenario may carry a
+:class:`~repro.sim.contention.Fabric` — shared NIC/switch resources with a
+bandwidth-sharing discipline.  Both modes then stop pricing transfers
+independently: the sync round hands ALL its concurrent transfers to the
+fluid solver (:func:`~repro.sim.contention.schedule_transfers`), and the
+async loop drives a live :class:`~repro.sim.contention.FlowScheduler`,
+re-solving rates whenever a flow starts or finishes (stale completion
+predictions are detected by the scheduler epoch and discarded).  With no
+fabric the PR-2 isolated-link pricing is bit-for-bit unchanged.
+
 **Asynchronous AD-PSGD** (Algorithm 3 / the analysis model of
 ``core/adpsgd.py``).  Workers free-run: compute a gradient on a snapshot of
 their model, gossip with one deterministic-randomly chosen neighbor (the
@@ -54,6 +64,8 @@ TRANSFER = "transfer"    # payload worker -> peer fully arrived
 ROUND = "round"          # barrier: every worker finished the round
 GOSSIP = "gossip"        # async: pair exchange (worker, peer) completed
 UPDATE = "update"        # async: worker applied its (stale) gradient
+FLOW = "_flow"           # heap-internal: contended-flow completion candidate
+                         # (never appears in the trace; see fabric handling)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,6 +143,7 @@ def simulate_sync_rounds(scenario, bytes_per_neighbor: int, num_rounds: int,
     """
     topo, net, comp, seed = (scenario.topo, scenario.network,
                              scenario.compute, scenario.seed)
+    fabric = getattr(scenario, "fabric", None)
     n = topo.n
     offsets = topo.neighbor_offsets()
     events: List[SimEvent] = []
@@ -144,18 +157,35 @@ def simulate_sync_rounds(scenario, bytes_per_neighbor: int, num_rounds: int,
         # arrival[i] accumulates the latest in-payload; senders serialize
         # their per-neighbor payloads on the NIC bandwidth term
         ready = [t_start + compute[i] for i in range(n)]
-        for j in range(n):
-            nic_free = t_start + compute[j]
-            for s, o in enumerate(offsets):
-                dst = (j - o) % n       # i = j - o receives FROM j = i + o
-                link = net.link(j, dst, n)
-                nic_free += link.occupancy_seconds(bytes_per_neighbor)
+        if fabric is not None:
+            # contended fabric: the round's transfers share NIC / switch
+            # capacity; the fluid solver prices them jointly
+            from repro.sim.contention import schedule_transfers
+            specs = [(t_start + compute[j], j, (j - o) % n,
+                      bytes_per_neighbor)
+                     for j in range(n) for o in offsets]
+            finishes = schedule_transfers(fabric, n, specs)
+            for (_, j, dst, nb), fin in zip(specs, finishes):
                 u = sim_uniform(seed, STREAM_NET, k, j, dst)
-                arrive = nic_free + link.alpha_s + link.jitter_s * u
+                arrive = fin + fabric.alpha_s + fabric.jitter_s * u
                 events.append(SimEvent(arrive, TRANSFER, j, peer=dst, step=k,
                                        nbytes=bytes_per_neighbor))
                 ready[dst] = max(ready[dst], arrive)
                 total_bytes += bytes_per_neighbor
+        else:
+            for j in range(n):
+                nic_free = t_start + compute[j]
+                for s, o in enumerate(offsets):
+                    dst = (j - o) % n   # i = j - o receives FROM j = i + o
+                    link = net.link(j, dst, n)
+                    nic_free += link.occupancy_seconds(bytes_per_neighbor)
+                    u = sim_uniform(seed, STREAM_NET, k, j, dst)
+                    arrive = nic_free + link.alpha_s + link.jitter_s * u
+                    events.append(SimEvent(arrive, TRANSFER, j, peer=dst,
+                                           step=k,
+                                           nbytes=bytes_per_neighbor))
+                    ready[dst] = max(ready[dst], arrive)
+                    total_bytes += bytes_per_neighbor
         t_end = max(ready)
         events.append(SimEvent(t_end, ROUND, -1, step=k))
         round_seconds.append(t_end - t_start)
@@ -200,12 +230,13 @@ def simulate_async_gossip(
     """
     topo, net, comp, seed = (scenario.topo, scenario.network,
                              scenario.compute, scenario.seed)
+    fabric = getattr(scenario, "fabric", None)
     n = topo.n
     offsets = [o % n for o in topo.neighbor_offsets()]
     if not offsets:
         raise ValueError("async gossip needs a topology with neighbors")
     events: List[SimEvent] = []
-    heap: List[Tuple[float, int, str, int]] = []   # (time, seq, kind, worker)
+    heap: List[Tuple] = []                # (time, seq, kind, worker[, extra])
     seq = 0
     # per-worker state: model version (bumped by every gossip touching the
     # worker and every applied update) and the version at gradient snapshot
@@ -218,6 +249,25 @@ def simulate_async_gossip(
     gossip_idx = 0
     updates_done = 0
 
+    # contended-fabric state: a live fluid scheduler; each gossip g is two
+    # directed flows (2g: i->j, 2g+1: j->i) crossing the full-duplex fabric
+    # concurrently.  Flow-completion predictions go on the heap tagged with
+    # the scheduler epoch; any start/finish re-solves rates and bumps the
+    # epoch, so stale predictions are recognized and dropped on pop.
+    sched = None
+    if fabric is not None:
+        from repro.sim.contention import FlowScheduler
+        sched = FlowScheduler(fabric, n)
+    flows_left: Dict[int, int] = {}       # gossip -> directed flows in flight
+    gossip_of: Dict[int, Tuple[int, int]] = {}    # gossip -> (initiator, peer)
+
+    def _push_flow_etas():
+        nonlocal seq
+        for fid in sched.active:
+            heapq.heappush(heap, (sched.eta(fid), seq, FLOW, fid,
+                                  sched.epoch))
+            seq += 1
+
     for i in range(n):
         dt = comp.compute_seconds(i, 0, seed)
         heapq.heappush(heap, (dt, seq, COMPUTE, i))
@@ -226,16 +276,42 @@ def simulate_async_gossip(
 
     t_now = 0.0
     while updates_done < num_updates and heap:
-        t_now, _, kind, i = heapq.heappop(heap)
+        t_now, _, kind, i, *extra = heapq.heappop(heap)
+        if kind == FLOW:
+            if extra[0] != sched.epoch:
+                continue                  # rates changed since prediction
+            fid = i
+            sched.finish(t_now, fid)
+            _push_flow_etas()
+            g = fid // 2
+            flows_left[g] -= 1
+            if flows_left[g] == 0:
+                del flows_left[g]
+                gi, gj = gossip_of.pop(g)
+                u = sim_uniform(seed, STREAM_NET, g, gi, gj)
+                arrive = t_now + fabric.alpha_s + fabric.jitter_s * u
+                heapq.heappush(heap, (arrive, seq, GOSSIP, gi))
+                seq += 1
+            continue
         if kind == COMPUTE:
             # gradient ready; gossip on a deterministic-random incident edge
             o = offsets[sim_randint(seed, len(offsets), STREAM_EDGE_CHOICE,
                                     i, local_step[i])]
             j = (i + o) % n
-            u = sim_uniform(seed, STREAM_NET, gossip_idx, i, j)
-            dt = net.transfer_seconds(i, j, n, bytes_per_exchange, u)
-            heapq.heappush(heap, (t_now + dt, seq, GOSSIP, i))
-            seq += 1
+            if sched is not None:
+                # both directions enter the shared fabric now; the gossip
+                # completes when the slower flow drains (+ alpha, jitter)
+                sched.start(t_now, 2 * gossip_idx, i, j, bytes_per_exchange)
+                sched.start(t_now, 2 * gossip_idx + 1, j, i,
+                            bytes_per_exchange)
+                flows_left[gossip_idx] = 2
+                gossip_of[gossip_idx] = (i, j)
+                _push_flow_etas()
+            else:
+                u = sim_uniform(seed, STREAM_NET, gossip_idx, i, j)
+                dt = net.transfer_seconds(i, j, n, bytes_per_exchange, u)
+                heapq.heappush(heap, (t_now + dt, seq, GOSSIP, i))
+                seq += 1
             pending_peer[i] = j
             events.append(SimEvent(t_now, COMPUTE, i, peer=j,
                                    step=local_step[i]))

@@ -84,6 +84,16 @@ class LinkModel:
         if self.beta_Bps <= 0:
             raise ValueError(f"beta_Bps must be positive, got {self.beta_Bps}")
 
+    def to_dict(self) -> dict:
+        return {"alpha_s": self.alpha_s, "beta_Bps": self.beta_Bps,
+                "jitter_s": self.jitter_s}
+
+    @staticmethod
+    def from_dict(d: Mapping) -> "LinkModel":
+        return LinkModel(alpha_s=float(d["alpha_s"]),
+                         beta_Bps=float(d["beta_Bps"]),
+                         jitter_s=float(d.get("jitter_s", 0.0)))
+
     def transfer_seconds(self, nbytes: int, u: float = 0.0) -> float:
         """``alpha + bytes/beta`` plus the jitter draw ``jitter * u``."""
         return self.alpha_s + nbytes / self.beta_Bps + self.jitter_s * u
@@ -130,6 +140,23 @@ class NetworkModel:
     def transfer_seconds(self, src: int, dst: int, n: int, nbytes: int,
                          u: float = 0.0) -> float:
         return self.link(src, dst, n).transfer_seconds(nbytes, u)
+
+    def to_dict(self) -> dict:
+        """JSON-friendly form (``sim/calibrate.py`` emits and loads these)."""
+        return {
+            "default": self.default.to_dict(),
+            "per_offset": [[o, lm.to_dict()] for o, lm in self.per_offset],
+            "per_edge": [[list(e), lm.to_dict()] for e, lm in self.per_edge],
+        }
+
+    @staticmethod
+    def from_dict(d: Mapping) -> "NetworkModel":
+        return NetworkModel(
+            default=LinkModel.from_dict(d["default"]),
+            per_offset=tuple((int(o), LinkModel.from_dict(lm))
+                             for o, lm in d.get("per_offset", ())),
+            per_edge=tuple(((int(e[0]), int(e[1])), LinkModel.from_dict(lm))
+                           for e, lm in d.get("per_edge", ())))
 
 
 # ---------------------------------------------------------------------------

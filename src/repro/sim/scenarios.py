@@ -24,6 +24,24 @@ claims span:
     25 Mbit/s, 5 ms links (Fig. 1's worst network, further starved):
     fp32 payloads dominate the round; Moniqua's 1-bit wire is the
     headline win here.
+``oversubscribed-tor``
+    Same 10 GbE NICs as the LAN control, but workers are spread
+    round-robin across two racks whose ToR uplinks carry only 100 Mbit/s
+    — every ring edge crosses a rack boundary, so the round's 16
+    concurrent transfers share two uplinks (water-filling fair share).
+    The fp32 payloads saturate the fabric and slow *each other* down;
+    the 1-bit wire barely notices — contention widens the wall-clock gap
+    beyond what any isolated link predicts.
+``shared-uplink-ring``
+    All workers behind one half-duplex 300 Mbit/s shared medium: the
+    maximally contended regime (every transfer, both directions, one
+    resource).
+``calibrated-from-bench``
+    Links are not datasheet constants but an alpha-beta fit
+    (``sim/calibrate.py``) on measured probe times — by default synthetic
+    probes of Fig. 1's worst network, or a ``NetworkModel`` JSON emitted
+    by ``python -m repro.sim.calibrate`` (pass ``model_path`` or set
+    ``REPRO_SIM_NETMODEL``).
 
 Factories take ``n`` so benchmarks can match the scenario to their
 worker count; ``get_scenario(name, n=...)`` is the registry entry point.
@@ -31,10 +49,13 @@ worker count; ``get_scenario(name, n=...)`` is the registry entry point.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Callable, Dict, Optional, Tuple
 
 from repro.core.topology import Topology, exponential, ring
 from repro.sim.cluster import ComputeModel, homogeneous, one_straggler
+from repro.sim.contention import (Fabric, oversubscribed_fabric,
+                                  shared_medium_fabric)
 from repro.sim.network import LinkModel, NetworkModel, gbit, mbit
 
 # default local-step cost: ResNet20-scale fwd+bwd on a P100 at batch 128
@@ -44,13 +65,21 @@ DEFAULT_COMPUTE_S = 0.05
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """Everything one simulation run needs, as a frozen value object."""
+    """Everything one simulation run needs, as a frozen value object.
+
+    ``fabric`` (optional) switches the event engine from isolated
+    per-link pricing to shared-resource contention scheduling — see
+    :mod:`repro.sim.contention`.  ``network`` stays populated either way:
+    it is the isolated-link twin of the same hardware, used by code paths
+    that want the uncontended baseline.
+    """
     name: str
     topo: Topology
     network: NetworkModel
     compute: ComputeModel
     seed: int = 0
     description: str = ""
+    fabric: Optional[Fabric] = None
 
     def with_compute(self, base_s: float) -> "Scenario":
         """Same scenario, different per-step compute cost (e.g. measured)."""
@@ -120,11 +149,130 @@ def bandwidth_starved(n: int = 8, compute_s: float = DEFAULT_COMPUTE_S,
                     "1-bit wire's headline scenario")
 
 
+def oversubscribed_tor(n: int = 8, compute_s: float = DEFAULT_COMPUTE_S,
+                       seed: int = 0) -> Scenario:
+    """LAN NICs, starved rack uplinks: contention is the whole story.
+
+    Workers sit on two racks round-robin (worker i -> rack i % 2), the
+    adversarial placement for a ring: *every* gossip edge crosses a rack
+    boundary, so all 2n concurrent transfers of a round squeeze through
+    the two 100 Mbit/s ToR uplinks while the 10 GbE NICs sit idle.
+    Compare against ``lan-10gbe-ring`` — identical NICs, alpha, jitter
+    and compute; the only difference is the shared fabric.
+    """
+    nic = gbit(10.0)
+    return Scenario(
+        name="oversubscribed-tor",
+        topo=ring(n),
+        network=NetworkModel.homogeneous(alpha_s=50e-6, beta_Bps=nic,
+                                         jitter_s=10e-6),
+        compute=homogeneous(compute_s),
+        seed=seed,
+        fabric=oversubscribed_fabric(n, nic_Bps=nic, uplink_Bps=mbit(100.0),
+                                     num_groups=2, interleave=True,
+                                     alpha_s=50e-6, jitter_s=10e-6),
+        description="10 GbE NICs, two racks with 100 Mbit/s ToR uplinks, "
+                    "round-robin placement: every ring edge crosses a "
+                    "rack; concurrent fp32 payloads contend on the "
+                    "uplinks (water-filling fair share)")
+
+
+def lan_1gbe_ring(n: int = 8, compute_s: float = DEFAULT_COMPUTE_S,
+                  seed: int = 0) -> Scenario:
+    """Isolated 1 GbE ring: the uncontended twin of shared-uplink-ring.
+
+    Identical NICs, alpha, jitter and compute — the only difference is
+    that transfers do NOT share a medium, so comparing the two isolates
+    contention (the pairing ``bench_network_sim``'s contention summary
+    and ``tools/check_bench.py`` guard).
+    """
+    return Scenario(
+        name="lan-1gbe-ring",
+        topo=ring(n),
+        network=NetworkModel.homogeneous(alpha_s=0.15e-3,
+                                         beta_Bps=gbit(1.0),
+                                         jitter_s=20e-6),
+        compute=homogeneous(compute_s),
+        seed=seed,
+        description="isolated 1 GbE ring (no shared fabric): the "
+                    "uncontended twin of shared-uplink-ring")
+
+
+def shared_uplink_ring(n: int = 8, compute_s: float = DEFAULT_COMPUTE_S,
+                       seed: int = 0) -> Scenario:
+    """One half-duplex shared medium carries every transfer."""
+    nic = gbit(1.0)
+    return Scenario(
+        name="shared-uplink-ring",
+        topo=ring(n),
+        network=NetworkModel.homogeneous(alpha_s=0.15e-3, beta_Bps=nic,
+                                         jitter_s=20e-6),
+        compute=homogeneous(compute_s),
+        seed=seed,
+        fabric=shared_medium_fabric(nic_Bps=nic, bus_Bps=mbit(300.0),
+                                    alpha_s=0.15e-3, jitter_s=20e-6),
+        description="1 GbE NICs behind one half-duplex 300 Mbit/s shared "
+                    "medium: all transfers, both directions, contend for "
+                    "a single resource")
+
+
+# synthetic calibration probes: Fig. 1's worst network (100 Mbit/s, 5 ms)
+# measured at the wire sizes the codec sweep actually ships
+_CAL_TRUE_ALPHA_S = 2 * 5e-3            # two messages' latency per round
+_CAL_TRUE_BETA_BPS = 100e6 / 8.0
+_CAL_PROBE_SIZES = (28_752, 230_016, 230_112, 575_040, 920_064, 2_300_160)
+
+
+def calibrated_from_bench(n: int = 8, compute_s: float = DEFAULT_COMPUTE_S,
+                          seed: int = 0,
+                          model_path: Optional[str] = None) -> Scenario:
+    """Links fitted from measurements, not quoted from a datasheet.
+
+    If ``model_path`` (or ``$REPRO_SIM_NETMODEL``) names a ``NetworkModel``
+    JSON emitted by ``python -m repro.sim.calibrate``, load it (a named
+    path that does not exist raises — no silent fallback); otherwise
+    self-calibrate deterministically on synthetic probes of Fig. 1's worst
+    network — the fit must recover alpha/beta within 5%
+    (``tests/test_contention.py``), so the scenario's behavior matches the
+    closed-form constants it was probed from.
+    """
+    from repro.sim import calibrate as CAL
+
+    path = model_path or os.environ.get("REPRO_SIM_NETMODEL", "")
+    if path:
+        # an explicitly named model must exist — a typo'd path silently
+        # falling back to synthetic constants would defeat calibration
+        if not os.path.exists(path):
+            raise FileNotFoundError(
+                f"calibrated-from-bench: network model {path!r} not found "
+                "(from model_path or $REPRO_SIM_NETMODEL)")
+        net = CAL.load_network_model(path)
+        source = os.path.basename(path)
+    else:
+        fit = CAL.fit_link(CAL.synthetic_samples(
+            _CAL_TRUE_ALPHA_S, _CAL_TRUE_BETA_BPS, _CAL_PROBE_SIZES,
+            seed=seed))
+        net = NetworkModel(fit.link())
+        source = "synthetic Fig.1 probes"
+    return Scenario(
+        name="calibrated-from-bench",
+        topo=ring(n),
+        network=net,
+        compute=homogeneous(compute_s),
+        seed=seed,
+        description=f"alpha-beta links least-squares fitted ({source}) "
+                    "via sim/calibrate.py instead of datasheet constants")
+
+
 _REGISTRY: Dict[str, Callable[..., Scenario]] = {
     "lan-10gbe-ring": lan_10gbe_ring,
     "wan-exponential": wan_exponential,
     "straggler-longtail": straggler_longtail,
     "bandwidth-starved": bandwidth_starved,
+    "lan-1gbe-ring": lan_1gbe_ring,
+    "oversubscribed-tor": oversubscribed_tor,
+    "shared-uplink-ring": shared_uplink_ring,
+    "calibrated-from-bench": calibrated_from_bench,
 }
 
 

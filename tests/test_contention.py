@@ -1,0 +1,364 @@
+"""Contention + calibration contracts (repro.sim.contention / .calibrate).
+
+The promises the contended, self-calibrating simulator makes:
+
+1. **Water-filling exactness** — saturated resources are used to exactly
+   their capacity, every flow gets a positive rate, and the allocation is
+   independent of flow insertion order.
+2. **Contention only hurts** — a contended round is never faster than the
+   same round on isolated links; a fabric with no shared switches
+   reproduces the isolated closed form on a symmetric gossip round.
+3. **Calibration round-trips** — least-squares fitting on times generated
+   by ``alpha + n/beta`` recovers both parameters within 5%, and the
+   emitted ``NetworkModel`` JSON loads back identically.
+"""
+import math
+
+import pytest
+
+from repro.core.topology import ring
+from repro.sim import calibrate as CAL
+from repro.sim import cluster as SCL
+from repro.sim import contention as CT
+from repro.sim import events as SE
+from repro.sim import network as SN
+from repro.sim import scenarios as SC
+
+
+# ---------------------------------------------------------------------------
+# rate solving: water-filling and max-concurrency
+# ---------------------------------------------------------------------------
+
+def _cap(table):
+    return lambda r: table[r]
+
+
+def test_water_filling_sums_to_capacity():
+    # three flows through one 90 B/s bottleneck, fat NICs
+    caps = {"tx:0": 1e3, "tx:1": 1e3, "tx:2": 1e3, "sw:b:shared": 90.0,
+            "rx:3": 1e3}
+    paths = {i: (f"tx:{i}", "sw:b:shared", "rx:3") for i in range(3)}
+    rates = CT.solve_rates(paths, _cap(caps))
+    assert sum(rates.values()) == pytest.approx(90.0)
+    for r in rates.values():
+        assert r == pytest.approx(30.0)
+
+
+def test_water_filling_max_min_fairness():
+    # flow 0 is also bottlenecked on its own slow NIC: it freezes early
+    # and the shared-switch capacity it cannot use goes to flow 1
+    caps = {"tx:0": 10.0, "tx:1": 1e3, "sw:b:shared": 100.0,
+            "rx:2": 1e3, "rx:3": 1e3}
+    paths = {0: ("tx:0", "sw:b:shared", "rx:2"),
+             1: ("tx:1", "sw:b:shared", "rx:3")}
+    rates = CT.solve_rates(paths, _cap(caps))
+    assert rates[0] == pytest.approx(10.0)
+    assert rates[1] == pytest.approx(90.0)      # work-conserving
+    assert sum(rates.values()) == pytest.approx(100.0)
+
+
+def test_water_filling_order_invariant():
+    caps = {f"tx:{i}": 50.0 + 7 * i for i in range(6)}
+    caps["sw:u:shared"] = 120.0
+    caps.update({f"rx:{i}": 1e3 for i in range(6)})
+    paths = {i: (f"tx:{i}", "sw:u:shared", f"rx:{i}") for i in range(6)}
+    fwd = CT.solve_rates(paths, _cap(caps))
+    rev = CT.solve_rates(dict(reversed(list(paths.items()))), _cap(caps))
+    for i in range(6):
+        assert fwd[i] == pytest.approx(rev[i])
+
+
+def test_max_concurrency_pessimistic_but_positive():
+    caps = {"tx:0": 10.0, "tx:1": 1e3, "sw:b:shared": 100.0,
+            "rx:2": 1e3, "rx:3": 1e3}
+    paths = {0: ("tx:0", "sw:b:shared", "rx:2"),
+             1: ("tx:1", "sw:b:shared", "rx:3")}
+    rates = CT.solve_rates(paths, _cap(caps), CT.MAX_CONCURRENCY)
+    # equal split of the most contended resource: no work conservation
+    assert rates[0] == pytest.approx(10.0)
+    assert rates[1] == pytest.approx(50.0)
+    wf = CT.solve_rates(paths, _cap(caps), CT.WATER_FILLING)
+    for f in paths:
+        assert 0.0 < rates[f] <= wf[f] + 1e-12
+
+
+def test_solve_rates_rejects_unknown_mode_and_empty():
+    with pytest.raises(ValueError):
+        CT.solve_rates({0: ("tx:0",)}, _cap({"tx:0": 1.0}), "tcp-reno")
+    assert CT.solve_rates({}, _cap({})) == {}
+
+
+# ---------------------------------------------------------------------------
+# fabric topology: which resources a flow traverses
+# ---------------------------------------------------------------------------
+
+def test_switch_crossing_semantics():
+    sw = CT.Switch("tor0", 1e6, members=(0, 2, 4, 6))
+    assert sw.resources(0, 1, 8) == ("sw:tor0:up",)      # leaving the rack
+    assert sw.resources(1, 0, 8) == ("sw:tor0:down",)    # entering
+    assert sw.resources(0, 2, 8) == ()                   # intra-rack
+    assert sw.resources(1, 3, 8) == ()                   # both outside
+    bus = CT.Switch("bus", 1e6)
+    assert bus.resources(0, 1, 8) == ("sw:bus:shared",)
+    assert bus.resources(5, 2, 8) == ("sw:bus:shared",)
+
+
+def test_fabric_path_and_capacity():
+    fab = CT.oversubscribed_fabric(8, nic_Bps=1e9, uplink_Bps=1e8)
+    p = fab.path(0, 1, 8)
+    assert p[0] == "tx:0" and p[-1] == "rx:1"
+    assert "sw:tor0:up" in p and "sw:tor1:down" in p
+    assert fab.capacity("tx:5") == 1e9
+    assert fab.capacity("sw:tor1:down") == 1e8
+    with pytest.raises(KeyError):
+        fab.capacity("sw:nope:up")
+    with pytest.raises(ValueError):
+        CT.Fabric(nic_Bps=1e9, mode="tcp-reno")
+    with pytest.raises(ValueError):
+        CT.Switch("s", 0.0)
+
+
+def test_tor_groups_partition():
+    inter = CT.tor_groups(8, 2, interleave=True)
+    assert inter == ((0, 2, 4, 6), (1, 3, 5, 7))
+    block = CT.tor_groups(8, 2, interleave=False)
+    assert block == ((0, 1, 2, 3), (4, 5, 6, 7))
+    assert sorted(sum(CT.tor_groups(7, 3), ())) == list(range(7))
+
+
+# ---------------------------------------------------------------------------
+# the fluid scheduler
+# ---------------------------------------------------------------------------
+
+def test_flow_scheduler_serializes_on_shared_medium():
+    fab = CT.shared_medium_fabric(nic_Bps=1e3, bus_Bps=100.0)
+    sched = CT.FlowScheduler(fab, 4)
+    sched.start(0.0, 0, 0, 1, 100.0)
+    assert sched.eta(0) == pytest.approx(1.0)           # alone: full rate
+    e0 = sched.epoch
+    sched.start(0.5, 1, 2, 3, 100.0)
+    assert sched.epoch > e0                             # stale predictions
+    # flow 0 drained 50 B alone, then shares: 50 B left at 50 B/s
+    assert sched.eta(0) == pytest.approx(1.5)
+    assert sched.eta(1) == pytest.approx(2.5)
+    sched.finish(1.5, 0)
+    assert sched.eta(1) == pytest.approx(2.0)           # back to full rate
+
+
+def test_schedule_transfers_matches_hand_computation():
+    fab = CT.shared_medium_fabric(nic_Bps=1e3, bus_Bps=100.0)
+    fin = CT.schedule_transfers(
+        fab, 4, [(0.0, 0, 1, 100.0), (0.5, 2, 3, 100.0)])
+    assert fin[0] == pytest.approx(1.5)
+    assert fin[1] == pytest.approx(2.0)
+
+
+def test_contended_round_never_faster_than_isolated():
+    """Core contract: adding shared switches can only add time."""
+    n, nbytes = 8, 250_000
+    base = SC.Scenario(
+        "iso", ring(n),
+        SN.NetworkModel.homogeneous(alpha_s=1e-4, beta_Bps=1e8),
+        SCL.homogeneous(0.01),
+        fabric=CT.isolated_fabric(1e8, alpha_s=1e-4))
+    for uplink in (1e8, 1e7, 1e6):
+        cont = SC.Scenario(
+            "tor", ring(n),
+            SN.NetworkModel.homogeneous(alpha_s=1e-4, beta_Bps=1e8),
+            SCL.homogeneous(0.01),
+            fabric=CT.oversubscribed_fabric(n, nic_Bps=1e8,
+                                            uplink_Bps=uplink,
+                                            alpha_s=1e-4))
+        t_iso = SE.simulate_sync_rounds(base, nbytes, 3).total_seconds
+        t_con = SE.simulate_sync_rounds(cont, nbytes, 3).total_seconds
+        assert t_con >= t_iso - 1e-12
+
+
+def test_fabric_without_switches_matches_isolated_closed_form():
+    """Symmetric ring round: fluid sharing == serialized NIC sends."""
+    n, nbytes = 8, 100_000
+    iso = SC.Scenario(
+        "iso", ring(n),
+        SN.NetworkModel.homogeneous(alpha_s=1e-3, beta_Bps=1e7),
+        SCL.homogeneous(0.05))
+    fab = SC.Scenario(
+        "fab", ring(n),
+        SN.NetworkModel.homogeneous(alpha_s=1e-3, beta_Bps=1e7),
+        SCL.homogeneous(0.05),
+        fabric=CT.isolated_fabric(1e7, alpha_s=1e-3))
+    t_iso = SE.simulate_sync_rounds(iso, nbytes, 3)
+    t_fab = SE.simulate_sync_rounds(fab, nbytes, 3)
+    expect = 0.05 + 2 * nbytes / 1e7 + 1e-3
+    for r in t_fab.round_seconds:
+        assert r == pytest.approx(expect, rel=1e-9)
+    assert t_fab.total_seconds == pytest.approx(t_iso.total_seconds,
+                                                rel=1e-9)
+    assert t_fab.bytes_on_wire == t_iso.bytes_on_wire
+
+
+@pytest.mark.parametrize("mode", CT.SHARING_MODES)
+def test_async_contended_liveness_and_determinism(mode):
+    n = 8
+    sc = SC.Scenario(
+        "cont-async", ring(n),
+        SN.NetworkModel.homogeneous(alpha_s=1e-4, beta_Bps=1e8),
+        SCL.homogeneous(0.005),
+        fabric=CT.shared_medium_fabric(nic_Bps=1e8, bus_Bps=1e6,
+                                       alpha_s=1e-4, mode=mode))
+    a = SE.simulate_async_gossip(sc, bytes_per_exchange=20_000,
+                                 num_updates=80)
+    b = SE.simulate_async_gossip(sc, bytes_per_exchange=20_000,
+                                 num_updates=80)
+    assert a.count(SE.UPDATE) == 80                     # no deadlock
+    assert a.fingerprint() == b.fingerprint()
+    assert a.bytes_on_wire == 2 * 20_000 * a.count(SE.GOSSIP)
+    assert math.isfinite(a.total_seconds)
+    # the shared medium really throttles: slower than the isolated twin
+    iso = SC.Scenario("iso-async", ring(n), sc.network, sc.compute)
+    t_iso = SE.simulate_async_gossip(iso, 20_000, 80).total_seconds
+    assert a.total_seconds > t_iso
+
+
+# ---------------------------------------------------------------------------
+# calibration: least-squares alpha-beta fits
+# ---------------------------------------------------------------------------
+
+def test_fit_recovers_exact_line():
+    fit = CAL.fit_link(CAL.synthetic_samples(2e-3, 12.5e6,
+                                             (10_000, 10**5, 10**6, 10**7)))
+    assert fit.alpha_s == pytest.approx(2e-3, rel=1e-9)
+    assert fit.beta_Bps == pytest.approx(12.5e6, rel=1e-9)
+    assert fit.r2 == pytest.approx(1.0)
+
+
+@pytest.mark.parametrize("alpha,beta", [(5e-3, 100e6 / 8),
+                                        (0.15e-3, 1e9 / 8),
+                                        (20e-3, 25e6 / 8)])
+def test_fit_round_trips_within_5pct_under_jitter(alpha, beta):
+    """The acceptance contract: noisy synthetic traces, <= 5% error."""
+    sizes = tuple(int(x) for x in (2e4, 1e5, 3e5, 1e6, 3e6, 1e7))
+    samples = CAL.synthetic_samples(alpha, beta, sizes,
+                                    jitter_s=0.1 * alpha, seed=3)
+    fit = CAL.fit_link(samples)
+    assert abs(fit.alpha_s - alpha) / alpha < 0.05
+    assert abs(fit.beta_Bps - beta) / beta < 0.05
+    assert fit.n_samples == len(sizes)
+
+
+def test_fit_network_per_offset():
+    short = CAL.synthetic_samples(1e-3, 1e8, (10**4, 10**5, 10**6))
+    long_ = CAL.synthetic_samples(40e-3, 1e7, (10**4, 10**5, 10**6))
+    net = CAL.fit_network({1: short, 4: long_})
+    assert net.link(0, 1, 16).beta_Bps == pytest.approx(1e8, rel=1e-6)
+    assert net.link(0, 4, 16).alpha_s == pytest.approx(40e-3, rel=1e-6)
+    # unmatched hops fall back to the pooled default
+    assert net.link(0, 8, 16) is net.default
+
+
+def test_fit_rejects_degenerate_samples():
+    with pytest.raises(ValueError):
+        CAL.fit_link([(1000.0, 0.1)])
+    with pytest.raises(ValueError):
+        CAL.fit_link([(1000.0, 0.1), (1000.0, 0.2)])    # one payload size
+    with pytest.raises(ValueError):
+        CAL.fit_link([(1000.0, 0.5), (10_000.0, 0.1)])  # shrinking times
+
+
+def test_network_model_json_round_trip(tmp_path):
+    net = SN.NetworkModel(
+        SN.LinkModel(1e-3, 1e8, 1e-5)).with_offset_links(
+        {4: SN.LinkModel(2e-3, 5e7)})
+    path = tmp_path / "net.json"
+    CAL.save_network_model(net, str(path), meta={"source": "test"})
+    loaded = CAL.load_network_model(str(path))
+    assert loaded == net
+
+
+def test_calibrate_from_walltime_rows():
+    # synthetic codec_table in the bench_walltime shape: the fit must see
+    # through the per-row measured mix time to the pure network term
+    lat, bw = 5e-3, 100e6
+    rows = []
+    for nbytes, mix_ms in [(2e4, 0.8), (2e5, 1.1), (1e6, 2.3), (2e6, 4.0)]:
+        comm = nbytes * 8.0 / bw + 2 * lat
+        rows.append({"wire_bytes_per_step": nbytes,
+                     "mix_ms_measured": mix_ms,
+                     "s/step 100Mbps-5ms": 0.05 + mix_ms / 1e3 + comm})
+    fit = CAL.calibrate_from_walltime({"codec_table": rows}, "100Mbps-5ms",
+                                      compute_s=0.05)
+    assert fit.alpha_s == pytest.approx(2 * lat, rel=1e-6)
+    assert fit.beta_Bps == pytest.approx(bw / 8.0, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# scenario catalog + acceptance claims
+# ---------------------------------------------------------------------------
+
+def test_new_scenarios_registered():
+    names = set(SC.list_scenarios())
+    assert {"oversubscribed-tor", "shared-uplink-ring",
+            "calibrated-from-bench"} <= names
+    for name in ("oversubscribed-tor", "shared-uplink-ring"):
+        sc = SC.get_scenario(name, n=8)
+        assert sc.fabric is not None
+        assert sc.fabric.mode == CT.WATER_FILLING
+
+
+def test_oversubscribed_tor_widens_fp32_gap():
+    """Acceptance: same NICs, shared uplinks => the fp32-vs-1bit round
+    ratio grows well beyond the isolated-link scenario's."""
+    fp32_b, onebit_b = 460_032, 14_376      # tiny-LM bytes/neighbor
+    ratios = {}
+    for name in ("lan-10gbe-ring", "oversubscribed-tor"):
+        sc = SC.get_scenario(name, n=8)
+        t32 = SE.simulate_sync_rounds(sc, fp32_b, 3).mean_round_seconds
+        t1 = SE.simulate_sync_rounds(sc, onebit_b, 3).mean_round_seconds
+        ratios[name] = t32 / t1
+    assert ratios["oversubscribed-tor"] > 2 * ratios["lan-10gbe-ring"]
+    assert ratios["oversubscribed-tor"] > 3.0
+
+
+def test_calibrated_scenario_matches_probed_constants():
+    sc = SC.get_scenario("calibrated-from-bench", n=8)
+    lm = sc.network.default
+    assert abs(lm.alpha_s - SC._CAL_TRUE_ALPHA_S) / SC._CAL_TRUE_ALPHA_S \
+        < 0.05
+    assert abs(lm.beta_Bps - SC._CAL_TRUE_BETA_BPS) / SC._CAL_TRUE_BETA_BPS \
+        < 0.05
+
+
+def test_calibrated_scenario_loads_model_file(tmp_path):
+    net = SN.NetworkModel(SN.LinkModel(7e-3, 9e6))
+    path = tmp_path / "model.json"
+    CAL.save_network_model(net, str(path))
+    sc = SC.calibrated_from_bench(n=8, model_path=str(path))
+    assert sc.network == net
+
+
+def test_calibrated_scenario_rejects_missing_model_path(tmp_path):
+    """An explicitly named model must exist — no silent synthetic
+    fallback that would defeat calibration."""
+    with pytest.raises(FileNotFoundError):
+        SC.calibrated_from_bench(n=8,
+                                 model_path=str(tmp_path / "typo.json"))
+
+
+def test_shared_uplink_isolated_twin_matches():
+    """lan-1gbe-ring shares NIC/alpha/jitter/compute with
+    shared-uplink-ring so their comparison isolates contention."""
+    iso = SC.get_scenario("lan-1gbe-ring", n=8)
+    con = SC.get_scenario("shared-uplink-ring", n=8)
+    assert iso.fabric is None and con.fabric is not None
+    assert iso.network == con.network
+    assert iso.compute == con.compute
+
+
+def test_roofline_ici_calibratable():
+    from repro.analysis import roofline as RL
+    hw = RL.hw_with_ici(SN.LinkModel(alpha_s=0.0, beta_Bps=42e9))
+    assert hw["ici_bw"] == 42e9
+    assert hw["peak_flops"] == RL.HW["peak_flops"]
+    assert RL.hw_with_ici(13e9)["ici_bw"] == 13e9
+    assert RL.HW["ici_bw"] == SN.TPU_V5E_ICI.beta_Bps   # default untouched
+    with pytest.raises(ValueError):
+        RL.hw_with_ici(0.0)

@@ -184,6 +184,41 @@ def test_cumulative_seconds_monotone():
     assert cum[-1] == pytest.approx(tr.total_seconds)
 
 
+def test_sync_contended_bytes_accounting_unchanged():
+    """Contention reprices time, never bytes: the wire ledger is identical
+    between a contended scenario and the isolated formula."""
+    n, m, nbytes, rounds = 8, 2, 12_345, 4
+    sc = SC.get_scenario("oversubscribed-tor", n=n)
+    assert sc.fabric is not None
+    tr = SE.simulate_sync_rounds(sc, nbytes, rounds)
+    assert tr.bytes_on_wire == n * m * nbytes * rounds
+    assert tr.count(SE.TRANSFER) == n * m * rounds
+
+
+def test_sync_contended_round_not_faster_than_isolated_twin():
+    """oversubscribed-tor shares NIC/alpha/compute with lan-10gbe-ring;
+    the shared uplinks can only add time (repro.sim.contention)."""
+    for nbytes in (1_000, 100_000, 1_000_000):
+        t_iso = SE.simulate_sync_rounds(
+            SC.get_scenario("lan-10gbe-ring", n=8), nbytes, 3).total_seconds
+        t_con = SE.simulate_sync_rounds(
+            SC.get_scenario("oversubscribed-tor", n=8), nbytes,
+            3).total_seconds
+        assert t_con >= t_iso - 1e-12
+
+
+@pytest.mark.parametrize("name", ["oversubscribed-tor", "shared-uplink-ring"])
+def test_contended_seed_sensitivity(name):
+    """Determinism contract extends to fabric scenarios: jitter draws key
+    off the seed, identical otherwise."""
+    sc = SC.get_scenario(name, n=8)
+    a = SE.simulate_sync_rounds(sc, 50_000, 4)
+    b = SE.simulate_sync_rounds(sc.with_seed(1), 50_000, 4)
+    c = SE.simulate_sync_rounds(sc, 50_000, 4)
+    assert a.fingerprint() == c.fingerprint()
+    assert a.fingerprint() != b.fingerprint()
+
+
 # ---------------------------------------------------------------------------
 # async AD-PSGD loop: exactly-once gossip, no deadlock
 # ---------------------------------------------------------------------------

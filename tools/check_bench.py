@@ -1,0 +1,131 @@
+#!/usr/bin/env python3
+"""Benchmark regression gate: smoke run vs the committed perf trajectory.
+
+CI's ``bench-smoke`` job produces ``BENCH_network_sim.smoke.json`` on every
+push; this script compares it against the committed full-run
+``BENCH_network_sim.json`` and fails (exit 1) when the simulator's pricing
+drifts, so a regression in the contention/link models cannot land silently.
+
+What is compared — smoke runs use a smaller model, so raw round times and
+speedups are NOT comparable across the two files.  The invariant that is:
+the **marginal wire seconds per byte** each scenario charges,
+
+    slope = (round_s(fp32) - round_s(moniqua-1bit))
+            / (bytes(fp32) - bytes(moniqua-1bit))
+
+which cancels the compute term and the model size, leaving the scenario's
+effective bandwidth pricing (1/beta for isolated links, the fair-share
+rate for contended fabrics).  Checks:
+
+1. every scenario in the smoke table exists in the reference table;
+2. per-scenario slope drift <= --tol (default 25% relative);
+3. the reference still covers the required contention scenarios and
+   carries a positive headline speedup with loss within tolerance.
+
+Usage:  python tools/check_bench.py \\
+            [--smoke BENCH_network_sim.smoke.json] \\
+            [--ref BENCH_network_sim.json] [--tol 0.25]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+REQUIRED_SCENARIOS = ("bandwidth-starved", "oversubscribed-tor",
+                      "shared-uplink-ring", "calibrated-from-bench")
+# every contended scenario must carry a contention-summary row in the
+# reference — an empty `contention` list must fail, not pass vacuously
+CONTENTION_SCENARIOS = ("oversubscribed-tor", "shared-uplink-ring")
+BASE_CODEC, FAST_CODEC = "fp32", "moniqua-1bit"
+
+
+def wire_slope(table: list, scenario: str) -> float | None:
+    """Marginal wire seconds/byte between the fp32 and 1-bit rows."""
+    rows = {r["codec"]: r for r in table if r["scenario"] == scenario}
+    f, q = rows.get(BASE_CODEC), rows.get(FAST_CODEC)
+    if not (f and q):
+        return None
+    db = f["bytes_per_round"] - q["bytes_per_round"]
+    if db <= 0:
+        return None
+    return (f["mean_round_s"] - q["mean_round_s"]) / db
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke",
+                    default=os.path.join(REPO, "BENCH_network_sim.smoke.json"))
+    ap.add_argument("--ref",
+                    default=os.path.join(REPO, "BENCH_network_sim.json"))
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="max relative drift of per-scenario wire slope")
+    args = ap.parse_args(argv)
+
+    with open(args.smoke) as f:
+        smoke = json.load(f)
+    with open(args.ref) as f:
+        ref = json.load(f)
+
+    errors: list[str] = []
+    ref_scenarios = {r["scenario"] for r in ref["table"]}
+    smoke_scenarios = sorted({r["scenario"] for r in smoke["table"]})
+
+    for name in REQUIRED_SCENARIOS:
+        if name not in ref_scenarios:
+            errors.append(f"reference is missing required scenario {name!r}")
+
+    for name in smoke_scenarios:
+        if name not in ref_scenarios:
+            errors.append(f"smoke scenario {name!r} missing from reference")
+            continue
+        s_slope = wire_slope(smoke["table"], name)
+        r_slope = wire_slope(ref["table"], name)
+        if s_slope is None or r_slope is None:
+            errors.append(f"{name}: cannot form {BASE_CODEC} vs {FAST_CODEC} "
+                          "wire slope (missing codec rows?)")
+            continue
+        drift = abs(s_slope - r_slope) / abs(r_slope)
+        status = "FAIL" if drift > args.tol else "ok"
+        print(f"{name}: wire slope smoke={s_slope:.3e} ref={r_slope:.3e} "
+              f"drift={drift:.1%} [{status}]")
+        if drift > args.tol:
+            errors.append(f"{name}: wire-slope drift {drift:.1%} "
+                          f"exceeds {args.tol:.0%}")
+
+    head = ref.get("headline") or {}
+    if not head.get("speedup_x") or head["speedup_x"] <= 1.0:
+        errors.append("reference headline speedup missing or <= 1.0x")
+    elif not head.get("loss_within_tol"):
+        errors.append("reference headline reached speedup outside the "
+                      "loss tolerance")
+    else:
+        print(f"headline: {head['scenario']} "
+              f"{head['speedup_x']:.2f}x at matched loss [ok]")
+
+    contention = {c["scenario"]: c for c in ref.get("contention", [])}
+    for name in CONTENTION_SCENARIOS:
+        c = contention.get(name)
+        if c is None:
+            errors.append(f"{name}: no contention-summary row in the "
+                          "reference (speedups unresolvable or scenario "
+                          "dropped)")
+        elif not c.get("gap_widened"):
+            errors.append(f"{name}: fp32-vs-1bit gap did NOT widen over "
+                          f"{c['isolated_baseline']}")
+        else:
+            print(f"contention: {name} {c['speedup_x']:.2f}x vs "
+                  f"isolated {c['isolated_speedup_x']:.2f}x [ok]")
+
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    if not errors:
+        print(f"bench check OK ({len(smoke_scenarios)} scenarios compared)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,7 +10,8 @@ Checked references are inline code spans (`...`) that look like repo paths:
   ``tests/test_engine.py::test_x`` — file must exist AND define the symbol
   (its last ``.``-component appears as a word in the file);
 * ``BENCH_network_sim.json`` — repo-root benchmark artifacts (the
-  ``BENCH_*.json`` perf trajectory) must exist at the repo root.
+  ``BENCH_*.json`` perf trajectory) must exist at the repo root, as must
+  referenced repo-root support files (``requirements*.txt``).
 
 Run from anywhere:  python tools/check_docs.py   (exit 1 on any dangling
 reference; listed one per line).  Wired into CI and tests/test_docs.py.
@@ -32,7 +33,7 @@ DOC_FILES = ["README.md"] + sorted(
 ROOTS = ("src/", "docs/", "tests/", "benchmarks/", "examples/", "tools/",
          ".github/")
 SPAN_RE = re.compile(r"`([^`\n]+)`")
-BENCH_RE = re.compile(r"^BENCH_\w+\.json$")
+BENCH_RE = re.compile(r"^(BENCH_\w+\.json|requirements[\w.-]*\.txt)$")
 
 
 def candidate(span: str) -> str | None:
