@@ -1,0 +1,226 @@
+"""Per-round mix cost: per-leaf gossip vs bucketed flat-buffer gossip.
+
+The paper's headline is wall-clock speed, and the mix step is where the
+engine spends it.  The per-leaf path pays a fixed cost per pytree leaf —
+one encode launch, one decode-reduce launch, one payload roll per offset,
+and one pad to the 256x1024 tile grid (so a 64-element norm scale becomes
+>=262k elements of codec work).  The bucketed path (``comm/bucket.py``)
+pays each of those once per round on one flat buffer.
+
+This benchmark measures that gap on real model-zoo parameter trees
+(resnet / transformer / mamba2 / moe) x wire codec x bit width, on the
+jitted jnp backend of this host, and records the *dispatch/padding
+overhead model* behind it: leaves, real elements, tile-padded elements,
+and codec launches per round for both paths.  ``BENCH_comm_fusion.json``
+is the committed trajectory; ``tools/check_bench.py`` gates the bucketed
+speedup per model against it in CI.
+
+Usage:  python benchmarks/bench_comm_fusion.py [--smoke]
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import bucket
+from repro.comm.engine import CommEngine, make_wire
+from repro.core.quantizers import QuantSpec
+from repro.core.topology import ring
+from repro.kernels.moniqua_encode import (DEFAULT_BLOCK_COLS,
+                                          DEFAULT_BLOCK_ROWS)
+
+N_WORKERS = 8
+
+# (label, wire, bits): the fusion-relevant slice of the codec matrix — the
+# 1-bit headline (fixed costs dominate tiny payloads), the 8-bit midpoint,
+# the scale+codes comparison, and the raw wire.
+CODECS = [
+    ("moniqua-1bit", "moniqua", 1),
+    ("moniqua-8bit", "moniqua", 8),
+    ("qsgd-8bit", "qsgd", 8),
+    ("fp32", "full", 32),
+]
+
+
+# ---------------------------------------------------------------------------
+# Model zoo parameter trees (single replica; stacked to [n, ...] below).
+# ---------------------------------------------------------------------------
+
+def _zoo():
+    from repro.configs import get_config
+    from repro.models import resnet as R
+    from repro.models.model_factory import build_model
+
+    def resnet(key):
+        return R.init_resnet(key, depth=20, width=16)
+
+    def transformer(key):
+        return build_model(get_config("llama3.2-3b").reduced()).init(key)
+
+    def mamba2(key):
+        # zamba2 reduced: a stack of mamba2 blocks + one shared attention
+        return build_model(get_config("zamba2-1.2b").reduced()).init(key)
+
+    def moe(key):
+        return build_model(get_config("dbrx-132b").reduced()).init(key)
+
+    return [("resnet", resnet), ("transformer", transformer),
+            ("mamba2", mamba2), ("moe", moe)]
+
+
+def _stack(params, n=N_WORKERS):
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), params)
+
+
+# ---------------------------------------------------------------------------
+# The static overhead model: what each path launches and pads.
+# ---------------------------------------------------------------------------
+
+def _tile_padded(elems: int) -> int:
+    """Elements after padding to the Pallas encode tile grid (ops.py)."""
+    rows = -(-elems // DEFAULT_BLOCK_COLS)
+    return -(-rows // DEFAULT_BLOCK_ROWS) * DEFAULT_BLOCK_ROWS \
+        * DEFAULT_BLOCK_COLS
+
+
+def overhead_model(X, vpb: int) -> dict:
+    """Launch and padding accounting for one Moniqua round on ``X``."""
+    leaves = jax.tree.leaves(X)
+    layout = bucket.layout_of(X, vpb)
+    per_leaf_padded = 0
+    for s in layout.slots:
+        per_leaf_padded += _tile_padded(s.padded_size)
+    elems = layout.total_elems
+    bucketed_padded = _tile_padded(layout.padded_elems)
+    return {
+        "n_leaves": len(leaves),
+        "elems_per_worker": elems,
+        "tile_padded_elems_per_leaf_path": per_leaf_padded,
+        "tile_padded_elems_bucketed": bucketed_padded,
+        "pad_overhead_per_leaf_x": per_leaf_padded / elems,
+        "pad_overhead_bucketed_x": bucketed_padded / elems,
+        # encode + decode-reduce per leaf (rolls excluded) vs one of each
+        "codec_launches_per_leaf_path": 2 * len(leaves),
+        "codec_launches_bucketed": 2,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Timing.
+# ---------------------------------------------------------------------------
+
+def _time_pair(eng_leaf: CommEngine, eng_bucket: CommEngine, X,
+               needs_theta: bool, reps: int) -> tuple[float, float]:
+    """Per-round mix time for the per-leaf and bucketed engines.
+
+    The two paths are timed *interleaved*, rep by rep, so scheduler drift
+    and frequency scaling hit both equally, and the estimate is the min
+    over reps — the speedup the CI gate compares is a ratio of two
+    same-host times, and contention noise only ever inflates a sample, so
+    the min is the stable estimator of the uncontended round.
+    """
+    key = jax.random.PRNGKey(0)
+
+    def jit_mix(eng):
+        if needs_theta:
+            f = jax.jit(lambda x, k: eng.mix(x, theta=2.0, key=k))
+        else:
+            f = jax.jit(lambda x, k: eng.mix(x, key=k))
+        jax.block_until_ready(f(X, key))        # compile + warm up
+        return f
+
+    mixes = (jit_mix(eng_leaf), jit_mix(eng_bucket))
+    times = ([], [])
+    for _ in range(reps):
+        for mix, acc in zip(mixes, times):
+            t0 = time.perf_counter()
+            jax.block_until_ready(mix(X, key))
+            acc.append(time.perf_counter() - t0)
+    return min(times[0]), min(times[1])
+
+
+def run(quick: bool = False) -> dict:
+    reps = 5 if quick else 10
+    topo = ring(N_WORKERS)
+    table, overhead = [], []
+    for model_name, init in _zoo():
+        X = _stack(init(jax.random.PRNGKey(0)))
+        n_leaves = len(jax.tree.leaves(X))
+        d = bucket.layout_of(X, 1).total_elems
+        overhead.append({"model": model_name,
+                         **overhead_model(X, vpb=8)})   # 1-bit grid
+        for label, wire, bits in CODECS:
+            spec = QuantSpec(bits=min(bits, 8), stochastic=1 < bits <= 8)
+            codec = make_wire(wire, spec)
+            eng_l = CommEngine(topo, codec, backend="jnp", bucketed=False)
+            eng_b = CommEngine(topo, codec, backend="jnp", bucketed=True)
+            needs_theta = wire == "moniqua"
+            t_leaf, t_bucket = _time_pair(eng_l, eng_b, X, needs_theta,
+                                          reps)
+            table.append({
+                "model": model_name, "codec": label, "bits": bits,
+                "n_leaves": n_leaves, "params_per_worker": d,
+                "mix_ms_per_leaf": t_leaf * 1e3,
+                "mix_ms_bucketed": t_bucket * 1e3,
+                "speedup_x": t_leaf / t_bucket,
+                "wire_bytes_per_leaf": eng_l.bytes_per_round(X),
+                "wire_bytes_bucketed": eng_b.bytes_per_round(X),
+            })
+
+    one_bit = [r for r in table if r["codec"] == "moniqua-1bit"]
+    head = max(one_bit, key=lambda r: r["speedup_x"])
+    return {
+        "table": table,
+        "overhead": overhead,
+        "headline": {"model": head["model"], "codec": head["codec"],
+                     "speedup_x": head["speedup_x"],
+                     "mix_ms_per_leaf": head["mix_ms_per_leaf"],
+                     "mix_ms_bucketed": head["mix_ms_bucketed"]},
+        "backend": "jnp (jitted, this host)",
+        "n_workers": N_WORKERS,
+        "reps": reps,
+        "notes": (
+            "Measured per-round CommEngine.mix time, per-leaf vs bucketed "
+            "flat-buffer gossip (comm/bucket.py), ring n=8, jitted jnp "
+            "backend; the two paths are timed interleaved rep-by-rep and "
+            "each reported time is the min over reps (contention noise "
+            "only inflates samples). "
+            "The 'overhead' section is the static model of why "
+            "fusion wins: the per-leaf path pads EVERY leaf to the 256x1024 "
+            "Pallas tile grid (min 262,144 elements per launch), so models "
+            "with dozens of sub-262k leaves do pad_overhead_per_leaf_x "
+            "times the real codec work, plus 2*n_leaves kernel dispatches "
+            "per round; the bucketed path pads once and dispatches twice. "
+            "Wire bytes match the per-leaf sum for Moniqua by construction "
+            "(vpb row alignment) and for qsgd too: the bucketed path keeps "
+            "one max-norm scale per tensor (segment slices of the flat "
+            "buffer), not one whole-model scale."),
+    }
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer reps; write BENCH_comm_fusion.smoke.json")
+    args = ap.parse_args()
+    out = run(quick=args.smoke)
+    name = "BENCH_comm_fusion.smoke.json" if args.smoke \
+        else "BENCH_comm_fusion.json"
+    path = os.path.join(_ROOT, name)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, default=float)
+    print(json.dumps(out["headline"], indent=2, default=float))
+    print(f"wrote {path}")

@@ -154,11 +154,13 @@ ENGINE_CODECS = [
 ]
 
 
-def build_engine(wire: str, bits: int, n: int = 8, backend: str = "jnp"):
+def build_engine(wire: str, bits: int, n: int = 8, backend: str = "jnp",
+                 bucketed: bool = True):
     """One-liner CommEngine factory for benchmark sweeps."""
     from repro.comm.engine import CommEngine, make_wire
     spec = QuantSpec(bits=min(bits, 8), stochastic=1 < bits <= 8)
-    return CommEngine(ring(n), make_wire(wire, spec), backend)
+    return CommEngine(ring(n), make_wire(wire, spec), backend,
+                      bucketed=bucketed)
 
 
 # ---------------------------------------------------------------------------

@@ -15,6 +15,7 @@ Each bench maps to a paper artifact:
     bench_adpsgd            Fig. 2b     (asynchronous gossip)
     bench_bits_bound        Sec. 4      (O(log log n) bits bound)
     bench_network_sim       Fig. 5 analog (repro.sim wall-clock-to-target)
+    bench_comm_fusion       per-leaf vs bucketed flat-buffer mix timing
     roofline_table          deliverable g (dry-run roofline terms)
 
 Writes benchmarks/results/<name>.json and a combined markdown report to
@@ -42,6 +43,7 @@ BENCHES = [
     "bench_adpsgd",
     "bench_bits_bound",
     "bench_network_sim",
+    "bench_comm_fusion",
     "roofline_table",
 ]
 

@@ -46,6 +46,17 @@ same (seed, element) pairs — stochastic rounding uses Supp.-C shared
 randomness exactly: identical models encode to identical payloads on
 every worker.
 
+Bucketing: by default the engine does not gossip leaf by leaf.  A cached
+:class:`~repro.comm.bucket.BucketLayout` flattens the whole stacked pytree
+into one contiguous per-worker buffer, so a round is one encode launch,
+one packed roll per offset (the whole-model collective-permute), one fused
+decode-reduce, and one scatter back to leaves — the per-leaf fixed costs
+(kernel dispatch and, above all, the 256x1024 tile-grid pad that turns a
+64-element bias into 262k elements of codec work) are paid once per round
+instead of once per leaf.  ``bucketed=False`` keeps the per-leaf path as
+the parity reference; ``benchmarks/bench_comm_fusion.py`` measures the
+gap and commits it to ``BENCH_comm_fusion.json``.
+
 Wall-clock prediction: the byte counts this engine produces feed the
 event-driven simulator (``repro.sim``), which prices them under explicit
 link/compute models per named scenario — see ``docs/simulator.md``.
@@ -59,11 +70,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.comm import gossip
+from repro.comm import bucket, gossip
 from repro.comm.gossip import BytesLedger
 from repro.core import modulo
 from repro.core.quantizers import (QuantSpec, packed_last_dim, qsgd_decode,
-                                   qsgd_encode, qsgd_payload_bytes)
+                                   qsgd_decode_segmented, qsgd_encode,
+                                   qsgd_encode_segmented, qsgd_payload_bytes)
 from repro.core.topology import Topology
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
@@ -146,10 +158,20 @@ class CommEngine:
     Static (hashable) configuration only — per-round dynamics (``theta``, the
     PRNG key, the ledger) are call arguments, so an engine can be constructed
     freely inside a jitted step function.
+
+    ``bucketed`` (default) flattens the whole stacked pytree into one
+    contiguous per-worker staging buffer (``comm/bucket.py``) so a round
+    costs **one** encode launch, **one** packed payload roll per offset,
+    and **one** fused decode-reduce — instead of that trio per leaf, each
+    with its own pad to the 256x1024 tile grid.  The per-leaf path stays
+    behind ``bucketed=False`` as the parity reference; both draw the same
+    stochastic-rounding uniforms per element (global counter indices), so
+    they are bit-exact against each other for the Moniqua wire.
     """
     topo: Topology
     codec: Any = dataclasses.field(default_factory=MoniquaWire)
     backend: str = "auto"
+    bucketed: bool = True
 
     # -- the tentpole primitive --------------------------------------------
     def mix(self, X: PyTree, theta=None, key: Optional[jax.Array] = None,
@@ -158,27 +180,86 @@ class CommEngine:
 
         Returns ``X_{k+1/2}``; with the full-precision codec this is exactly
         the circulant ``X W`` of ``gossip.mix``.  ``ledger`` (if given) is
-        credited at trace time with payload-bytes * n_neighbors per leaf.
+        credited at trace time with payload-bytes * n_neighbors per round.
         """
         offsets = self.topo.neighbor_offsets()
         if not offsets:                      # single worker: nothing on wire
             return X
+        if not jax.tree.leaves(X):           # empty pytree: nothing to mix
+            return X
         if ledger is not None:
             self._record(X, ledger)
+        if self.codec.name == "moniqua" and theta is None:
+            raise ValueError("MoniquaWire needs the a-priori bound theta")
+        if self.bucketed:
+            return self._mix_bucketed(X, theta, key)
         if self.codec.name == "full":
             return gossip.mix(X, self.topo)
-        if theta is None and self.codec.name == "moniqua":
-            raise ValueError("MoniquaWire needs the a-priori bound theta")
         backend = resolve_backend(self.backend)
         self._require_key(key)
         base_seed = kops._key_to_seed(key)
         leaves, td = jax.tree.flatten(X)
-        out = [self._mix_leaf(l, theta, _leaf_seed(base_seed, i), backend)
-               for i, l in enumerate(leaves)]
+        if self.codec.name == "moniqua":
+            # global counter indices: leaf i's elements hash
+            # (seed, layout.offset_i + e), the SAME pairs the bucketed
+            # one-shot encode hashes — the bucketed-vs-per-leaf parity
+            layout = self.layout(X)
+            out = [self._mix_leaf(l, theta, base_seed, backend,
+                                  idx_base=layout.offsets[i])
+                   for i, l in enumerate(leaves)]
+        else:
+            out = [self._mix_leaf(l, theta, _leaf_seed(base_seed, i), backend)
+                   for i, l in enumerate(leaves)]
         return jax.tree.unflatten(td, out)
 
+    # -- bucketed round: one encode, one roll per offset, one reduce -------
+    def _mix_bucketed(self, X: PyTree, theta,
+                      key: Optional[jax.Array]) -> PyTree:
+        offsets = self.topo.neighbor_offsets()
+        weights = self._neighbor_weights()
+        layout = self.layout(X)
+        if self.codec.name == "full" and not layout.uniform_dtype:
+            # mixed-dtype raw wire: f32 staging would change the mixing
+            # arithmetic (bf16 rolls accumulate in bf16 per leaf), breaking
+            # the `mix == gossip.mix` contract — and the full wire has no
+            # per-leaf encode/pad cost to amortize, so fall back per leaf
+            return gossip.mix(X, self.topo)
+        flat = layout.flatten(X)             # [n, D] staging buffer
+        if self.codec.name == "full":
+            return layout.unflatten(gossip.mix(flat, self.topo))
+        backend = resolve_backend(self.backend)
+        self._require_key(key)
+        seed = kops._key_to_seed(key)
+        spec = self.codec.spec
+        if self.codec.name == "moniqua":
+            B = modulo.b_theta(theta, spec.delta)
+            packed = kops.moniqua_encode_stacked(flat, B, spec, seed,
+                                                 backend=backend)
+            p_nbrs = jnp.stack([gossip._roll(packed, o) for o in offsets])
+            out = kops.moniqua_decode_reduce_stacked(packed, p_nbrs, flat, B,
+                                                     weights, spec,
+                                                     backend=backend)
+            return layout.unflatten(out)
+        # qsgd on the flat buffer, with per-tensor scale granularity kept
+        # (segment slices of the bucket); one decode per neighbor replaces
+        # the per-leaf qsgd_decode copies
+        seg = layout.segment_sizes
+        packed, scales = qsgd_encode_segmented(flat, spec, seed, seg)
+        xq_self = qsgd_decode_segmented(packed, scales, spec, seg)
+        acc = None
+        for o, w in zip(offsets, weights):
+            xq_j = qsgd_decode_segmented(gossip._roll(packed, o),
+                                         gossip._roll(scales, o), spec, seg)
+            t = (xq_j - xq_self) * w
+            acc = t if acc is None else acc + t
+        out = (flat.astype(jnp.float32) + acc).astype(flat.dtype)
+        return layout.unflatten(out)
+
     def _mix_leaf(self, x: jax.Array, theta, seed: jax.Array,
-                  backend: str) -> jax.Array:
+                  backend: str, idx_base=0) -> jax.Array:
+        if x.ndim == 1:      # scalar-per-worker leaf: give it a unit last axis
+            return self._mix_leaf(x[:, None], theta, seed, backend,
+                                  idx_base)[:, 0]
         offsets = self.topo.neighbor_offsets()
         weights = self._neighbor_weights()
         if self.codec.name == "moniqua":
@@ -189,7 +270,8 @@ class CommEngine:
             # payload roll crosses the worker axis and all workers share
             # one rounding-uniform stream per element (Supp. C)
             packed = kops.moniqua_encode_stacked(x, B, spec, seed,
-                                                 backend=backend)
+                                                 backend=backend,
+                                                 idx_base=idx_base)
             p_nbrs = jnp.stack([gossip._roll(packed, o) for o in offsets])
             return kops.moniqua_decode_reduce_stacked(packed, p_nbrs, x, B,
                                                       weights, spec,
@@ -205,6 +287,22 @@ class CommEngine:
             t = (xq_j - xq_self) * w
             acc = t if acc is None else acc + t
         return (x.astype(jnp.float32) + acc).astype(x.dtype)
+
+    # -- layout plumbing ---------------------------------------------------
+    def _align(self) -> int:
+        """Row alignment of the flat buffer: values-per-byte for packed
+        codecs (keeps per-leaf byte boundaries), 1 for the raw wire."""
+        spec = getattr(self.codec, "spec", None)
+        return spec.values_per_byte if spec is not None else 1
+
+    def layout(self, X: PyTree) -> bucket.BucketLayout:
+        """The (memoized) flat-buffer layout this engine uses for ``X``.
+
+        Accepts abstract ``ShapeDtypeStruct`` trees, so callers (trainer,
+        dryrun) can build the layout once outside jit; traced rounds then
+        hit the cache with the identical static description.
+        """
+        return bucket.layout_of(X, self._align())
 
     def _neighbor_weights(self) -> Tuple[float, ...]:
         return tuple(w for o, w in zip(self.topo.offsets, self.topo.weights)
@@ -268,17 +366,44 @@ class CommEngine:
         return gossip.self_weight(self.topo)
 
     # -- accounting --------------------------------------------------------
+    def payload_bytes_per_broadcast(self, X: PyTree) -> int:
+        """Bytes one worker ships to ONE neighbor per round.
+
+        Bucketed rounds roll the packed flat buffer plus, for qsgd, the
+        per-tensor scale vector; per-leaf rounds roll each leaf's payload.
+        The vpb row alignment makes the bucketed Moniqua payload equal the
+        per-leaf sum exactly — the tile-grid pad is sliced off before the
+        roll and never rides the wire — and bucketed qsgd keeps one
+        4-byte scale per tensor, so its bytes match the per-leaf sum too.
+        A mixed-dtype tree on the ``full`` wire mixes per leaf (f32
+        staging would change the arithmetic), so its bytes are the
+        per-leaf sum as well.
+        """
+        if not jax.tree.leaves(X):
+            return 0
+        if self.bucketed:
+            layout = self.layout(X)
+            if self.codec.name == "full":
+                if not layout.uniform_dtype:   # per-leaf fallback path
+                    return sum(self.codec.payload_bytes(
+                        leaf.shape[1:], leaf.dtype.itemsize)
+                        for leaf in jax.tree.leaves(X))
+                return layout.total_elems * jnp.dtype(
+                    layout.stage_dtype).itemsize
+            spec = self.codec.spec
+            nbytes = layout.padded_elems // spec.values_per_byte
+            if self.codec.name == "qsgd":
+                nbytes += 4 * layout.num_leaves
+            return nbytes
+        return sum(self.codec.payload_bytes(leaf.shape[1:],
+                                            leaf.dtype.itemsize)
+                   for leaf in jax.tree.leaves(X))
+
     def bytes_per_round(self, X: PyTree) -> int:
         """Payload bytes *sent* per worker per gossip round (all leaves)."""
         m = len(self.topo.neighbor_offsets())
-        total = 0
-        for leaf in jax.tree.leaves(X):
-            total += self.codec.payload_bytes(leaf.shape[1:],
-                                              leaf.dtype.itemsize)
-        return total * m
+        return self.payload_bytes_per_broadcast(X) * m
 
     def _record(self, X: PyTree, ledger: BytesLedger) -> None:
-        m = len(self.topo.neighbor_offsets())
-        for leaf in jax.tree.leaves(X):
-            ledger.add(self.codec.payload_bytes(leaf.shape[1:],
-                                                leaf.dtype.itemsize), m)
+        ledger.add(self.payload_bytes_per_broadcast(X),
+                   len(self.topo.neighbor_offsets()))

@@ -59,13 +59,15 @@ class AlgoHyper:
     naive_delta: float = 0.05     # absolute lattice pitch for the naive baseline
     wire: str = "moniqua"         # wire codec for quantized gossip (engine())
     backend: str = "auto"         # comm backend: jnp | pallas | auto
+    bucketed: bool = True         # flat-buffer gossip (comm/bucket.py)
 
     def engine(self) -> CommEngine:
         return CommEngine(self.topo, make_wire(self.wire, self.codec.spec),
-                          self.backend)
+                          self.backend, bucketed=self.bucketed)
 
     def exact_engine(self) -> CommEngine:
-        return CommEngine(self.topo, FullPrecisionWire(), self.backend)
+        return CommEngine(self.topo, FullPrecisionWire(), self.backend,
+                          bucketed=self.bucketed)
 
 
 # ---------------------------------------------------------------------------

@@ -227,6 +227,65 @@ def qsgd_decode(packed: jax.Array, scale: jax.Array, spec: QuantSpec,
     return _from_lattice(codes, spec.levels) * (2.0 * scale)
 
 
+def _segment_scale_map(scales: jax.Array, segments) -> jax.Array:
+    """Broadcast per-segment scales ``[n, L]`` to element width ``[n, D]``.
+
+    ``segments`` is the static tuple of per-segment lengths (contiguous
+    ranges of the flat bucket).  Slices + broadcasts, NOT an element->id
+    gather: a ``D``-sized index constant in the graph makes XLA's
+    constant folder crawl for multi-million-element buckets.
+    """
+    n = scales.shape[0]
+    return jnp.concatenate(
+        [jnp.broadcast_to(scales[:, i:i + 1], (n, size))
+         for i, size in enumerate(segments)], axis=1)
+
+
+def qsgd_encode_segmented(x: jax.Array, spec: QuantSpec,
+                          seed: Optional[jax.Array],
+                          segments: tuple[int, ...]
+                          ) -> tuple[jax.Array, jax.Array]:
+    """QSGD on a flat ``[n, D]`` bucket with one scale per *segment*.
+
+    ``segments`` gives the length of each tensor's contiguous range in
+    the bucket (``BucketLayout.segment_sizes``), so the scale granularity
+    matches the per-leaf path — one max-norm per tensor per worker.  A
+    single whole-model scale would let a 100-scale weight matrix drown a
+    0.01-scale bias in quantization noise; this keeps small tensors
+    representable while the quantize/pack work stays one fused launch
+    over the whole bucket.  Returns (packed codes ``[n, D*bits/8]``,
+    scales ``[n, L]`` — both ride the wire).
+    """
+    xf = x.astype(jnp.float32)
+    off, parts = 0, []
+    for size in segments:
+        seg = jax.lax.slice_in_dim(xf, off, off + size, axis=1)
+        parts.append(jnp.max(jnp.abs(seg), axis=1, keepdims=True))
+        off += size
+    scales = jnp.concatenate(parts, axis=1) + 1e-12     # [n, L]
+    smap = _segment_scale_map(scales, segments)         # [n, D]
+    lat = _to_lattice(xf / (2.0 * smap), spec.levels)
+    if spec.stochastic:
+        if seed is None:
+            raise ValueError("stochastic QSGD rounding needs a seed")
+        idx = jnp.arange(x.size, dtype=jnp.uint32).reshape(x.shape)
+        codes = jnp.floor(lat + _counter_uniform(jnp.asarray(seed, jnp.uint32),
+                                                 idx))
+    else:
+        codes = jnp.floor(lat + 0.5)
+    codes = jnp.clip(codes, 0, spec.levels - 1).astype(jnp.uint8)
+    return pack_codes(codes, spec.bits), scales
+
+
+def qsgd_decode_segmented(packed: jax.Array, scales: jax.Array,
+                          spec: QuantSpec,
+                          segments: tuple[int, ...]) -> jax.Array:
+    """Inverse of :func:`qsgd_encode_segmented` on the flat bucket."""
+    codes = unpack_codes(packed, spec.bits, sum(segments))
+    smap = _segment_scale_map(scales, segments)
+    return _from_lattice(codes, spec.levels) * (2.0 * smap)
+
+
 def qsgd_payload_bytes(x_shape: tuple[int, ...], bits: int) -> int:
     """Wire bytes for one tensor: packed codes + one f32 scale."""
     if not x_shape:

@@ -35,7 +35,15 @@ DEFAULT_BLOCK_COLS = 1024  # multiple of 128 * max vpb (8)
 
 def _encode_kernel(x_ref, seed_ref, b_ref, o_ref, *, bits: int,
                    stochastic: bool, ncols: int):
-    """One (rows, cols) tile -> (rows, cols/vpb) packed tile."""
+    """One (rows, cols) tile -> (rows, cols/vpb) packed tile.
+
+    ``seed_ref`` carries two replicated uint32 scalars: the hash seed and
+    ``idx_base``, the flat-index offset of this array inside a larger
+    bucketed layout (0 for a standalone encode).  Offsetting the counter
+    index — rather than perturbing the seed — is what lets a per-leaf
+    encode draw the *same* uniform per element as the one-shot encode of
+    the whole flat bucket (``comm/bucket.py``).
+    """
     levels = 2 ** bits
     vpb = 8 // bits
     rows, cols = x_ref.shape
@@ -55,7 +63,7 @@ def _encode_kernel(x_ref, seed_ref, b_ref, o_ref, *, bits: int,
         col_ids = jax.lax.broadcasted_iota(jnp.uint32, (rows, cols), 1)
         g_rows = row_ids + jnp.uint32(i * rows)
         g_cols = col_ids + jnp.uint32(j * cols)
-        idx = g_rows * jnp.uint32(ncols) + g_cols
+        idx = seed_ref[1] + g_rows * jnp.uint32(ncols) + g_cols
         u = _hash_uniform(seed_ref[0], idx)
         c = jnp.floor(lat + u)
     else:
@@ -79,10 +87,12 @@ def encode(x2d: jax.Array, B: jax.Array, seed: jax.Array, *, bits: int,
            stochastic: bool = True,
            block_rows: int = DEFAULT_BLOCK_ROWS,
            block_cols: int = DEFAULT_BLOCK_COLS,
-           interpret: bool = False) -> jax.Array:
+           interpret: bool = False,
+           idx_base: jax.Array | int = 0) -> jax.Array:
     """Encode a 2-D array (rows, cols) with cols % block_cols == 0.
 
-    Returns packed uint8 of shape (rows, cols * bits / 8).
+    Returns packed uint8 of shape (rows, cols * bits / 8).  ``idx_base``
+    offsets the stochastic-rounding counter index (see ``_encode_kernel``).
     """
     rows, cols = x2d.shape
     if cols % block_cols or rows % block_rows:
@@ -92,17 +102,18 @@ def encode(x2d: jax.Array, B: jax.Array, seed: jax.Array, *, bits: int,
     grid = (rows // block_rows, cols // block_cols)
     kernel = functools.partial(_encode_kernel, bits=bits,
                                stochastic=stochastic, ncols=cols)
+    seed_base = jnp.stack([jnp.asarray(seed, jnp.uint32).reshape(()),
+                           jnp.asarray(idx_base, jnp.uint32).reshape(())])
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_rows, block_cols), lambda i, j: (i, j)),
-            pl.BlockSpec((1,), lambda i, j: (0,)),   # seed (replicated)
+            pl.BlockSpec((2,), lambda i, j: (0,)),   # [seed, idx_base] (repl.)
             pl.BlockSpec((1,), lambda i, j: (0,)),   # B    (replicated)
         ],
         out_specs=pl.BlockSpec((block_rows, block_cols // vpb),
                                lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((rows, cols // vpb), jnp.uint8),
         interpret=interpret,
-    )(x2d, jnp.asarray(seed, jnp.uint32).reshape(1),
-      jnp.asarray(B, jnp.float32).reshape(1))
+    )(x2d, seed_base, jnp.asarray(B, jnp.float32).reshape(1))

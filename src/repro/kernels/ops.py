@@ -40,9 +40,18 @@ def _to_tiles(x: jax.Array, block_rows: int, block_cols: int):
     return flat.reshape(rows_p, cols), n
 
 
+# Hash seed used when no PRNG key is supplied.  Only *deterministic*
+# (nearest-rounding) specs may omit the key — the counter hash is never
+# drawn on that path, so the constant is a documented placeholder, not a
+# silent randomness source.  CommEngine._require_key rejects key=None for
+# stochastic specs before this is ever reached; the legacy value 0 is kept
+# so deterministic payload bits are unchanged across versions.
+NO_KEY_SEED = 0
+
+
 def _key_to_seed(key: Optional[jax.Array]) -> jax.Array:
     if key is None:
-        return jnp.uint32(0)
+        return jnp.uint32(NO_KEY_SEED)
     return jax.random.key_data(key).reshape(-1)[-1].astype(jnp.uint32)
 
 
@@ -58,7 +67,8 @@ def _encode_layout(x: jax.Array, vpb: int):
 def moniqua_encode(x: jax.Array, B: jax.Array, spec: QuantSpec,
                    key: Optional[jax.Array], *,
                    seed: Optional[jax.Array] = None,
-                   interpret: Optional[bool] = None) -> jax.Array:
+                   interpret: Optional[bool] = None,
+                   idx_base: jax.Array | int = 0) -> jax.Array:
     """Encode any-shape ``x`` -> packed uint8 with last dim ceil(n/vpb).
 
     Kernel-internal layout is a flat row-major tile grid; the public layout
@@ -67,6 +77,9 @@ def moniqua_encode(x: jax.Array, B: jax.Array, spec: QuantSpec,
 
     ``seed`` overrides the key-derived hash seed (CommEngine passes seeds
     directly so its jnp and Pallas backends draw identical uniforms).
+    ``idx_base`` offsets the stochastic counter index — the flat-buffer
+    offset of this tensor when it is one segment of a bucketed layout
+    (``comm/bucket.py``), 0 for a standalone encode.
     """
     if interpret is None:
         interpret = not _on_tpu()
@@ -75,13 +88,14 @@ def moniqua_encode(x: jax.Array, B: jax.Array, spec: QuantSpec,
     vpb = spec.values_per_byte
     x2d, n, lead_shape, n_last, pad = _encode_layout(x, vpb)
     p = _enc.encode(x2d, B, seed, bits=spec.bits, stochastic=spec.stochastic,
-                    interpret=interpret)
+                    interpret=interpret, idx_base=idx_base)
     p = p.reshape(-1)[: n // vpb]
     return p.reshape(*lead_shape, (n_last + pad) // vpb)
 
 
 def moniqua_encode_jnp(x: jax.Array, B: jax.Array, spec: QuantSpec,
-                       seed: jax.Array) -> jax.Array:
+                       seed: jax.Array,
+                       idx_base: jax.Array | int = 0) -> jax.Array:
     """Pure-jnp encode, bit-identical to :func:`moniqua_encode`.
 
     Uses the same padded tile layout so the counter-based hash draws the same
@@ -89,7 +103,8 @@ def moniqua_encode_jnp(x: jax.Array, B: jax.Array, spec: QuantSpec,
     """
     vpb = spec.values_per_byte
     x2d, n, lead_shape, n_last, pad = _encode_layout(x, vpb)
-    p = kref.encode_ref(x2d, B, spec.bits, spec.stochastic, seed)
+    p = kref.encode_ref(x2d, B, spec.bits, spec.stochastic, seed,
+                        idx_base=idx_base)
     p = p.reshape(-1)[: n // vpb]
     return p.reshape(*lead_shape, (n_last + pad) // vpb)
 
@@ -129,9 +144,10 @@ def moniqua_decode_self(packed, x, B, spec: QuantSpec, *,
 # ---------------------------------------------------------------------------
 
 def _p2d(packed: jax.Array, p_need: int, rows: int, pcols: int) -> jax.Array:
+    # jnp.pad, not zeros().at[].set(): the scatter form allocates and fills
+    # a second full-size buffer on every mix; pad lowers to one concat
     pflat = packed.reshape(-1)
-    pfull = jnp.zeros((p_need,), jnp.uint8).at[: pflat.shape[0]].set(pflat)
-    return pfull.reshape(rows, pcols)
+    return jnp.pad(pflat, (0, p_need - pflat.shape[0])).reshape(rows, pcols)
 
 
 def moniqua_decode_reduce(p_self: jax.Array, p_nbrs: jax.Array, y: jax.Array,
@@ -198,12 +214,18 @@ def moniqua_decode_reduce_jnp(p_self: jax.Array, p_nbrs: jax.Array,
 # ---------------------------------------------------------------------------
 
 def moniqua_encode_stacked(x: jax.Array, B, spec: QuantSpec,
-                           seed: jax.Array, *, backend: str) -> jax.Array:
-    """Encode a stacked ``[n, ...]`` leaf with per-worker tile layout."""
+                           seed: jax.Array, *, backend: str,
+                           idx_base: jax.Array | int = 0) -> jax.Array:
+    """Encode a stacked ``[n, ...]`` leaf with per-worker tile layout.
+
+    ``idx_base`` is shared by every worker slice (the counter index never
+    depends on the worker position — Supp. C shared randomness).
+    """
     if backend == "pallas":
-        return jax.vmap(
-            lambda xi: moniqua_encode(xi, B, spec, None, seed=seed))(x)
-    return jax.vmap(lambda xi: moniqua_encode_jnp(xi, B, spec, seed))(x)
+        return jax.vmap(lambda xi: moniqua_encode(
+            xi, B, spec, None, seed=seed, idx_base=idx_base))(x)
+    return jax.vmap(lambda xi: moniqua_encode_jnp(
+        xi, B, spec, seed, idx_base=idx_base))(x)
 
 
 def moniqua_decode_reduce_stacked(p_self: jax.Array, p_nbrs: jax.Array,

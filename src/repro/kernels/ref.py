@@ -62,10 +62,17 @@ def unpack_ref(packed: jax.Array, bits: int) -> jax.Array:
     return jnp.stack(parts, axis=-1).reshape(*packed.shape[:-1], -1)
 
 
-def encode_ref(x: jax.Array, B, bits: int, stochastic: bool, seed) -> jax.Array:
-    """Full encode: x -> packed uint8.  Last dim must divide values-per-byte."""
+def encode_ref(x: jax.Array, B, bits: int, stochastic: bool, seed,
+               idx_base=0) -> jax.Array:
+    """Full encode: x -> packed uint8.  Last dim must divide values-per-byte.
+
+    ``idx_base`` offsets the counter index: element ``e`` hashes
+    ``(seed, idx_base + e)``, matching the kernel's global indexing when
+    this array is one segment of a bucketed flat buffer.
+    """
     seed = jnp.asarray(seed, jnp.uint32)
-    idx = jnp.arange(x.size, dtype=jnp.uint32).reshape(x.shape)
+    idx = (jnp.asarray(idx_base, jnp.uint32)
+           + jnp.arange(x.size, dtype=jnp.uint32).reshape(x.shape))
     codes = codes_ref(x, B, bits, stochastic, seed, idx)
     return pack_ref(codes, bits)
 

@@ -91,6 +91,7 @@ class DryrunResult:
 def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                mesh=None, algo: str = "moniqua", bits: int = 8,
                wire: str = "moniqua", comm_backend: str = "auto",
+               bucketed: bool = True,
                scenario: Optional[str] = None,
                verbose: bool = True, override: Optional[dict] = None
                ) -> DryrunResult:
@@ -119,7 +120,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             if shape.kind == "train":
                 lowered = _lower_train(model, shape, mesh, ms, rules,
                                        n_workers, algo, bits, wire,
-                                       comm_backend)
+                                       comm_backend, bucketed)
             elif shape.kind == "prefill":
                 lowered = _lower_prefill(model, shape, mesh, ms, rules)
             else:
@@ -137,7 +138,8 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         stats = RL.parse_collectives(compiled.as_text())
         sim_pred: Dict[str, Any] = {}
         if scenario and shape.kind == "train":
-            hp = _hyper(cfg, n_workers, algo, bits, wire, comm_backend)
+            hp = _hyper(cfg, n_workers, algo, bits, wire, comm_backend,
+                        bucketed)
             sim_pred = _sim_predict(scenario, model, hp, n_workers, roof)
             if verbose:
                 print(f"[{arch} x {shape_name} x {mesh_name}] sim "
@@ -192,11 +194,12 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                             seconds=time.time() - t0, error=f"{e}\n{tb}")
 
 
-def _hyper(cfg, n_workers, algo, bits, wire="moniqua", comm_backend="auto"):
+def _hyper(cfg, n_workers, algo, bits, wire="moniqua", comm_backend="auto",
+           bucketed=True):
     topo = ring(n_workers)
     spec = QuantSpec(bits=bits, stochastic=bits > 1)
     return AlgoHyper(topo=topo, codec=MoniquaCodec(spec), theta=2.0,
-                     wire=wire, backend=comm_backend)
+                     wire=wire, backend=comm_backend, bucketed=bucketed)
 
 
 def _sim_predict(scenario_name: str, model, hp, n_workers: int, roof):
@@ -230,9 +233,10 @@ def _sim_predict(scenario_name: str, model, hp, n_workers: int, roof):
 
 
 def _lower_train(model, shape, mesh, ms, rules, n_workers, algo_name, bits,
-                 wire="moniqua", comm_backend="auto"):
+                 wire="moniqua", comm_backend="auto", bucketed=True):
     algo = get_algorithm(algo_name)
-    hp = _hyper(model.cfg, n_workers, algo_name, bits, wire, comm_backend)
+    hp = _hyper(model.cfg, n_workers, algo_name, bits, wire, comm_backend,
+                bucketed)
     tcfg = TS.TrainStepConfig(algo=algo_name, sgd=SGDConfig(), lr=0.1,
                               theta=ThetaSchedule(mode="constant", value=2.0))
     step = TS.make_train_step(model, hp, tcfg)
@@ -293,6 +297,9 @@ def main(argv=None) -> int:
     ap.add_argument("--comm-backend", default="auto",
                     choices=["auto", "jnp", "pallas"],
                     help="CommEngine backend")
+    ap.add_argument("--per-leaf-comm", action="store_true",
+                    help="disable bucketed flat-buffer gossip (mix leaf "
+                         "by leaf, the CommEngine bucketed=False path)")
     ap.add_argument("--scenario", default=None,
                     help="repro.sim scenario name (incl. contended fabrics "
                          "like oversubscribed-tor / shared-uplink-ring and "
@@ -316,6 +323,7 @@ def main(argv=None) -> int:
                                  algo=args.algo, bits=args.bits,
                                  wire=args.wire,
                                  comm_backend=args.comm_backend,
+                                 bucketed=not args.per_leaf_comm,
                                  scenario=args.scenario)
                 if res.status == "error":
                     failures += 1

@@ -6,8 +6,12 @@ over the worker mesh axes.  Per-worker gradients are ``vmap(grad(loss))`` —
 XLA keeps them communication-free along the worker axis; the only cross-worker
 traffic is the algorithm's gossip, which every algorithm routes through
 ``repro.comm.engine.CommEngine`` (quantized collective-permutes for Moniqua;
-``AlgoHyper.wire`` / ``AlgoHyper.backend`` select codec and backend, and the
-per-step wire bytes are reported in the step metrics).
+``AlgoHyper.wire`` / ``AlgoHyper.backend`` / ``AlgoHyper.bucketed`` select
+codec, backend, and flat-buffer bucketing, and the per-step wire bytes are
+reported in the step metrics).  With bucketing (the default) the gossip
+inside the jitted step flattens the whole param tree through a memoized
+``comm/bucket.py`` layout — the trainer warms that cache from the abstract
+state before jit, so tracing never rebuilds it.
 
 ``state_pspecs`` / ``batch_pspecs`` resolve the logical-axis annotations into
 PartitionSpecs for jit shardings (trainer and launch/dryrun share them).

@@ -46,6 +46,7 @@ class TrainerConfig:
     checkpoint_every: int = 0
     wire: str = "moniqua"       # CommEngine wire codec (moniqua | qsgd | full)
     backend: str = "auto"       # CommEngine backend (jnp | pallas | auto)
+    bucketed: bool = True       # flat-buffer gossip (comm/bucket.py)
 
 
 def build_hyper(tc: TrainerConfig) -> AlgoHyper:
@@ -55,7 +56,8 @@ def build_hyper(tc: TrainerConfig) -> AlgoHyper:
         topo = topo.slack(tc.slack)
     spec = QuantSpec(bits=tc.bits, stochastic=tc.bits > 1)
     return AlgoHyper(topo=topo, codec=MoniquaCodec(spec), theta=tc.theta,
-                     gamma=tc.gamma, wire=tc.wire, backend=tc.backend)
+                     gamma=tc.gamma, wire=tc.wire, backend=tc.backend,
+                     bucketed=tc.bucketed)
 
 
 class Trainer:
@@ -75,6 +77,14 @@ class Trainer:
                                 n=tc.n_workers, rho=self.hp.topo.rho))
         self.pipeline = SyntheticLMPipeline(model, shape, tc.n_workers,
                                             seed=tc.seed)
+        # warm the bucket-layout cache from the abstract state so the flat
+        # gossip buffer's static layout is built exactly once, outside jit;
+        # every traced round then hits the memoized BucketLayout
+        if tc.bucketed:
+            abstract = TS.abstract_state(model, self.algo, self.hp,
+                                         tc.n_workers)
+            self.hp.exact_engine().layout(abstract["params"])
+            self.hp.engine().layout(abstract["params"])
         self.step_fn = TS.make_train_step(model, self.hp, self.tcfg)
         self.mesh = mesh
         if mesh is not None:

@@ -1,6 +1,6 @@
 """CommEngine: codec/backend parity, fused decode-reduce, bytes accounting.
 
-The three contracts from the engine design (docs/architecture.md):
+The four contracts from the engine design (docs/architecture.md):
 
 1. ``CommEngine(full_precision).mix == gossip.mix`` exactly (the engine's
    full-precision round IS the circulant ``X W``).
@@ -10,6 +10,11 @@ The three contracts from the engine design (docs/architecture.md):
    path is compared as written, i.e. eagerly; under re-jit XLA may legally
    FMA-contract and drift by 1 ulp, checked separately with a tight bound).
 3. BytesLedger: 1-bit Moniqua payloads are exactly 1/32 of f32 bytes.
+4. ``CommEngine(bucketed=True)`` (the default flat-buffer round,
+   comm/bucket.py) is **bit-exact** with ``bucketed=False`` for the
+   Moniqua wire — same payload bits, same mixed output — on both
+   backends, and its bytes accounting (bytes_per_round == ledger == the
+   bytes the simulator prices) matches the per-leaf sum.
 """
 import jax
 import jax.numpy as jnp
@@ -155,6 +160,198 @@ def test_shared_randomness_identical_rows_identical_payloads():
     for i in range(1, 5):
         np.testing.assert_array_equal(np.asarray(packed[i]),
                                       np.asarray(packed[0]))
+
+
+# ---------------------------------------------------------------------------
+# bucketed flat-buffer gossip (comm/bucket.py)
+# ---------------------------------------------------------------------------
+
+def _mixed_tree():
+    """Mixed shapes AND dtypes: unaligned last dims, a 3-D leaf, a
+    scalar-per-worker leaf, and a bf16 leaf."""
+    return {
+        "w": _stacked(),                                       # (8, 300) f32
+        "b": _stacked(d=17, seed=7),                           # (8, 17)  f32
+        "c": _stacked(d=21, seed=5,
+                      ).reshape(8, 3, 7).astype(jnp.bfloat16),  # (8,3,7) bf16
+        "s": _stacked(d=1, seed=3).reshape(8),                 # (8,) scalar
+    }
+
+
+@pytest.mark.parametrize("bits", [1, 4])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_bucketed_matches_per_leaf_bit_exact(bits, backend):
+    """The tentpole contract: one flat-buffer round == the per-leaf round,
+    bitwise, on a mixed-shape/mixed-dtype pytree — same stochastic uniforms
+    per element (global counter indices), same decode math, same casts."""
+    spec = QuantSpec(bits=bits, stochastic=bits > 1)
+    X = _mixed_tree()
+    key = jax.random.PRNGKey(11)
+    per_leaf = CommEngine(ring(8), MoniquaWire(spec), backend=backend,
+                          bucketed=False).mix(X, theta=2.0, key=key)
+    bucketed = CommEngine(ring(8), MoniquaWire(spec), backend=backend,
+                          bucketed=True).mix(X, theta=2.0, key=key)
+    for k in X:
+        np.testing.assert_array_equal(np.asarray(per_leaf[k]),
+                                      np.asarray(bucketed[k]))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_bucketed_stochastic_payload_bits_match_per_leaf(backend):
+    """Concatenated per-leaf payload bytes ARE the bucketed payload: the
+    vpb row alignment lines byte boundaries up and the global idx_base
+    makes both paths hash identical (seed, element) pairs."""
+    from repro.comm import bucket
+    from repro.core import modulo
+    from repro.kernels import ops as kops
+    spec = QuantSpec(bits=4, stochastic=True)
+    X = {"a": _stacked(d=37), "b": _stacked(d=300, seed=2)}
+    layout = bucket.layout_of(X, spec.values_per_byte)
+    B = modulo.b_theta(2.0, spec.delta)
+    seed = jnp.uint32(5)
+    flat = layout.flatten(X)
+    p_bucket = kops.moniqua_encode_stacked(flat, B, spec, seed,
+                                           backend=backend)
+    leaves = jax.tree.leaves(X)
+    p_leaves = [kops.moniqua_encode_stacked(l, B, spec, seed,
+                                            backend=backend, idx_base=off)
+                .reshape(8, -1)
+                for l, off in zip(leaves, layout.offsets)]
+    np.testing.assert_array_equal(
+        np.asarray(p_bucket), np.asarray(jnp.concatenate(p_leaves, axis=1)))
+
+
+def test_bucketed_full_precision_is_exact_mix():
+    X = {"w": _stacked(), "b": _stacked(d=17, seed=1)}
+    out = CommEngine(ring(8), FullPrecisionWire(), bucketed=True).mix(X)
+    ref = gossip.mix(X, ring(8))
+    for k in X:
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(ref[k]))
+
+
+def test_bucketed_full_precision_mixed_dtype_is_exact_mix():
+    """Contract 1 survives bucketing on mixed-dtype trees: the full wire
+    falls back to the per-leaf circulant mix there, because f32 staging
+    would accumulate bf16 rolls in f32 and drift from gossip.mix."""
+    X = {"w": _stacked(), "c": _stacked(d=24, seed=5).astype(jnp.bfloat16)}
+    eng = CommEngine(ring(8), FullPrecisionWire(), bucketed=True)
+    out = eng.mix(X)
+    ref = gossip.mix(X, ring(8))
+    for k in X:
+        np.testing.assert_array_equal(np.asarray(out[k], np.float32),
+                                      np.asarray(ref[k], np.float32))
+    # and the bytes account the per-leaf payloads (bf16 ships 2 bytes)
+    per_leaf = CommEngine(ring(8), FullPrecisionWire(), bucketed=False)
+    assert eng.bytes_per_round(X) == per_leaf.bytes_per_round(X)
+    assert eng.bytes_per_round(X) == (300 * 4 + 24 * 2) * 2
+
+
+def test_bucketed_qsgd_close_to_exact():
+    X = {"w": _stacked(scale=0.25), "b": _stacked(d=17, seed=1, scale=0.25)}
+    out = CommEngine(ring(8), QSGDWire(QuantSpec(bits=8)), backend="jnp",
+                     bucketed=True).mix(X, key=jax.random.PRNGKey(2))
+    ref = gossip.mix(X, ring(8))
+    mx = max(float(jnp.max(jnp.abs(X[k]))) for k in X)
+    tol = 2.0 * mx * (2.0 / 256.0) + 1e-4
+    for k in X:
+        assert float(jnp.max(jnp.abs(out[k] - ref[k]))) <= tol
+
+
+def test_bucketed_mix_under_jit():
+    spec = QuantSpec(bits=4)
+    eng = CommEngine(ring(8), MoniquaWire(spec), backend="jnp",
+                     bucketed=True)
+    X = _mixed_tree()
+    key = jax.random.PRNGKey(0)
+    eager = eng.mix(X, theta=2.0, key=key)
+    jitted = jax.jit(lambda x, k: eng.mix(x, theta=2.0, key=k))(X, key)
+    for k in X:
+        np.testing.assert_allclose(
+            np.asarray(eager[k], np.float32),
+            np.asarray(jitted[k], np.float32), rtol=0, atol=1e-6)
+
+
+def test_bucketed_bytes_ledger_and_sim_agree():
+    """bytes_per_round == BytesLedger == the bytes the simulator prices:
+    one consistent accounting for the bucketed layout (and for Moniqua it
+    equals the per-leaf sum — tile padding never rides the wire)."""
+    from repro.sim import events as SE
+    from repro.sim import scenarios as SC
+    topo = ring(8)
+    X = {"a": jnp.zeros((8, 100)), "b": jnp.zeros((8, 3, 7))}
+    eng = CommEngine(topo, MoniquaWire(QuantSpec(bits=2)), backend="jnp",
+                     bucketed=True)
+    led = gossip.BytesLedger()
+    eng.mix(X, theta=2.0, key=jax.random.PRNGKey(0), ledger=led)
+    m = len(topo.neighbor_offsets())
+    assert led.bytes_per_worker == eng.bytes_per_round(X)
+    # identical to the per-leaf accounting: (25 + 6) bytes x 2 neighbors
+    assert eng.bytes_per_round(X) == (25 + 6) * 2
+    per_leaf = CommEngine(topo, MoniquaWire(QuantSpec(bits=2)),
+                          backend="jnp", bucketed=False)
+    assert eng.bytes_per_round(X) == per_leaf.bytes_per_round(X)
+    sc = SC.get_scenario("lan-10gbe-ring", n=8)
+    trace = SE.simulate_sync_rounds(sc, eng.bytes_per_round(X) // m,
+                                    num_rounds=1)
+    assert trace.bytes_on_wire == 8 * eng.bytes_per_round(X)
+
+
+def test_bucketed_qsgd_keeps_per_tensor_scales():
+    """Bucketed qsgd quantizes each tensor under its own max-norm scale
+    (segment_max over the flat buffer), so a tiny-magnitude leaf next to
+    a huge one is not drowned in the big leaf's quantization noise —
+    and the wire bytes (4 per tensor) match the per-leaf sum."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    X = {"w": jax.random.normal(k1, (8, 100)) * 100.0,
+         "b": jax.random.normal(k2, (8, 32)) * 0.01}
+    eng = CommEngine(ring(8), QSGDWire(QuantSpec(bits=8)), backend="jnp",
+                     bucketed=True)
+    out = eng.mix(X, key=jax.random.PRNGKey(3))
+    ref = gossip.mix(X, ring(8))
+    # error on the small leaf is bounded by ITS scale, not the big one's
+    err_b = float(jnp.max(jnp.abs(out["b"] - ref["b"])))
+    assert err_b <= 2.0 * 0.01 * 8.0 * (2.0 / 256.0) + 1e-5
+    per_leaf = CommEngine(ring(8), QSGDWire(QuantSpec(bits=8)),
+                          backend="jnp", bucketed=False)
+    assert eng.bytes_per_round(X) == per_leaf.bytes_per_round(X)
+    assert eng.bytes_per_round(X) == (100 + 4 + 32 + 4) * 2
+
+
+def test_bucketed_layout_cache_reused_across_abstract_and_concrete():
+    from repro.comm import bucket
+    X = {"a": jnp.zeros((8, 100)), "b": jnp.zeros((8, 3, 7))}
+    abstract = jax.eval_shape(lambda: X)
+    assert bucket.layout_of(X, 4) is bucket.layout_of(abstract, 4)
+
+
+# ---------------------------------------------------------------------------
+# seed derivation: deterministic specs with key=None are explicit
+# ---------------------------------------------------------------------------
+
+def test_deterministic_spec_key_none_is_explicit_constant():
+    """key=None is only legal for nearest-rounding specs, where the hash
+    seed is never drawn: the mix must equal a keyed mix bit-for-bit, and
+    the placeholder seed is the documented NO_KEY_SEED constant."""
+    from repro.kernels import ops as kops
+    assert int(kops._key_to_seed(None)) == kops.NO_KEY_SEED
+    spec = QuantSpec(bits=4, stochastic=False)
+    X = _stacked()
+    for bucketed in (False, True):
+        eng = CommEngine(ring(8), MoniquaWire(spec), backend="jnp",
+                         bucketed=bucketed)
+        a = eng.mix(X, theta=2.0, key=None)
+        b = eng.mix(X, theta=2.0, key=jax.random.PRNGKey(123))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("bucketed", [False, True])
+@pytest.mark.parametrize("wire", ["moniqua", "qsgd"])
+def test_stochastic_spec_key_none_raises(bucketed, wire):
+    eng = CommEngine(ring(8), make_wire(wire, QuantSpec(bits=4,
+                                                        stochastic=True)),
+                     backend="jnp", bucketed=bucketed)
+    with pytest.raises(ValueError, match="PRNG key"):
+        eng.mix(_stacked(), theta=2.0, key=None)
 
 
 # ---------------------------------------------------------------------------

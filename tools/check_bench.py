@@ -22,9 +22,22 @@ rate for contended fabrics).  Checks:
 3. the reference still covers the required contention scenarios and
    carries a positive headline speedup with loss within tolerance.
 
+It also gates the comm-fusion trajectory (``BENCH_comm_fusion.json``, from
+``benchmarks/bench_comm_fusion.py``): for every model the smoke run's
+bucketed-vs-per-leaf speedup at the 1-bit headline codec must not regress
+more than ``--tol`` below the committed reference (one-sided — running
+*faster* than the reference never fails), and the committed reference must
+still show the >=2x bucketed win on a multi-leaf model.  Raw mix times are
+machine-dependent; the speedup is a ratio of two times on the same host,
+which is what makes it comparable across machines at all.  Fusion checks
+run only when the fusion smoke file exists (``--fusion-smoke``), so the
+network-sim gate can run standalone.
+
 Usage:  python tools/check_bench.py \\
             [--smoke BENCH_network_sim.smoke.json] \\
-            [--ref BENCH_network_sim.json] [--tol 0.25]
+            [--ref BENCH_network_sim.json] \\
+            [--fusion-smoke BENCH_comm_fusion.smoke.json] \\
+            [--fusion-ref BENCH_comm_fusion.json] [--tol 0.25]
 """
 from __future__ import annotations
 
@@ -55,14 +68,89 @@ def wire_slope(table: list, scenario: str) -> float | None:
     return (f["mean_round_s"] - q["mean_round_s"]) / db
 
 
+# the fusion gate's headline codec: where per-leaf fixed costs dominate
+FUSION_CODEC = "moniqua-1bit"
+# the committed reference must keep a >=2x bucketed win on a model with at
+# least this many leaves (the multi-leaf regime fusion exists for)
+FUSION_MIN_SPEEDUP, FUSION_MIN_LEAVES = 2.0, 16
+# every zoo model must appear in smoke AND reference — a shrinking bench
+# table must fail, not silently disable the per-model gate
+FUSION_REQUIRED_MODELS = ("resnet", "transformer", "mamba2", "moe")
+
+
+def check_fusion(smoke: dict, ref: dict, tol: float, errors: list) -> None:
+    """Per-model bucketed-speedup regression gate for BENCH_comm_fusion.
+
+    Only models the reference shows *winning* from bucketing (speedup
+    >= 1) are floor-gated: sub-1x rows are the staging-copy-bound regime
+    where per-leaf wins by design, and a ratio of two noisy sub-100ms
+    timings routinely drifts >25% run-to-run — gating them makes CI flaky
+    without guarding anything fusion promises.  They still must be
+    present (coverage check) and are reported for the trajectory.
+    """
+    def rows(d):
+        return {r["model"]: r for r in d["table"]
+                if r["codec"] == FUSION_CODEC}
+
+    s_rows, r_rows = rows(smoke), rows(ref)
+    for model in FUSION_REQUIRED_MODELS:
+        if model not in r_rows:
+            errors.append(f"fusion: required model {model!r} missing from "
+                          "reference")
+        if model not in s_rows:
+            errors.append(f"fusion: required model {model!r} missing from "
+                          "smoke run")
+    for model, s in sorted(s_rows.items()):
+        r = r_rows.get(model)
+        if r is None:
+            errors.append(f"fusion: model {model!r} missing from reference")
+            continue
+        if r["speedup_x"] < 1.0:
+            print(f"fusion: {model} speedup smoke={s['speedup_x']:.2f}x "
+                  f"ref={r['speedup_x']:.2f}x [info: per-leaf regime, "
+                  "not gated]")
+            continue
+        # floor against the promised win (capped at FUSION_MIN_SPEEDUP),
+        # not the dev host's exact ratio: the speedup's magnitude is
+        # host-profile-dependent (dispatch overhead vs copy bandwidth),
+        # and the gate exists to catch the bucketed path regressing
+        # toward parity, not a faster reference machine
+        floor = (1.0 - tol) * min(r["speedup_x"], FUSION_MIN_SPEEDUP)
+        status = "FAIL" if s["speedup_x"] < floor else "ok"
+        print(f"fusion: {model} speedup smoke={s['speedup_x']:.2f}x "
+              f"ref={r['speedup_x']:.2f}x floor={floor:.2f}x [{status}]")
+        if s["speedup_x"] < floor:
+            errors.append(f"fusion: {model} bucketed speedup regressed "
+                          f"{s['speedup_x']:.2f}x < {floor:.2f}x "
+                          f"(ref {r['speedup_x']:.2f}x - {tol:.0%})")
+    winners = [r for r in r_rows.values()
+               if r["n_leaves"] >= FUSION_MIN_LEAVES
+               and r["speedup_x"] >= FUSION_MIN_SPEEDUP]
+    if not winners:
+        errors.append(
+            f"fusion reference: no model with >= {FUSION_MIN_LEAVES} leaves "
+            f"keeps a >= {FUSION_MIN_SPEEDUP}x bucketed speedup at "
+            f"{FUSION_CODEC}")
+    else:
+        best = max(winners, key=lambda r: r["speedup_x"])
+        print(f"fusion headline: {best['model']} {best['speedup_x']:.2f}x "
+              f"({best['n_leaves']} leaves) [ok]")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke",
                     default=os.path.join(REPO, "BENCH_network_sim.smoke.json"))
     ap.add_argument("--ref",
                     default=os.path.join(REPO, "BENCH_network_sim.json"))
+    ap.add_argument("--fusion-smoke",
+                    default=os.path.join(REPO,
+                                         "BENCH_comm_fusion.smoke.json"))
+    ap.add_argument("--fusion-ref",
+                    default=os.path.join(REPO, "BENCH_comm_fusion.json"))
     ap.add_argument("--tol", type=float, default=0.25,
-                    help="max relative drift of per-scenario wire slope")
+                    help="max relative drift of per-scenario wire slope "
+                         "and of per-model bucketed speedup")
     args = ap.parse_args(argv)
 
     with open(args.smoke) as f:
@@ -120,10 +208,24 @@ def main(argv=None) -> int:
             print(f"contention: {name} {c['speedup_x']:.2f}x vs "
                   f"isolated {c['isolated_speedup_x']:.2f}x [ok]")
 
+    n_fusion = 0
+    if os.path.exists(args.fusion_smoke):
+        with open(args.fusion_smoke) as f:
+            fusion_smoke = json.load(f)
+        if not os.path.exists(args.fusion_ref):
+            errors.append(f"fusion smoke exists but reference "
+                          f"{args.fusion_ref} is missing")
+        else:
+            with open(args.fusion_ref) as f:
+                fusion_ref = json.load(f)
+            check_fusion(fusion_smoke, fusion_ref, args.tol, errors)
+            n_fusion = len({r["model"] for r in fusion_smoke["table"]})
+
     for e in errors:
         print(f"ERROR: {e}", file=sys.stderr)
     if not errors:
-        print(f"bench check OK ({len(smoke_scenarios)} scenarios compared)")
+        print(f"bench check OK ({len(smoke_scenarios)} scenarios, "
+              f"{n_fusion} fusion models compared)")
     return 1 if errors else 0
 
 
