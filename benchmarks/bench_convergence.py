@@ -1,29 +1,46 @@
 """C2 / Theorem 2 + Corollary 1: Moniqua converges per-iteration at the
 D-PSGD rate.  Trains the tiny LM under every algorithm with identical data
 and reports the loss trajectory (Fig. 1's per-epoch panel analog).
+
+The sweep includes the error-feedback wire family (``ef_qsgd`` at 4 bits,
+``onebit`` post-warmup) riding the same gossip rule, so the convergence
+side of the memory-vs-bits trade in ``BENCH_memory_overhead.json`` is
+measured on the identical data stream as the zero-memory Moniqua wire.
 """
 from __future__ import annotations
 
 from benchmarks import common as C
 
-ALGOS = [("allreduce", 32), ("dpsgd", 32), ("moniqua", 8), ("choco", 8),
-         ("deepsqueeze", 8), ("dcd", 8), ("ecd", 8)]
+# (label, algorithm, wire, bits, extra train_run kwargs)
+ALGOS = [
+    ("allreduce", "allreduce", "moniqua", 32, {}),
+    ("dpsgd", "dpsgd", "moniqua", 32, {}),
+    ("moniqua", "moniqua", "moniqua", 8, {}),
+    ("choco", "choco", "moniqua", 8, {}),
+    ("deepsqueeze", "deepsqueeze", "moniqua", 8, {}),
+    ("dcd", "dcd", "moniqua", 8, {}),
+    ("ecd", "ecd", "moniqua", 8, {}),
+    # EF codec family: same moniqua gossip rule, stateful wires; onebit's
+    # short warmup keeps most of the measured run in the 1-bit regime
+    ("ef_qsgd-4bit", "moniqua", "ef_qsgd", 4, {}),
+    ("onebit", "moniqua", "onebit", 1, {"warmup": 8}),
+]
 
 
 def run(quick: bool = False) -> dict:
     steps = 30 if quick else 80
     model = C.tiny_lm()
     rows, curves = [], {}
-    for algo, bits in ALGOS:
-        r = C.train_run(algo, bits=min(bits, 8), theta=2.0,
+    for label, algo, wire, bits, kw in ALGOS:
+        r = C.train_run(algo, bits=min(bits, 8), theta=2.0, wire=wire,
                         gamma=0.3 if algo in ("choco", "deepsqueeze") else 1.0,
-                        steps=steps, model=model)
+                        steps=steps, model=model, **kw)
         rows.append({
-            "algorithm": algo, "wire_bits": bits,
+            "algorithm": label, "wire": wire, "wire_bits": bits,
             "loss_first": r["loss_first"], "loss_last": r["loss_last"],
             "bytes_per_step": r["bytes_per_step"],
         })
-        curves[algo] = [(h["step"], h["loss"]) for h in r["history"]]
+        curves[label] = [(h["step"], h["loss"]) for h in r["history"]]
     fp = next(r for r in rows if r["algorithm"] == "dpsgd")["loss_last"]
     mq = next(r for r in rows if r["algorithm"] == "moniqua")["loss_last"]
     return {
@@ -32,7 +49,9 @@ def run(quick: bool = False) -> dict:
         "moniqua_vs_dpsgd_gap": (mq - fp) / fp,
         "notes": ("Identical data/seeds across algorithms; Moniqua's "
                   "final loss is within a few percent of full-precision "
-                  "D-PSGD at 1/4 the wire bytes (C2)."),
+                  "D-PSGD at 1/4 the wire bytes (C2).  ef_qsgd/onebit "
+                  "rows show what the EF wires' Theta(nd) residual "
+                  "memory buys in convergence terms."),
     }
 
 

@@ -20,6 +20,12 @@ PyTree = Any
 _SEP = "|"
 
 
+def _is_typed_key(leaf: Any) -> bool:
+    dtype = getattr(leaf, "dtype", None)
+    return dtype is not None and jax.dtypes.issubdtype(dtype,
+                                                       jax.dtypes.prng_key)
+
+
 def _flatten_paths(tree: PyTree) -> Dict[str, np.ndarray]:
     out = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
@@ -31,6 +37,11 @@ def _flatten_paths(tree: PyTree) -> Dict[str, np.ndarray]:
                 parts.append(f"#{p.idx}")
             else:
                 parts.append(str(p))
+        if _is_typed_key(leaf):
+            # new-style typed PRNG keys carry an opaque extended dtype numpy
+            # cannot hold; persist the raw uint32 key data (restore() wraps
+            # it back).  Legacy uint32[2] keys pass through as plain arrays.
+            leaf = jax.random.key_data(leaf)
         arr = np.asarray(jax.device_get(leaf))
         if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
             # numpy cannot serialise ml_dtypes (bf16, fp8): upcast losslessly;
@@ -49,14 +60,24 @@ def save(path: str, tree: PyTree, meta: Dict | None = None) -> None:
 
 
 def restore(path: str, like: PyTree) -> PyTree:
-    """Restore into the structure (and dtypes) of ``like``."""
+    """Restore into the structure (and dtypes) of ``like``.
+
+    Typed PRNG-key leaves in ``like`` are re-wrapped from their saved raw
+    key data under the same PRNG impl, so full trainer states (which carry
+    the step key) round-trip bit-identically alongside plain arrays."""
     npz = np.load(path if path.endswith(".npz") else path + ".npz")
     flat = _flatten_paths(jax.tree.map(lambda a: np.zeros((), np.int8), like))
     leaves, treedef = jax.tree.flatten(like)
     keys = list(flat.keys())
     assert len(keys) == len(leaves), (len(keys), len(leaves))
-    restored = [jnp.asarray(npz[k]).astype(l.dtype)
-                for k, l in zip(keys, leaves)]
+
+    def back(k: str, l: Any):
+        if _is_typed_key(l):
+            return jax.random.wrap_key_data(jnp.asarray(npz[k]),
+                                            impl=jax.random.key_impl(l))
+        return jnp.asarray(npz[k]).astype(l.dtype)
+
+    restored = [back(k, l) for k, l in zip(keys, leaves)]
     return jax.tree.unflatten(treedef, restored)
 
 

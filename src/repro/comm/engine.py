@@ -13,8 +13,12 @@ paper's algorithm zoo (and every future scaling PR) plugs into:
 
 * **codec** — what rides on the wire: ``FullPrecisionWire`` (D-PSGD baseline;
   (*) then collapses to the circulant ``X W``), ``MoniquaWire`` (Algorithm 1's
-  bit-packed modulo residue, no scales, no extra state), or ``QSGDWire``
-  (Alistarh et al. 2017 scale+codes, the obvious external comparison).
+  bit-packed modulo residue, no scales, no extra state), ``QSGDWire``
+  (Alistarh et al. 2017 scale+codes, the obvious external comparison), or
+  the *stateful* error-feedback family — ``EFQSGDWire`` and ``OneBitWire``
+  (1-bit Adam-style warmup + sign codes) — which carry a per-worker
+  ``WireState`` pytree (EF residual + warmup counter) as an explicit
+  jit-safe carry through ``mix``/``pair_average``; see ``docs/codecs.md``.
 * **topology** — any circulant :class:`~repro.core.topology.Topology`; the
   weights are static so they compile into the mixing (and into the fused
   kernel's unrolled reduction).
@@ -73,16 +77,20 @@ import numpy as np
 from repro.comm import bucket, gossip
 from repro.comm.gossip import BytesLedger
 from repro.core import modulo
-from repro.core.quantizers import (QuantSpec, packed_last_dim, qsgd_decode,
-                                   qsgd_decode_segmented, qsgd_encode,
-                                   qsgd_encode_segmented, qsgd_payload_bytes)
+from repro.core.quantizers import (QuantSpec, ef_qsgd_encode_segmented,
+                                   onebit_decode_segmented,
+                                   onebit_encode_segmented,
+                                   onebit_payload_bytes, packed_last_dim,
+                                   qsgd_decode, qsgd_decode_segmented,
+                                   qsgd_encode, qsgd_encode_segmented,
+                                   qsgd_payload_bytes)
 from repro.core.topology import Topology
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 
 PyTree = Any
 
-WIRES = ("full", "moniqua", "qsgd")
+WIRES = ("full", "moniqua", "qsgd", "ef_qsgd", "onebit")
 BACKENDS = ("auto", "jnp", "pallas")
 
 
@@ -130,7 +138,47 @@ class QSGDWire:
         return qsgd_payload_bytes(shape, self.spec.bits)
 
 
-def make_wire(name: str, spec: Optional[QuantSpec] = None):
+@dataclasses.dataclass(frozen=True)
+class EFQSGDWire:
+    """Error-feedback QSGD (Tang et al. 2019 style): quantize ``x + residual``
+    with the scale+codes wire, keep ``residual' = x + residual - decode(sent)``
+    per worker.  Stateful: pays one f32 residual buffer per worker (Θ(nd)
+    graph-wide) — the memory axis ``BENCH_memory_overhead.json`` prices
+    against Moniqua's zero-extra-state wire."""
+    spec: QuantSpec = dataclasses.field(default_factory=QuantSpec)
+    name = "ef_qsgd"
+    stateful = True
+
+    def payload_bytes(self, shape: Tuple[int, ...], itemsize: int = 4) -> int:
+        return qsgd_payload_bytes(shape, self.spec.bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class OneBitWire:
+    """1-bit Adam-style compressed wire: full-precision gossip for the first
+    ``warmup`` rounds, then 1-bit sign codes of the compensated value (with
+    per-segment cluster-mean levels) and an error-feedback residual.  The
+    carried step counter is the ``need_reset``-style hook: crossing it flips
+    the round's codec inside the jitted step (a ``jnp.where`` select — see
+    ``_ef_flat_round``), and checkpointing the counter resumes the schedule
+    bit-identically."""
+    spec: QuantSpec = dataclasses.field(
+        default_factory=lambda: QuantSpec(bits=1, stochastic=False))
+    warmup: int = 16
+    name = "onebit"
+    stateful = True
+
+    def payload_bytes(self, shape: Tuple[int, ...], itemsize: int = 4) -> int:
+        """Steady-state (post-warmup) bytes; warmup rounds ship f32
+        (``warmup_payload_bytes``) — accounting reports the steady state."""
+        return onebit_payload_bytes(shape)
+
+    def warmup_payload_bytes(self, shape: Tuple[int, ...],
+                             itemsize: int = 4) -> int:
+        return int(np.prod(shape, dtype=np.int64)) * 4 if shape else 4
+
+
+def make_wire(name: str, spec: Optional[QuantSpec] = None, warmup: int = 16):
     spec = spec or QuantSpec()
     if name == "full":
         return FullPrecisionWire()
@@ -138,6 +186,12 @@ def make_wire(name: str, spec: Optional[QuantSpec] = None):
         return MoniquaWire(spec)
     if name == "qsgd":
         return QSGDWire(spec)
+    if name == "ef_qsgd":
+        return EFQSGDWire(spec)
+    if name == "onebit":
+        # the sign path is 1 bit by construction; keep the caller's
+        # stochastic/nearest choice but pin the packable width
+        return OneBitWire(dataclasses.replace(spec, bits=1), warmup=warmup)
     raise ValueError(f"unknown wire codec {name!r}; one of {WIRES}")
 
 
@@ -173,15 +227,66 @@ class CommEngine:
     backend: str = "auto"
     bucketed: bool = True
 
+    # -- persistent per-worker codec state (WireState) ---------------------
+    @property
+    def stateful(self) -> bool:
+        """True for wires carrying per-worker state (EF residuals) across
+        rounds; their ``mix`` takes a ``state`` carry and returns
+        ``(X, new_state)`` — thread it like ``theta``, checkpoint it like
+        params (``checkpoint/ckpt.py`` serializes it inside trainer state)."""
+        return bool(getattr(self.codec, "stateful", False))
+
+    def init_wire_state(self, X: PyTree) -> dict:
+        """Fresh ``WireState`` for a stacked pytree (``{}`` for stateless
+        wires).  Accepts abstract ``ShapeDtypeStruct`` trees — only shapes
+        are read, so trainers can build it under ``jax.eval_shape``.
+
+        The residual lives in the *flat bucket domain* ``[n, padded_elems]``
+        (one f32 per row-aligned element): both the bucketed and the
+        per-leaf gossip paths read and write the same canonical buffer,
+        which is what lets them produce bit-identical post-round state.
+        """
+        if not self.stateful:
+            return {}
+        layout = self.layout(X)
+        return {"residual": jnp.zeros((layout.n_workers,
+                                       layout.padded_elems), jnp.float32),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def wire_state_bytes(self, X: PyTree) -> int:
+        """Per-worker bytes of persistent codec state (Tables 1-2 memory
+        column): 0 for full/moniqua/qsgd, residual + counter for EF wires."""
+        if not self.stateful or not jax.tree.leaves(X):
+            return 0
+        return self.layout(X).padded_elems * 4 + 4
+
     # -- the tentpole primitive --------------------------------------------
     def mix(self, X: PyTree, theta=None, key: Optional[jax.Array] = None,
-            ledger: Optional[BytesLedger] = None) -> PyTree:
+            ledger: Optional[BytesLedger] = None,
+            state: Optional[dict] = None) -> PyTree:
         """One gossip round on stacked models (leaves ``[n, ...]``).
 
         Returns ``X_{k+1/2}``; with the full-precision codec this is exactly
         the circulant ``X W`` of ``gossip.mix``.  ``ledger`` (if given) is
         credited at trace time with payload-bytes * n_neighbors per round.
+
+        Stateful wires (``self.stateful``) additionally require the
+        ``state`` carry from :meth:`init_wire_state` and return
+        ``(X_{k+1/2}, new_state)`` — an explicit jit-safe carry, exactly
+        like ``theta``.
         """
+        if self.stateful:
+            if not isinstance(state, dict) or "residual" not in state:
+                raise ValueError(
+                    f"{self.codec.name} wire is stateful: pass "
+                    "state=engine.init_wire_state(X) and thread the "
+                    "returned (X, state) carry across rounds")
+            offsets = self.topo.neighbor_offsets()
+            if not offsets or not jax.tree.leaves(X):
+                return X, state              # nothing on the wire
+            if ledger is not None:
+                self._record(X, ledger)
+            return self._mix_stateful(X, state, key)
         offsets = self.topo.neighbor_offsets()
         if not offsets:                      # single worker: nothing on wire
             return X
@@ -255,6 +360,98 @@ class CommEngine:
         out = (flat.astype(jnp.float32) + acc).astype(flat.dtype)
         return layout.unflatten(out)
 
+    # -- stateful wires: error-feedback rounds on the flat bucket ----------
+    def _mix_stateful(self, X: PyTree, state: dict,
+                      key: Optional[jax.Array]
+                      ) -> Tuple[PyTree, dict]:
+        """One EF gossip round; returns ``(X_{k+1/2}, new WireState)``.
+
+        Both the bucketed and the per-leaf paths run the same per-segment
+        math on the canonical flat residual buffer: the bucketed round does
+        it in one segmented launch over ``[n, D]``, the per-leaf round one
+        leaf segment at a time (each leaf's payload rolled separately).
+        Same per-segment scales, same row-position rounding uniforms
+        (``idx_base`` = the segment's bucket offset), same accumulation
+        order — so outputs, payload bits, AND post-round state agree
+        bitwise (the ``tests/test_engine.py`` stateful contracts).
+
+        EF math runs in f32 on both backends (no Pallas kernel for the EF
+        wires yet; ``resolve_backend`` still validates the name so the
+        engine surface stays uniform).
+        """
+        resolve_backend(self.backend)
+        self._require_key(key)
+        seed = kops._key_to_seed(key)
+        layout = self.layout(X)
+        flat = layout.flatten(X).astype(jnp.float32)
+        residual, step = state["residual"], state["step"]
+        if self.bucketed:
+            out, res = self._ef_flat_round(flat, residual,
+                                           layout.segment_sizes, 0, seed,
+                                           step)
+        else:
+            out = jnp.zeros_like(flat)
+            res = jnp.zeros_like(residual)
+            for s in layout.slots:
+                vi = jax.lax.slice_in_dim(flat, s.offset,
+                                          s.offset + s.padded_size, axis=1)
+                ri = jax.lax.slice_in_dim(residual, s.offset,
+                                          s.offset + s.padded_size, axis=1)
+                oi, rn = self._ef_flat_round(vi, ri, (s.padded_size,),
+                                             s.offset, seed, step)
+                out = jax.lax.dynamic_update_slice(out, oi, (0, s.offset))
+                res = jax.lax.dynamic_update_slice(res, rn, (0, s.offset))
+        new_state = {"residual": res, "step": step + jnp.int32(1)}
+        return layout.unflatten(out.astype(layout.stage_dtype)), new_state
+
+    def _ef_flat_round(self, v_base: jax.Array, residual: jax.Array,
+                       segments: Tuple[int, ...], idx_base: int,
+                       seed: jax.Array, step: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+        """EF round on one flat f32 buffer slice: encode ``v = x + r``,
+        gossip the codes, mix ``x + sum w_o (decode_j - decode_self)``,
+        keep ``r' = v - decode_self``."""
+        offsets = self.topo.neighbor_offsets()
+        weights = self._neighbor_weights()
+        spec = self.codec.spec
+
+        def reduce(d_self, decode_neighbor):
+            acc = None
+            for o, w in zip(offsets, weights):
+                t = (decode_neighbor(o) - d_self) * w
+                acc = t if acc is None else acc + t
+            return v_base + acc
+
+        if self.codec.name == "ef_qsgd":
+            v = v_base + residual
+            packed, scales = ef_qsgd_encode_segmented(v, spec, seed,
+                                                      segments, idx_base)
+            d_self = qsgd_decode_segmented(packed, scales, spec, segments)
+            out = reduce(d_self, lambda o: qsgd_decode_segmented(
+                gossip._roll(packed, o), gossip._roll(scales, o), spec,
+                segments))
+            return out, v - d_self
+
+        # onebit: fp32 gossip during warmup, 1-bit sign codes + EF after.
+        # The step counter is the need_reset-style switch.  Selected with
+        # jnp.where, NOT lax.cond: cond branch bodies are optimized as
+        # separate XLA computations whose fusion/FMA choices depend on the
+        # buffer width, which breaks the bucketed-vs-per-leaf bitwise
+        # contract at the ulp level.  Both value streams are cheap
+        # elementwise math next to the communication, so computing both and
+        # selecting is the right trade.
+        warm_p = step < self.codec.warmup
+        out_warm = gossip.mix(v_base, self.topo)
+        v = v_base + residual
+        packed, lo, hi = onebit_encode_segmented(v, seed, segments, idx_base,
+                                                 spec.stochastic)
+        d_self = onebit_decode_segmented(packed, lo, hi, segments)
+        out_q = reduce(d_self, lambda o: onebit_decode_segmented(
+            gossip._roll(packed, o), gossip._roll(lo, o),
+            gossip._roll(hi, o), segments))
+        return (jnp.where(warm_p, out_warm, out_q),
+                jnp.where(warm_p, residual, v - d_self))
+
     def _mix_leaf(self, x: jax.Array, theta, seed: jax.Array,
                   backend: str, idx_base=0) -> jax.Array:
         if x.ndim == 1:      # scalar-per-worker leaf: give it a unit last axis
@@ -319,16 +516,37 @@ class CommEngine:
                 "PRNG key (pass key=, or use a nearest-rounding QuantSpec)")
 
     # -- AD-PSGD's primitive: one edge exchange ----------------------------
+    def init_edge_state(self, x: jax.Array) -> dict:
+        """Per-endpoint ``WireState`` for :meth:`pair_average` (AD-PSGD
+        edges): the EF residual lives in the padded flat domain of one
+        model copy, plus the warmup step counter.  ``{}`` for stateless
+        wires.  Accepts abstract shapes."""
+        if not self.stateful:
+            return {}
+        vpb = self.codec.spec.values_per_byte
+        size = int(np.prod(x.shape, dtype=np.int64))
+        padded = -(-size // vpb) * vpb
+        return {"residual": jnp.zeros((padded,), jnp.float32),
+                "step": jnp.zeros((), jnp.int32)}
+
     def pair_average(self, xi: jax.Array, xj: jax.Array, theta=None,
-                     key: Optional[jax.Array] = None
-                     ) -> Tuple[jax.Array, jax.Array]:
+                     key: Optional[jax.Array] = None,
+                     state_i: Optional[dict] = None,
+                     state_j: Optional[dict] = None
+                     ) -> Tuple[jax.Array, ...]:
         """One gossip on edge (i, j) with the pair-averaging ``W_k``.
 
         Quantized codecs exchange payloads and decode against each endpoint's
         own model (Algorithm 3 lines 4-7); both endpoints encode under the
         same seed (shared randomness).  Simulator-scale API: always pure-jnp
         (AD-PSGD runs under ``lax.scan`` on host devices).
+
+        Stateful wires additionally require per-endpoint ``state_i`` /
+        ``state_j`` carries from :meth:`init_edge_state` and return a
+        4-tuple ``(xi', xj', state_i', state_j')``.
         """
+        if self.stateful:
+            return self._pair_average_stateful(xi, xj, key, state_i, state_j)
         if self.codec.name == "full":
             avg = 0.5 * (xi + xj)
             return avg, avg
@@ -357,6 +575,66 @@ class CommEngine:
         qj = qsgd_decode(pj, sj, spec, xj.shape[-1])
         return xi + 0.5 * (qj - qi), xj + 0.5 * (qi - qj)
 
+    def _pair_average_stateful(self, xi: jax.Array, xj: jax.Array,
+                               key: Optional[jax.Array],
+                               state_i: Optional[dict],
+                               state_j: Optional[dict]
+                               ) -> Tuple[jax.Array, jax.Array, dict, dict]:
+        """EF edge exchange: each endpoint compensates with its own residual,
+        ships codes of ``x + r``, and keeps ``r' = x + r - decode(sent)``."""
+        for s in (state_i, state_j):
+            if not isinstance(s, dict) or "residual" not in s:
+                raise ValueError(
+                    f"{self.codec.name} wire is stateful: pass state_i/"
+                    "state_j=engine.init_edge_state(x) and thread the "
+                    "returned (xi, xj, state_i, state_j) across edges")
+        self._require_key(key)
+        seed = kops._key_to_seed(key)
+        spec = self.codec.spec
+        size = int(np.prod(xi.shape, dtype=np.int64))
+        padded = state_i["residual"].shape[0]
+        seg = (padded,)
+
+        def flat(x):
+            f = jnp.ravel(x).astype(jnp.float32)
+            return jnp.pad(f, (0, padded - size))[None, :]
+
+        def unflat(f, like):
+            return f[0, :size].reshape(like.shape).astype(like.dtype)
+
+        fi, fj = flat(xi), flat(xj)
+        vi = fi + state_i["residual"][None, :]
+        vj = fj + state_j["residual"][None, :]
+
+        if self.codec.name == "ef_qsgd":
+            pi, si = ef_qsgd_encode_segmented(vi, spec, seed, seg)
+            pj, sj = ef_qsgd_encode_segmented(vj, spec, seed, seg)
+            di = qsgd_decode_segmented(pi, si, spec, seg)
+            dj = qsgd_decode_segmented(pj, sj, spec, seg)
+            oi, oj = fi + 0.5 * (dj - di), fj + 0.5 * (di - dj)
+            ri, rj = vi - di, vj - dj
+        else:
+            # onebit: a mixed pair stays full-precision — the earlier of
+            # the two counters decides warm-vs-quantized.  where-select
+            # (not lax.cond) for the same bitwise-contract reason as the
+            # gossip round.
+            warm_p = jnp.minimum(state_i["step"],
+                                 state_j["step"]) < self.codec.warmup
+            avg = 0.5 * (fi + fj)
+            pi, loi, hii = onebit_encode_segmented(vi, seed, seg, 0,
+                                                   spec.stochastic)
+            pj, loj, hij = onebit_encode_segmented(vj, seed, seg, 0,
+                                                   spec.stochastic)
+            di = onebit_decode_segmented(pi, loi, hii, seg)
+            dj = onebit_decode_segmented(pj, loj, hij, seg)
+            oi = jnp.where(warm_p, avg, fi + 0.5 * (dj - di))
+            oj = jnp.where(warm_p, avg, fj + 0.5 * (di - dj))
+            ri = jnp.where(warm_p, state_i["residual"][None, :], vi - di)
+            rj = jnp.where(warm_p, state_j["residual"][None, :], vj - dj)
+        return (unflat(oi, xi), unflat(oj, xj),
+                {"residual": ri[0], "step": state_i["step"] + jnp.int32(1)},
+                {"residual": rj[0], "step": state_j["step"] + jnp.int32(1)})
+
     # -- gossip building blocks shared by the algorithm zoo ----------------
     def neighbor_sum(self, X: PyTree, transform) -> PyTree:
         """``sum_{o != 0} w_o * transform(roll(X, -o), o)`` leaf-wise."""
@@ -381,6 +659,18 @@ class CommEngine:
         """
         if not jax.tree.leaves(X):
             return 0
+        if self.stateful:
+            # EF wires gossip packed flat segments on BOTH paths (the
+            # per-leaf round slices the same canonical bucket buffer), so
+            # the accounting is layout-based either way: packed codes plus
+            # per-segment scale words (one f32 for ef_qsgd, a lo/hi level
+            # pair for onebit).  onebit warmup rounds ship f32
+            # (``warmup_payload_bytes``); steady state is what's reported.
+            layout = self.layout(X)
+            nbytes = layout.padded_elems // self.codec.spec.values_per_byte
+            nbytes += (4 if self.codec.name == "ef_qsgd"
+                       else 8) * layout.num_leaves
+            return nbytes
         if self.bucketed:
             layout = self.layout(X)
             if self.codec.name == "full":

@@ -60,9 +60,12 @@ class AlgoHyper:
     wire: str = "moniqua"         # wire codec for quantized gossip (engine())
     backend: str = "auto"         # comm backend: jnp | pallas | auto
     bucketed: bool = True         # flat-buffer gossip (comm/bucket.py)
+    warmup: int = 16              # onebit wire: fp32 rounds before 1-bit+EF
 
     def engine(self) -> CommEngine:
-        return CommEngine(self.topo, make_wire(self.wire, self.codec.spec),
+        return CommEngine(self.topo,
+                          make_wire(self.wire, self.codec.spec,
+                                    warmup=self.warmup),
                           self.backend, bucketed=self.bucketed)
 
     def exact_engine(self) -> CommEngine:
@@ -213,16 +216,37 @@ class NaiveQuant(Algorithm):
 
 
 class Moniqua(Algorithm):
-    """Algorithm 1 (gossip through the engine's configured wire codec)."""
+    """Algorithm 1 (gossip through the engine's configured wire codec).
+
+    With a stateful wire (``hp.wire`` in ``ef_qsgd``/``onebit``) this is the
+    error-feedback gossip family: the per-worker ``WireState`` (residual +
+    warmup counter) lives under ``extra["wire"]`` and is threaded through
+    the engine's ``mix`` carry — which is exactly what puts EF's Θ(nd)
+    buffers on the Table 1/2 memory axis while Moniqua's own wire stays at
+    zero (``extra_memory_bytes``)."""
     name = "moniqua"
     quantized = True
 
+    def init(self, X, hp):
+        eng = hp.engine()
+        return {"wire": eng.init_wire_state(X)} if eng.stateful else {}
+
     def step(self, X, extra, g, alpha, k, key, hp):
-        Xm = hp.engine().mix(X, theta=hp.theta, key=key)
+        eng = hp.engine()
+        if eng.stateful:
+            Xm, ws = eng.mix(X, theta=hp.theta, key=key,
+                             state=extra["wire"])
+            return _sgd(Xm, g, alpha), {"wire": ws}
+        Xm = eng.mix(X, theta=hp.theta, key=key)
         return _sgd(Xm, g, alpha), extra
 
     def bytes_per_step(self, X, hp):
         return hp.engine().bytes_per_round(X)
+
+    def extra_memory_bytes(self, X, hp):
+        # 0 for the moniqua wire (the headline claim); residual + counter
+        # for the EF wires (Θ(nd) graph-wide)
+        return hp.engine().wire_state_bytes(X)
 
 
 class ChocoSGD(Algorithm):
@@ -358,20 +382,43 @@ class D2(Algorithm):
 
 
 class MoniquaD2(D2):
-    """Moniqua on D^2 (Algorithm 2): quantized gossip of the half-step."""
+    """Moniqua on D^2 (Algorithm 2): quantized gossip of the half-step.
+
+    Stateful wires ride along like in :class:`Moniqua`: the ``WireState``
+    sits under ``extra["wire"]`` next to D^2's own x_prev/g_prev carry."""
     name = "moniqua_d2"
     quantized = True
 
+    def init(self, X, hp):
+        extra = super().init(X, hp)
+        eng = hp.engine()
+        if eng.stateful:
+            extra["wire"] = eng.init_wire_state(X)
+        return extra
+
     def step(self, X, extra, g, alpha, k, key, hp):
         Xh = self._half_step(X, extra, g, alpha)
-        Xn = hp.engine().mix(Xh, theta=hp.theta, key=key)
+        eng = hp.engine()
+        ws = None
+        if eng.stateful:
+            Xn, ws = eng.mix(Xh, theta=hp.theta, key=key,
+                             state=extra["wire"])
+        else:
+            Xn = eng.mix(Xh, theta=hp.theta, key=key)
         Xn = jax.tree.map(lambda a, x: a.astype(x.dtype), Xn, X)
         extra = {"x_prev": jax.tree.map(lambda x: x.astype(jnp.float32), X),
                  "g_prev": g, "alpha_prev": jnp.asarray(alpha, jnp.float32)}
+        if ws is not None:
+            extra["wire"] = ws
         return Xn, extra
 
     def bytes_per_step(self, X, hp):
         return hp.engine().bytes_per_round(X)
+
+    def extra_memory_bytes(self, X, hp):
+        # D^2's inherent x_prev + g_prev, plus any EF wire state
+        return (super().extra_memory_bytes(X, hp)
+                + hp.engine().wire_state_bytes(X))
 
 
 ALGORITHMS: Dict[str, Algorithm] = {a.name: a for a in [

@@ -295,6 +295,134 @@ def qsgd_payload_bytes(x_shape: tuple[int, ...], bits: int) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Error-feedback codec family (Tang et al. 2019; Seide et al. 1-bit SGD;
+# Tang et al. 2021 "1-bit Adam").  Unlike Moniqua, these wires carry
+# *persistent per-worker state*: an f32 residual buffer accumulating what
+# quantization dropped, re-injected into the next round's compressed value.
+# The repo prices that Θ(nd) memory against Moniqua's zero-extra-memory
+# claim in BENCH_memory_overhead.json.
+#
+# Randomness convention: stochastic rounding draws one uniform per flat
+# *row position* (``idx_base + e``), hashed worker-free — every worker and
+# both the bucketed and per-leaf gossip paths see the same uniform for a
+# given element, which is what makes the paths bit-exact against each
+# other (the ``tests/test_ef_codecs.py`` / ``tests/test_engine.py``
+# contracts) and preserves Supp.-C shared randomness.
+# ---------------------------------------------------------------------------
+
+def _position_uniform(seed: jax.Array, idx_base, width: int) -> jax.Array:
+    """``[1, width]`` uniforms hashed from the flat row position only."""
+    idx = jnp.arange(width, dtype=jnp.uint32) + jnp.uint32(idx_base)
+    return _counter_uniform(jnp.asarray(seed, jnp.uint32), idx)[None, :]
+
+
+def ef_qsgd_encode_segmented(v: jax.Array, spec: QuantSpec,
+                             seed: Optional[jax.Array],
+                             segments: tuple[int, ...],
+                             idx_base: int = 0
+                             ) -> tuple[jax.Array, jax.Array]:
+    """QSGD codes for an error-compensated flat ``[n, D]`` bucket.
+
+    Same scale+codes wire format as :func:`qsgd_encode_segmented` (one
+    max-norm f32 scale per segment, packed codes), but rounding uniforms
+    come from the worker-free row-position hash so the per-leaf and
+    bucketed paths (and all workers) draw identical uniforms.  ``v`` is
+    the *compensated* value ``x + residual``; the caller keeps
+    ``residual' = v - decode(sent)`` (see ``CommEngine._ef_flat_round``).
+    """
+    vf = v.astype(jnp.float32)
+    off, parts = 0, []
+    for size in segments:
+        seg = jax.lax.slice_in_dim(vf, off, off + size, axis=1)
+        parts.append(jnp.max(jnp.abs(seg), axis=1, keepdims=True))
+        off += size
+    scales = jnp.concatenate(parts, axis=1) + 1e-12     # [n, L]
+    smap = _segment_scale_map(scales, segments)         # [n, D]
+    lat = _to_lattice(vf / (2.0 * smap), spec.levels)
+    if spec.stochastic:
+        if seed is None:
+            raise ValueError("stochastic EF-QSGD rounding needs a seed")
+        codes = jnp.floor(lat + _position_uniform(seed, idx_base,
+                                                  vf.shape[-1]))
+    else:
+        codes = jnp.floor(lat + 0.5)
+    codes = jnp.clip(codes, 0, spec.levels - 1).astype(jnp.uint8)
+    return pack_codes(codes, spec.bits), scales
+
+
+def onebit_encode_segmented(v: jax.Array, seed: Optional[jax.Array],
+                            segments: tuple[int, ...],
+                            idx_base: int = 0, stochastic: bool = False
+                            ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """1-bit sign codec with per-segment cluster-mean levels (1-bit Adam
+    wire; Seide et al. 2014 reconstruction).
+
+    Each segment partitions elements by sign and ships two f32
+    reconstruction levels — ``lo`` = mean of the negative cluster, ``hi``
+    = mean of the non-negative cluster — plus one bit per element
+    choosing a level: code 1 decodes to exactly ``hi``, code 0 to exactly
+    ``lo`` (decode is a select, not arithmetic, so the shipped levels
+    round-trip bitwise).  Cluster means, NOT the literal segment min/max:
+    reconstructing at the cluster means makes the compression error the
+    within-cluster variance, strictly below ``||v||^2`` — a contractive
+    compressor, which the error-feedback loop needs.  Min/max endpoint
+    levels are not contractive near consensus (every mid-range element
+    pays ~span/2 error, so ``||err|| >> ||v||`` once workers agree) and
+    measurably diverge under iterated gossip.
+
+    Nearest mode codes the sign partition itself (deterministic, as in
+    the 1-bit SGD/Adam literature — EF absorbs the bias); stochastic mode
+    picks ``hi`` with probability ``(v - lo) / (hi - lo)`` (clipped),
+    drawing from the row-position hash.  Returns
+    ``(packed bits, lo [n, L], hi [n, L])``.
+    """
+    vf = v.astype(jnp.float32)
+    pos = vf >= 0.0
+    off, los, his = 0, [], []
+    for size in segments:
+        seg = jax.lax.slice_in_dim(vf, off, off + size, axis=1)
+        m = jax.lax.slice_in_dim(pos, off, off + size, axis=1)
+        n_pos = jnp.sum(m, axis=1, keepdims=True)
+        pos_sum = jnp.sum(jnp.where(m, seg, 0.0), axis=1, keepdims=True)
+        neg_sum = jnp.sum(jnp.where(m, 0.0, seg), axis=1, keepdims=True)
+        his.append(pos_sum / jnp.maximum(n_pos, 1))
+        los.append(neg_sum / jnp.maximum(size - n_pos, 1))
+        off += size
+    lo = jnp.concatenate(los, axis=1)                   # [n, L]
+    hi = jnp.concatenate(his, axis=1)
+    if stochastic:
+        if seed is None:
+            raise ValueError("stochastic 1-bit rounding needs a seed")
+        lomap = _segment_scale_map(lo, segments)        # [n, D]
+        span = _segment_scale_map(hi, segments) - lomap
+        lat = jnp.clip((vf - lomap) / jnp.where(span > 0, span, 1.0),
+                       0.0, 1.0)
+        codes = jnp.floor(lat + _position_uniform(seed, idx_base,
+                                                  vf.shape[-1]))
+        codes = jnp.clip(codes, 0, 1).astype(jnp.uint8)
+    else:
+        codes = pos.astype(jnp.uint8)
+    return pack_codes(codes, 1), lo, hi
+
+
+def onebit_decode_segmented(packed: jax.Array, lo: jax.Array, hi: jax.Array,
+                            segments: tuple[int, ...]) -> jax.Array:
+    """Inverse of :func:`onebit_encode_segmented`: select lo/hi per bit."""
+    codes = unpack_codes(packed, 1, sum(segments))
+    lomap = _segment_scale_map(lo, segments)
+    himap = _segment_scale_map(hi, segments)
+    return jnp.where(codes.astype(bool), himap, lomap)
+
+
+def onebit_payload_bytes(x_shape: tuple[int, ...]) -> int:
+    """Steady-state wire bytes for one tensor: 1 bit/param + lo/hi words."""
+    if not x_shape:
+        return 1 + 8
+    inner = int(np.prod(x_shape[:-1], dtype=np.int64))
+    return inner * packed_last_dim(x_shape[-1], 1) + 8
+
+
+# ---------------------------------------------------------------------------
 # Worker-indexed keys for (non-)shared randomness.
 # ---------------------------------------------------------------------------
 

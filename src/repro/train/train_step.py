@@ -13,6 +13,13 @@ inside the jitted step flattens the whole param tree through a memoized
 ``comm/bucket.py`` layout — the trainer warms that cache from the abstract
 state before jit, so tracing never rebuilds it.
 
+Stateful wires (``ef_qsgd`` / ``onebit``) need no special-casing here: their
+per-worker ``WireState`` (EF residual + warmup counter) lives inside the
+algorithm's ``extra`` carry, so it flows through the jitted step, the
+``extra_spec`` sharding resolution (residual rows shard on the worker axis,
+the counter replicates), and full-state checkpointing like any other
+algorithm buffer.
+
 ``state_pspecs`` / ``batch_pspecs`` resolve the logical-axis annotations into
 PartitionSpecs for jit shardings (trainer and launch/dryrun share them).
 """

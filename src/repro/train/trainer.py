@@ -44,9 +44,11 @@ class TrainerConfig:
     seed: int = 0
     checkpoint_path: Optional[str] = None
     checkpoint_every: int = 0
-    wire: str = "moniqua"       # CommEngine wire codec (moniqua | qsgd | full)
+    wire: str = "moniqua"       # CommEngine wire codec (moniqua | qsgd |
+                                #   ef_qsgd | onebit | full)
     backend: str = "auto"       # CommEngine backend (jnp | pallas | auto)
     bucketed: bool = True       # flat-buffer gossip (comm/bucket.py)
+    warmup: int = 16            # onebit wire: fp32 rounds before 1-bit+EF
 
 
 def build_hyper(tc: TrainerConfig) -> AlgoHyper:
@@ -57,7 +59,7 @@ def build_hyper(tc: TrainerConfig) -> AlgoHyper:
     spec = QuantSpec(bits=tc.bits, stochastic=tc.bits > 1)
     return AlgoHyper(topo=topo, codec=MoniquaCodec(spec), theta=tc.theta,
                      gamma=tc.gamma, wire=tc.wire, backend=tc.backend,
-                     bucketed=tc.bucketed)
+                     bucketed=tc.bucketed, warmup=tc.warmup)
 
 
 class Trainer:
@@ -109,18 +111,38 @@ class Trainer:
     def bytes_per_step(self, state) -> int:
         return self.algo.bytes_per_step(state["params"], self.hp)
 
+    def restore_state(self, path: Optional[str] = None) -> PyTree:
+        """Rebuild FULL trainer state (params, momentum, algorithm extras
+        including any ``WireState``, step, g_inf, PRNG key) from the
+        ``<checkpoint_path>.state`` file ``run()`` writes.  Passing the
+        result back into ``run()`` resumes bit-identically — the contract
+        ``tests/test_ckpt_state.py`` pins down."""
+        from repro.checkpoint import ckpt
+        path = path or self.tc.checkpoint_path
+        if not path:
+            raise ValueError("restore_state needs a checkpoint path "
+                             "(argument or TrainerConfig.checkpoint_path)")
+        state = ckpt.restore(path + ".state", self.init_state())
+        if self.mesh is not None:
+            state = jax.device_put(state, self._state_sh)
+        return state
+
     def run(self, state: Optional[PyTree] = None,
             callback: Optional[Callable[[int, Dict], None]] = None
             ) -> Dict[str, Any]:
         from repro.checkpoint import ckpt
         tc = self.tc
         state = state if state is not None else self.init_state()
+        # resume-aware: a restored state carries its own step counter, and
+        # the data pipeline is indexed by the global step, so a resumed run
+        # replays exactly the batches the uninterrupted run would have seen
+        k0 = int(jax.device_get(state["step"]))
         history: List[Dict] = []
         t0 = time.time()
-        for k in range(tc.steps):
+        for k in range(k0, k0 + tc.steps):
             batch = self.pipeline.worker_batch(k)
             state, metrics = self.jstep(state, batch)
-            if k % tc.log_every == 0 or k == tc.steps - 1:
+            if (k - k0) % tc.log_every == 0 or k == k0 + tc.steps - 1:
                 m = {kk: float(v) for kk, v in metrics.items()}
                 m["step"] = k
                 m["wall"] = time.time() - t0
@@ -129,7 +151,11 @@ class Trainer:
                     callback(k, m)
             if (tc.checkpoint_path and tc.checkpoint_every
                     and (k + 1) % tc.checkpoint_every == 0):
-                ckpt.save(tc.checkpoint_path, state["params"],
-                          {"step": k + 1, "algo": tc.algo})
+                meta = {"step": k + 1, "algo": tc.algo, "wire": tc.wire}
+                # params-only artifact (the eval/restore surface) ...
+                ckpt.save(tc.checkpoint_path, state["params"], meta)
+                # ... plus the FULL state (momentum, WireState, counters,
+                # PRNG key) so training resumes bit-identically
+                ckpt.save(tc.checkpoint_path + ".state", state, meta)
         return {"state": state, "history": history,
                 "bytes_per_step": self.bytes_per_step(state)}

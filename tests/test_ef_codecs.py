@@ -1,0 +1,353 @@
+"""Error-feedback codec family contracts (EF-QSGD, the 1-bit Adam wire).
+
+Four contracts (docs/codecs.md):
+
+1. **Conservation** — the post-round residual is EXACTLY ``v - decode(sent)``
+   in f32, recomputable from nothing but the wire artifacts (payload +
+   sideband): the WireState is fully determined by what was communicated,
+   and ``decode(sent) + residual`` rebuilds the compensated value ``v`` to
+   ~1 ulp of its magnitude (bitwise telescoping of the *subtraction* is the
+   invariant; the rearranged sum re-rounds, hence the ulp bound).
+2. **Boundedness** — 100 iterated compression rounds keep the residual at
+   the EF fixpoint ``e* = q * max|x| / (1 - q)`` for the q-contractive
+   qsgd lattice, and at the model scale for the 1-bit sign/cluster-mean
+   compressor (the property the min/max-endpoint construction FAILS:
+   its residual grows linearly — see docs/codecs.md).
+3. **Switching determinism** — the onebit wire's warmup rounds are exactly
+   the full-precision gossip and leave the residual untouched; the switch
+   fires precisely at ``step == warmup`` and replays bit-identically.
+4. **Level exactness** — onebit decode is a select, so every decoded
+   element equals a shipped level bitwise, and a two-valued segment is
+   lossless.
+
+The deterministic subset always runs; the property-based variants need
+``hypothesis`` (pinned in requirements-ci.txt — tests/conftest.py fails CI
+loudly if it is missing, so the skip can only happen locally).
+"""
+import importlib.util
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import gossip
+from repro.comm.engine import CommEngine, make_wire
+from repro.core.quantizers import (QuantSpec, ef_qsgd_encode_segmented,
+                                   onebit_decode_segmented,
+                                   onebit_encode_segmented,
+                                   qsgd_decode_segmented)
+from repro.core.topology import ring
+from repro.kernels import ops as kops
+
+HAS_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+
+def _tree(n=8, seed=0, scale=0.3):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return {"w": jax.random.normal(k1, (n, 37)) * scale,
+            "b": jax.random.normal(k2, (n, 5)) * scale}
+
+
+def _engine(wire, bits=4, stochastic=False, warmup=16, bucketed=True):
+    return CommEngine(ring(8),
+                      make_wire(wire, QuantSpec(bits=bits,
+                                                stochastic=stochastic),
+                                warmup=warmup),
+                      backend="jnp", bucketed=bucketed)
+
+
+def _seeded_state(eng, X, seed=42, scale=0.1):
+    st = eng.init_wire_state(X)
+    r = jax.random.normal(jax.random.PRNGKey(seed),
+                          st["residual"].shape) * scale
+    return {"residual": r, "step": st["step"]}
+
+
+# ---------------------------------------------------------------------------
+# 1. conservation: residual == v - decode(wire artifacts), bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("stochastic", [False, True])
+def test_ef_qsgd_residual_is_wire_determined(bits, stochastic):
+    eng = _engine("ef_qsgd", bits, stochastic)
+    X = _tree()
+    layout = eng.layout(X)
+    st = _seeded_state(eng, X)
+    key = jax.random.PRNGKey(7)
+    _, st1 = eng.mix(X, key=key, state=st)
+    # replay the wire from scratch: encode v = x + r, decode own payload
+    v = layout.flatten(X).astype(jnp.float32) + st["residual"]
+    spec = eng.codec.spec
+    packed, scales = ef_qsgd_encode_segmented(v, spec,
+                                              kops._key_to_seed(key),
+                                              layout.segment_sizes)
+    d = qsgd_decode_segmented(packed, scales, spec, layout.segment_sizes)
+    np.testing.assert_array_equal(np.asarray(st1["residual"]),
+                                  np.asarray(v - d))
+    # telescoping: payload + residual rebuild v to ~1 ulp of its scale
+    tol = float(jnp.max(jnp.abs(v))) * 2.0**-22
+    np.testing.assert_allclose(np.asarray(d + st1["residual"]),
+                               np.asarray(v), rtol=0, atol=tol)
+
+
+@pytest.mark.parametrize("stochastic", [False, True])
+def test_onebit_residual_is_wire_determined(stochastic):
+    eng = _engine("onebit", 1, stochastic, warmup=0)
+    X = _tree()
+    layout = eng.layout(X)
+    st = _seeded_state(eng, X)
+    key = jax.random.PRNGKey(9)
+    _, st1 = eng.mix(X, key=key, state=st)
+    v = layout.flatten(X).astype(jnp.float32) + st["residual"]
+    packed, lo, hi = onebit_encode_segmented(v, kops._key_to_seed(key),
+                                             layout.segment_sizes, 0,
+                                             stochastic)
+    d = onebit_decode_segmented(packed, lo, hi, layout.segment_sizes)
+    np.testing.assert_array_equal(np.asarray(st1["residual"]),
+                                  np.asarray(v - d))
+    tol = float(jnp.max(jnp.abs(v))) * 2.0**-22
+    np.testing.assert_allclose(np.asarray(d + st1["residual"]),
+                               np.asarray(v), rtol=0, atol=tol)
+
+
+def test_onebit_warm_round_is_exact_gossip_and_keeps_residual():
+    """Warmup rounds ARE the full-precision round: output == gossip.mix
+    bitwise, residual untouched bitwise, only the counter advances."""
+    eng = _engine("onebit", warmup=16)
+    X = _tree()
+    st = _seeded_state(eng, X)
+    out, st1 = eng.mix(X, key=jax.random.PRNGKey(0), state=st)
+    ref = gossip.mix(X, ring(8))
+    for k in X:
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(ref[k]))
+    np.testing.assert_array_equal(np.asarray(st1["residual"]),
+                                  np.asarray(st["residual"]))
+    assert int(st1["step"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# 2. boundedness: 100 iterated rounds at 1/2/4/8 bits
+# ---------------------------------------------------------------------------
+
+def _iterate_residual(eng, X, rounds=100):
+    st = eng.init_wire_state(X)
+    step = jax.jit(lambda s, k: eng.mix(X, key=k, state=s)[1])
+    sups = []
+    for k in range(rounds):
+        st = step(st, jax.random.PRNGKey(1000 + k))
+        sups.append(float(jnp.max(jnp.abs(st["residual"]))))
+    return sups
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("stochastic", [False, True])
+def test_ef_qsgd_residual_bounded_100_rounds(bits, stochastic):
+    """Iterated compression of a fixed model sits under the EF fixpoint:
+    the per-segment max-norm scale bounds one round's quantization error
+    by q * max|v| with q = 1/(levels-1) (nearest) or 2/(levels-1)
+    (stochastic), and v = x + r gives e* = q * max|x| / (1 - q)."""
+    eng = _engine("ef_qsgd", bits, stochastic)
+    X = _tree()
+    sups = _iterate_residual(eng, X)
+    xmax = max(float(jnp.max(jnp.abs(l))) for l in jax.tree.leaves(X))
+    q = (2.0 if stochastic else 1.0) / (QuantSpec(bits=bits).levels - 1)
+    assert max(sups) <= 1.5 * q * xmax / (1.0 - q)
+
+
+@pytest.mark.parametrize("stochastic", [False, True])
+def test_onebit_residual_bounded_100_rounds(stochastic):
+    """The sign/cluster-mean compressor is contractive (reconstruction at
+    the cluster means makes the error the within-cluster variance), so the
+    1-bit residual plateaus (by ~round 50, at a disagreement-dependent
+    multiple of the model scale — fixed X keeps workers permanently apart,
+    so the fixpoint constant is larger than the lattice wires') instead of
+    growing without bound.  A linearly-growing residual — what the
+    min/max-endpoint construction produces — fails the late/early ratio
+    check at ~2x regardless of its growth rate, and the absolute bound as
+    well within a few hundred rounds."""
+    eng = _engine("onebit", 1, stochastic, warmup=0)
+    X = _tree()
+    sups = _iterate_residual(eng, X)
+    xmax = max(float(jnp.max(jnp.abs(l))) for l in jax.tree.leaves(X))
+    assert max(sups) <= 16.0 * xmax
+    assert max(sups[80:]) <= 1.2 * max(sups[:50])
+
+
+# ---------------------------------------------------------------------------
+# 3. warmup -> quantized switching determinism (the need_reset-style hook)
+# ---------------------------------------------------------------------------
+
+def test_onebit_warmup_switch_fires_at_warmup_and_replays_bitwise():
+    W = 3
+    eng1, eng2 = _engine("onebit", warmup=W), _engine("onebit", warmup=W)
+    X1 = X2 = _tree(seed=5)
+    st1, st2 = eng1.init_wire_state(X1), eng2.init_wire_state(X2)
+    for k in range(2 * W):
+        key = jax.random.PRNGKey(500 + k)
+        ref = gossip.mix(X1, ring(8))
+        X1, st1 = eng1.mix(X1, key=key, state=st1)
+        X2, st2 = eng2.mix(X2, key=key, state=st2)
+        # two independent engines replay the schedule bit-identically
+        for lk in X1:
+            np.testing.assert_array_equal(np.asarray(X1[lk]),
+                                          np.asarray(X2[lk]))
+        np.testing.assert_array_equal(np.asarray(st1["residual"]),
+                                      np.asarray(st2["residual"]))
+        assert int(st1["step"]) == k + 1
+        if k < W:   # warm round: exactly the full-precision gossip
+            for lk in X1:
+                np.testing.assert_array_equal(np.asarray(X1[lk]),
+                                              np.asarray(ref[lk]))
+            assert float(jnp.max(jnp.abs(st1["residual"]))) == 0.0
+        else:       # quantized round: visibly not the f32 round
+            assert any(not np.array_equal(np.asarray(X1[lk]),
+                                          np.asarray(ref[lk])) for lk in X1)
+            assert float(jnp.max(jnp.abs(st1["residual"]))) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# 4. onebit level exactness
+# ---------------------------------------------------------------------------
+
+def test_onebit_two_valued_segment_is_lossless():
+    """A segment holding one negative and one non-negative value has those
+    values as its cluster means — encode/decode round-trips bitwise
+    (powers of two and power-of-two cluster counts keep the means exact)."""
+    v = jnp.array([[-0.5] * 4 + [0.25] * 4], jnp.float32)
+    packed, lo, hi = onebit_encode_segmented(v, None, (8,))
+    assert float(lo[0, 0]) == -0.5 and float(hi[0, 0]) == 0.25
+    d = onebit_decode_segmented(packed, lo, hi, (8,))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(v))
+
+
+def test_onebit_decoded_values_are_shipped_levels():
+    v = jax.random.normal(jax.random.PRNGKey(3), (2, 24), jnp.float32)
+    seg = (16, 8)
+    packed, lo, hi = onebit_encode_segmented(v, None, seg)
+    d = np.asarray(onebit_decode_segmented(packed, lo, hi, seg))
+    off = 0
+    for si, size in enumerate(seg):
+        block = d[:, off:off + size]
+        levels = np.stack([np.asarray(lo)[:, si], np.asarray(hi)[:, si]], 1)
+        for row in range(v.shape[0]):
+            assert set(block[row].tolist()) <= set(levels[row].tolist())
+        off += size
+
+
+def test_stochastic_modes_require_seed():
+    v = jnp.ones((1, 8), jnp.float32)
+    with pytest.raises(ValueError, match="seed"):
+        onebit_encode_segmented(v, None, (8,), stochastic=True)
+    with pytest.raises(ValueError, match="seed"):
+        ef_qsgd_encode_segmented(v, QuantSpec(bits=4, stochastic=True),
+                                 None, (8,))
+
+
+# ---------------------------------------------------------------------------
+# property-based variants (hypothesis; see module docstring for the gate)
+# ---------------------------------------------------------------------------
+
+if HAS_HYPOTHESIS:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    def _v_from(seed, n, d8):
+        return jax.random.normal(jax.random.PRNGKey(seed), (n, 8 * d8),
+                                 jnp.float32) * 0.5
+
+    def _segments(d8, split8):
+        d = 8 * d8
+        cut = 8 * min(split8, d8)
+        return (cut, d - cut) if 0 < cut < d else (d,)
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([2, 4, 8]),
+           stochastic=st.booleans(), n=st.integers(2, 6),
+           d8=st.integers(1, 5), split8=st.integers(0, 5),
+           hash_seed=st.integers(0, 2**32 - 1))
+    def test_ef_qsgd_error_bounded_by_lattice_pitch(seed, bits, stochastic,
+                                                    n, d8, split8,
+                                                    hash_seed):
+        """Eq.-2 analog for the segmented EF wire: per segment, the
+        compression error is under one lattice step of ITS max-norm scale
+        (half a step for nearest rounding)."""
+        spec = QuantSpec(bits=bits, stochastic=stochastic)
+        v = _v_from(seed, n, d8)
+        seg = _segments(d8, split8)
+        packed, scales = ef_qsgd_encode_segmented(
+            v, spec, jnp.uint32(hash_seed), seg)
+        err = np.abs(np.asarray(
+            v - qsgd_decode_segmented(packed, scales, spec, seg)))
+        q = (2.0 if stochastic else 1.0) / (spec.levels - 1)
+        off = 0
+        for si, size in enumerate(seg):
+            smax = np.max(np.abs(np.asarray(v)[:, off:off + size]),
+                          axis=1) + 1e-12
+            assert np.all(np.max(err[:, off:off + size], axis=1)
+                          <= q * smax * (1 + 1e-6))
+            off += size
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 6),
+           d8=st.integers(1, 5), split8=st.integers(0, 5))
+    def test_onebit_nearest_is_contractive(seed, n, d8, split8):
+        """||v - decode(encode(v))||^2 <= ||v||^2 per segment row: the
+        compression error is the within-cluster variance of the sign
+        partition — the delta-contraction the EF loop's stability needs."""
+        v = _v_from(seed, n, d8)
+        seg = _segments(d8, split8)
+        packed, lo, hi = onebit_encode_segmented(v, None, seg)
+        err = np.asarray(v - onebit_decode_segmented(packed, lo, hi, seg))
+        va = np.asarray(v)
+        off = 0
+        for size in seg:
+            e2 = np.sum(err[:, off:off + size] ** 2, axis=1)
+            v2 = np.sum(va[:, off:off + size] ** 2, axis=1)
+            assert np.all(e2 <= v2 * (1 + 1e-5) + 1e-12)
+            off += size
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 6),
+           d8=st.integers(1, 5), stochastic=st.booleans(),
+           hash_seed=st.integers(0, 2**32 - 1))
+    def test_onebit_error_under_segment_spread(seed, n, d8, stochastic,
+                                               hash_seed):
+        """Both rounding modes decode to a shipped level, so the pointwise
+        error never exceeds the segment's spread ``max(span, hi - lo)``
+        (the ``hi - lo`` term covers one-sided segments, where the empty
+        cluster's level is 0 and can sit outside the value range)."""
+        v = _v_from(seed, n, d8)
+        seg = (8 * d8,)
+        packed, lo, hi = onebit_encode_segmented(
+            v, jnp.uint32(hash_seed), seg, 0, stochastic)
+        err = np.abs(np.asarray(
+            v - onebit_decode_segmented(packed, lo, hi, seg)))
+        span = (np.max(np.asarray(v), axis=1)
+                - np.min(np.asarray(v), axis=1))
+        spread = np.maximum(span, np.asarray(hi)[:, 0] - np.asarray(lo)[:, 0])
+        assert np.all(np.max(err, axis=1) <= spread * (1 + 1e-6) + 1e-12)
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 6),
+           d8=st.integers(1, 4), bits=st.sampled_from([2, 4, 8]),
+           hash_seed=st.integers(0, 2**32 - 1))
+    def test_identical_rows_emit_identical_payloads(seed, n, d8, bits,
+                                                    hash_seed):
+        """Shared randomness (Supp. C analog): the row-position uniform
+        hash is worker-free, so workers holding the same model broadcast
+        the same bytes — for both EF wires, in stochastic mode."""
+        row = jax.random.normal(jax.random.PRNGKey(seed), (1, 8 * d8),
+                                jnp.float32)
+        v = jnp.broadcast_to(row, (n, 8 * d8))
+        seg = (8 * d8,)
+        spec = QuantSpec(bits=bits, stochastic=True)
+        packed, scales = ef_qsgd_encode_segmented(
+            v, spec, jnp.uint32(hash_seed), seg)
+        pb, lo, hi = onebit_encode_segmented(v, jnp.uint32(hash_seed), seg,
+                                             0, True)
+        for arr in (packed, scales, pb, lo, hi):
+            a = np.asarray(arr)
+            for i in range(1, n):
+                np.testing.assert_array_equal(a[i], a[0])

@@ -456,3 +456,208 @@ def test_moniqua_requires_theta():
     eng = CommEngine(ring(8), MoniquaWire())
     with pytest.raises(ValueError):
         eng.mix(jnp.zeros((8, 8)))
+
+
+# ---------------------------------------------------------------------------
+# stateful EF wires (ef_qsgd / onebit): the WireState contracts
+# ---------------------------------------------------------------------------
+
+EF_CASES = [("ef_qsgd", False), ("ef_qsgd", True),
+            ("onebit", False), ("onebit", True)]
+
+
+def _ef_engine(wire, stochastic, backend="jnp", bucketed=True, warmup=2):
+    spec = QuantSpec(bits=4 if wire == "ef_qsgd" else 1,
+                     stochastic=stochastic)
+    return CommEngine(ring(8), make_wire(wire, spec, warmup=warmup),
+                      backend=backend, bucketed=bucketed)
+
+
+@pytest.mark.parametrize("wire,stochastic", EF_CASES)
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_ef_bucketed_matches_per_leaf_bit_exact(wire, stochastic, backend):
+    """The stateful tentpole contract: 4 iterated rounds bucketed vs
+    per-leaf agree bitwise — mixed outputs AND the post-round WireState —
+    on a mixed-shape/mixed-dtype pytree, on both backend names (warmup=2
+    exercises rounds on both sides of the onebit switch).  The residual
+    living in the canonical flat bucket domain is what makes this hold."""
+    Xa = Xb = _mixed_tree()
+    a = _ef_engine(wire, stochastic, backend, bucketed=True)
+    b = _ef_engine(wire, stochastic, backend, bucketed=False)
+    sa, sb = a.init_wire_state(Xa), b.init_wire_state(Xb)
+    for k in range(4):
+        key = jax.random.PRNGKey(90 + k)
+        Xa, sa = a.mix(Xa, key=key, state=sa)
+        Xb, sb = b.mix(Xb, key=key, state=sb)
+        for lk in Xa:
+            np.testing.assert_array_equal(
+                np.asarray(Xa[lk], np.float32),
+                np.asarray(Xb[lk], np.float32), err_msg=f"round {k} {lk}")
+        np.testing.assert_array_equal(np.asarray(sa["residual"]),
+                                      np.asarray(sb["residual"]),
+                                      err_msg=f"round {k} residual")
+        assert int(sa["step"]) == int(sb["step"]) == k + 1
+
+
+@pytest.mark.parametrize("wire,stochastic", EF_CASES)
+def test_ef_payload_bits_match_per_leaf(wire, stochastic):
+    """Concatenated per-slot payloads (what the per-leaf round rolls) ARE
+    the bucketed payload — codes and sideband words both — because both
+    paths encode the same canonical flat segments under the same
+    row-position uniforms (idx_base = the segment's bucket offset)."""
+    from repro.core.quantizers import (ef_qsgd_encode_segmented,
+                                       onebit_encode_segmented)
+    eng = _ef_engine(wire, stochastic)
+    X = {"a": _stacked(d=37), "b": _stacked(d=300, seed=2)}
+    layout = eng.layout(X)
+    flat = layout.flatten(X).astype(jnp.float32)
+    seed = jnp.uint32(5)
+    spec = eng.codec.spec
+
+    def enc(buf, segments, idx_base):
+        if wire == "ef_qsgd":
+            return ef_qsgd_encode_segmented(buf, spec, seed, segments,
+                                            idx_base)
+        return onebit_encode_segmented(buf, seed, segments, idx_base,
+                                       stochastic)
+
+    whole = enc(flat, layout.segment_sizes, 0)
+    parts = [enc(jax.lax.slice_in_dim(flat, s.offset,
+                                      s.offset + s.padded_size, axis=1),
+                 (s.padded_size,), s.offset)
+             for s in layout.slots]
+    for j, arrs in enumerate(zip(*parts)):
+        np.testing.assert_array_equal(
+            np.asarray(whole[j]),
+            np.asarray(jnp.concatenate(arrs, axis=1)))
+
+
+@pytest.mark.parametrize("wire,nbytes", [("ef_qsgd", 70), ("onebit", 32)])
+def test_ef_bytes_ledger_and_sim_agree(wire, nbytes):
+    """One consistent accounting for the EF wires: BytesLedger ==
+    payload_bytes_per_broadcast (x neighbors) == the bytes the simulator
+    prices, identical for the bucketed and per-leaf paths (both ship the
+    same packed flat segments).  Exact numbers for {a: 100, b: 3x7} f32
+    (each of b's 3 rows pads its last dim to the byte boundary):
+    ef_qsgd-4bit packs 100+24=124 elems at 2/byte + 4B scale x 2 leaves =
+    70; onebit packs 104+24=128 elems at 8/byte + 8B levels x 2 = 32."""
+    from repro.sim import events as SE
+    from repro.sim import scenarios as SC
+    topo = ring(8)
+    X = {"a": jnp.zeros((8, 100)), "b": jnp.zeros((8, 3, 7))}
+    bits = 4 if wire == "ef_qsgd" else 1
+    eng = CommEngine(topo, make_wire(wire, QuantSpec(bits=bits)),
+                     backend="jnp", bucketed=True)
+    led = gossip.BytesLedger()
+    st = eng.init_wire_state(X)
+    eng.mix(X, key=jax.random.PRNGKey(0), ledger=led, state=st)
+    m = len(topo.neighbor_offsets())
+    assert eng.payload_bytes_per_broadcast(X) == nbytes
+    assert led.bytes_per_worker == eng.bytes_per_round(X) == nbytes * m
+    per_leaf = CommEngine(topo, make_wire(wire, QuantSpec(bits=bits)),
+                          backend="jnp", bucketed=False)
+    assert per_leaf.bytes_per_round(X) == eng.bytes_per_round(X)
+    sc = SC.get_scenario("lan-10gbe-ring", n=8)
+    trace = SE.simulate_sync_rounds(sc, eng.bytes_per_round(X) // m,
+                                    num_rounds=1)
+    assert trace.bytes_on_wire == 8 * eng.bytes_per_round(X)
+
+
+def test_onebit_warmup_payload_is_f32():
+    wire = make_wire("onebit", QuantSpec(bits=1))
+    assert wire.warmup_payload_bytes((100,)) == 400
+    assert wire.payload_bytes((100,)) == 13 + 8   # ceil(100/8) + lo/hi
+
+
+@pytest.mark.parametrize("wire", ["ef_qsgd", "onebit"])
+@pytest.mark.parametrize("bucketed", [False, True])
+def test_stateful_mix_without_state_raises(wire, bucketed):
+    eng = CommEngine(ring(8), make_wire(wire, QuantSpec(bits=4)),
+                     backend="jnp", bucketed=bucketed)
+    with pytest.raises(ValueError, match="stateful"):
+        eng.mix(_stacked(), key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="stateful"):
+        eng.mix(_stacked(), key=jax.random.PRNGKey(0), state={})
+
+
+def test_stateful_pair_average_without_state_raises():
+    eng = CommEngine(ring(8), make_wire("ef_qsgd", QuantSpec(bits=4)),
+                     backend="jnp")
+    xi = jnp.zeros((16,))
+    with pytest.raises(ValueError, match="stateful"):
+        eng.pair_average(xi, xi, key=jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("wire,stochastic", EF_CASES)
+def test_ef_mix_under_jit_close(wire, stochastic):
+    """Re-jitting may legally FMA-contract the EF math: ~1 ulp, like the
+    Moniqua wire's jit bound."""
+    eng = _ef_engine(wire, stochastic, warmup=0)
+    X = _mixed_tree()
+    st = eng.init_wire_state(X)
+    key = jax.random.PRNGKey(4)
+    eo, es = eng.mix(X, key=key, state=st)
+    jo, js = jax.jit(lambda x, s, k: eng.mix(x, key=k, state=s))(X, st, key)
+    for k in X:
+        np.testing.assert_allclose(np.asarray(eo[k], np.float32),
+                                   np.asarray(jo[k], np.float32),
+                                   rtol=0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(es["residual"]),
+                               np.asarray(js["residual"]),
+                               rtol=0, atol=1e-6)
+
+
+@pytest.mark.parametrize("wire", ["ef_qsgd", "onebit"])
+def test_ef_pair_average_stateful(wire):
+    """AD-PSGD edges: per-endpoint WireState carries; the warmup exchange
+    is the exact average; iterated compressed exchanges keep shrinking
+    the pair gap (EF makes the biased 1-bit exchange converge too) down
+    to the codec's noise floor — 8-bit qsgd's pitch keeps it well under
+    a tenth of the initial gap."""
+    eng = CommEngine(ring(8), make_wire(wire, QuantSpec(bits=8), warmup=1),
+                     backend="jnp")
+    xi = jax.random.normal(jax.random.PRNGKey(5), (3, 5)) * 0.2
+    xj = xi + 0.3
+    si, sj = eng.init_edge_state(xi), eng.init_edge_state(xj)
+    gap0 = float(jnp.max(jnp.abs(xi - xj)))
+    ni, nj, si, sj = eng.pair_average(xi, xj, key=jax.random.PRNGKey(0),
+                                      state_i=si, state_j=sj)
+    avg = 0.5 * (xi + xj)
+    if wire == "onebit":   # warm exchange: exactly the f32 average
+        np.testing.assert_array_equal(np.asarray(ni), np.asarray(avg))
+        np.testing.assert_array_equal(np.asarray(nj), np.asarray(avg))
+    xi, xj = ni, nj
+    for k in range(40):
+        xi, xj, si, sj = eng.pair_average(
+            xi, xj, key=jax.random.PRNGKey(10 + k), state_i=si, state_j=sj)
+    assert int(si["step"]) == int(sj["step"]) == 41
+    assert float(jnp.max(jnp.abs(xi - xj))) < 0.1 * gap0
+
+
+@pytest.mark.parametrize("wire,extra", [("moniqua", 0), ("qsgd", 0),
+                                        ("full", 0), ("ef_qsgd", 4 * 124 + 4),
+                                        ("onebit", 4 * 128 + 4)])
+def test_wire_state_bytes_accounting(wire, extra):
+    """Tables 1-2 memory column: stateless wires report exactly 0; EF
+    wires one f32 per padded bucket element plus the counter word."""
+    X = {"a": jnp.zeros((8, 100)), "b": jnp.zeros((8, 3, 7))}
+    bits = 1 if wire == "onebit" else 4
+    eng = CommEngine(ring(8), make_wire(wire, QuantSpec(bits=bits)),
+                     backend="jnp")
+    assert eng.wire_state_bytes(X) == extra
+    assert eng.stateful == (extra > 0)
+
+
+def test_init_wire_state_from_abstract_shapes():
+    """Trainers build the WireState under jax.eval_shape — shapes only."""
+    X = {"a": jnp.zeros((8, 100)), "b": jnp.zeros((8, 3, 7))}
+    eng = CommEngine(ring(8), make_wire("ef_qsgd", QuantSpec(bits=4)),
+                     backend="jnp")
+    concrete = eng.init_wire_state(X)
+    abstract = jax.eval_shape(lambda: X)
+    shaped = eng.init_wire_state(abstract)
+    assert shaped["residual"].shape == concrete["residual"].shape
+    assert shaped["residual"].dtype == concrete["residual"].dtype
+    assert shaped["step"].dtype == jnp.int32
+    stateless = CommEngine(ring(8), MoniquaWire())
+    assert stateless.init_wire_state(X) == {}

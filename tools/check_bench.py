@@ -33,11 +33,25 @@ which is what makes it comparable across machines at all.  Fusion checks
 run only when the fusion smoke file exists (``--fusion-smoke``), so the
 network-sim gate can run standalone.
 
+It also gates the memory-accounting trajectory
+(``BENCH_memory_overhead.json``, from ``benchmarks/bench_memory_overhead``):
+the committed reference must show Moniqua-wire rows at **exactly 0.0**
+extra memory (the paper's headline systems claim) and every EF-wire row
+(``ef_qsgd`` / ``onebit``) at a Theta(nd)-scale residual buffer (>= 4
+bytes/param).  Because both the accounting and the ``repro.sim`` round
+pricing are deterministic, the smoke run must reproduce the reference
+accounting columns *exactly* — any drift means the codec memory/byte model
+changed and the committed artifact must be regenerated deliberately.
+Memory checks run only when the memory smoke file exists (``--mem-smoke``);
+a smoke file without its reference is an error, not a skip.
+
 Usage:  python tools/check_bench.py \\
             [--smoke BENCH_network_sim.smoke.json] \\
             [--ref BENCH_network_sim.json] \\
             [--fusion-smoke BENCH_comm_fusion.smoke.json] \\
-            [--fusion-ref BENCH_comm_fusion.json] [--tol 0.25]
+            [--fusion-ref BENCH_comm_fusion.json] \\
+            [--mem-smoke BENCH_memory_overhead.smoke.json] \\
+            [--mem-ref BENCH_memory_overhead.json] [--tol 0.25]
 """
 from __future__ import annotations
 
@@ -137,6 +151,67 @@ def check_fusion(smoke: dict, ref: dict, tol: float, errors: list) -> None:
               f"({best['n_leaves']} leaves) [ok]")
 
 
+# the memory gate's wire classes: zero-state vs Theta(nd) error feedback
+MEM_ZERO_WIRE = "moniqua"
+MEM_EF_WIRES = ("ef_qsgd", "onebit")
+# accounting columns that must match the reference exactly (deterministic
+# shape math + seeded simulator — no tolerance, by design)
+MEM_EXACT_COLS = ("extra_memory_bytes", "wire_bytes_per_step")
+
+
+def check_memory(smoke: dict, ref: dict, errors: list) -> None:
+    """BENCH_memory_overhead gate: Moniqua stays at exactly 0 extra bytes,
+    EF wires report Theta(nd) residuals, smoke accounting == reference."""
+    def key(r):
+        return (r["model"], r["algorithm"], r["wire"], r["bits"])
+
+    r_rows = {key(r): r for r in ref["table"]}
+    s_rows = {key(r): r for r in smoke["table"]}
+
+    zero = [r for r in ref["table"]
+            if r["algorithm"] == "moniqua" and r["wire"] == MEM_ZERO_WIRE]
+    if not zero:
+        errors.append("memory reference has no moniqua-wire rows")
+    for r in zero:
+        if r["extra_memory_MB"] != 0.0 or r["extra_memory_bytes"] != 0:
+            errors.append(f"memory: moniqua row {key(r)} reports "
+                          f"{r['extra_memory_MB']} MB extra — the "
+                          "zero-extra-memory headline claim is broken")
+    ef = [r for r in ref["table"] if r["wire"] in MEM_EF_WIRES]
+    if not ef:
+        errors.append("memory reference has no EF-wire rows "
+                      f"({'/'.join(MEM_EF_WIRES)})")
+    for r in ef:
+        if r["extra_memory_bytes"] < 4 * r["params"]:
+            errors.append(f"memory: EF row {key(r)} reports "
+                          f"{r['extra_memory_bytes']} B < 4*d — not the "
+                          "Theta(nd) residual accounting")
+    ok_zero = sum(1 for r in zero
+                  if r["extra_memory_MB"] == 0.0) == len(zero) and zero
+    ok_ef = sum(1 for r in ef
+                if r["extra_memory_bytes"] >= 4 * r["params"]) == len(ef) \
+        and ef
+    if zero and ef:
+        print(f"memory: {len(zero)} moniqua rows at 0 extra "
+              f"[{'ok' if ok_zero else 'FAIL'}], {len(ef)} EF rows at "
+              f"Theta(nd) [{'ok' if ok_ef else 'FAIL'}]")
+
+    for k in sorted(s_rows):
+        if k not in r_rows:
+            errors.append(f"memory: smoke row {k} missing from reference")
+    for k in sorted(r_rows):
+        s = s_rows.get(k)
+        if s is None:
+            errors.append(f"memory: reference row {k} missing from smoke "
+                          "run (accounting table shrank)")
+            continue
+        for col in MEM_EXACT_COLS:
+            if s[col] != r_rows[k][col]:
+                errors.append(f"memory: {k} {col} drifted "
+                              f"{r_rows[k][col]} -> {s[col]} (accounting "
+                              "is deterministic; exact match required)")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke",
@@ -148,6 +223,11 @@ def main(argv=None) -> int:
                                          "BENCH_comm_fusion.smoke.json"))
     ap.add_argument("--fusion-ref",
                     default=os.path.join(REPO, "BENCH_comm_fusion.json"))
+    ap.add_argument("--mem-smoke",
+                    default=os.path.join(REPO,
+                                         "BENCH_memory_overhead.smoke.json"))
+    ap.add_argument("--mem-ref",
+                    default=os.path.join(REPO, "BENCH_memory_overhead.json"))
     ap.add_argument("--tol", type=float, default=0.25,
                     help="max relative drift of per-scenario wire slope "
                          "and of per-model bucketed speedup")
@@ -221,11 +301,24 @@ def main(argv=None) -> int:
             check_fusion(fusion_smoke, fusion_ref, args.tol, errors)
             n_fusion = len({r["model"] for r in fusion_smoke["table"]})
 
+    n_mem = 0
+    if os.path.exists(args.mem_smoke):
+        with open(args.mem_smoke) as f:
+            mem_smoke = json.load(f)
+        if not os.path.exists(args.mem_ref):
+            errors.append(f"memory smoke exists but reference "
+                          f"{args.mem_ref} is missing")
+        else:
+            with open(args.mem_ref) as f:
+                mem_ref = json.load(f)
+            check_memory(mem_smoke, mem_ref, errors)
+            n_mem = len(mem_smoke["table"])
+
     for e in errors:
         print(f"ERROR: {e}", file=sys.stderr)
     if not errors:
         print(f"bench check OK ({len(smoke_scenarios)} scenarios, "
-              f"{n_fusion} fusion models compared)")
+              f"{n_fusion} fusion models, {n_mem} memory rows compared)")
     return 1 if errors else 0
 
 

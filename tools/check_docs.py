@@ -35,6 +35,18 @@ ROOTS = ("src/", "docs/", "tests/", "benchmarks/", "examples/", "tools/",
 SPAN_RE = re.compile(r"`([^`\n]+)`")
 BENCH_RE = re.compile(r"^(BENCH_\w+\.json|requirements[\w.-]*\.txt)$")
 
+# artifacts the docs promise and CI gates on: these must EXIST in the repo
+# even if no markdown span happens to reference them — a deleted trajectory
+# file or doc page fails here, not silently at the next bench run
+REQUIRED_ARTIFACTS = (
+    "docs/codecs.md",
+    "docs/simulator.md",
+    "docs/kernels.md",
+    "BENCH_network_sim.json",
+    "BENCH_comm_fusion.json",
+    "BENCH_memory_overhead.json",
+)
+
 
 def candidate(span: str) -> str | None:
     token = span.strip().split()[0] if span.strip() else ""
@@ -71,6 +83,9 @@ def check_file(md_path: str) -> list[str]:
 
 def main() -> int:
     errors = []
+    for artifact in REQUIRED_ARTIFACTS:
+        if not os.path.exists(os.path.join(REPO, artifact)):
+            errors.append(f"required artifact missing: {artifact}")
     for md in DOC_FILES:
         if os.path.exists(os.path.join(REPO, md)):
             errors.extend(check_file(md))
