@@ -31,10 +31,26 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
 
 def save_result(name: str, result: Dict[str, Any]) -> str:
+    """Write the benchmark result JSON plus a schema-versioned run log.
+
+    The sibling ``<name>.runlog.jsonl`` re-emits the result through
+    ``repro.obs.runlog`` (header + one ``event`` per table row + a final
+    ``result``) so benchmark outputs flow through the same
+    ``tools/obs_report.py`` / ``tools/check_obs.py`` pipeline as trainer
+    and dryrun logs.
+    """
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.json")
     with open(path, "w") as f:
         json.dump(result, f, indent=2, default=float)
+    from repro.obs.runlog import RunLogWriter
+    with RunLogWriter(os.path.join(RESULTS_DIR, f"{name}.runlog.jsonl"),
+                      run={"bench": name}, tool="benchmark") as w:
+        for row in result.get("table", []) or []:
+            if isinstance(row, dict):
+                w.event("bench_row", row)
+        w.result(bench=name, rows=len(result.get("table", []) or []),
+                 notes=str(result.get("notes", ""))[:500])
     return path
 
 
@@ -73,14 +89,16 @@ def tiny_lm(d_model=64, layers=2, vocab=128):
 def train_run(algo: str, *, bits=8, theta=2.0, slack=1.0, gamma=1.0,
               steps=60, lr=0.3, n_workers=8, seed=0, model=None,
               shape=TINY_SHAPE, wire="moniqua", topology="ring",
-              warmup=16, log_every=None) -> Dict[str, Any]:
+              warmup=16, log_every=None, telemetry=False,
+              log_jsonl=None) -> Dict[str, Any]:
     model = model or tiny_lm()
     tc = TrainerConfig(algo=algo, topology=topology, n_workers=n_workers,
                        bits=bits, theta=theta,
                        slack=slack, gamma=gamma, lr=lr, steps=steps,
                        log_every=log_every or max(steps // 10, 1),
                        momentum=0.0, weight_decay=0.0, seed=seed, wire=wire,
-                       warmup=warmup)
+                       warmup=warmup, telemetry=telemetry,
+                       log_jsonl=log_jsonl)
     t0 = time.time()
     out = Trainer(model, shape, tc).run()
     hp = out["state"], out["history"]

@@ -24,6 +24,9 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--context", type=int, default=128)
     ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write per-token decode-latency spans as "
+                         "Chrome-trace JSON (open in Perfetto)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -39,17 +42,24 @@ def main():
     tok = jax.random.randint(key, (args.batch, 1), 0, cfg.vocab_size,
                              dtype=jnp.int32)
 
+    from repro.obs.trace import SpanRecorder
+    rec = SpanRecorder()
+
     # warmup/compile
-    logits, cache = step(params, cache, tok)
-    jax.block_until_ready(logits)
+    with rec.span("decode.compile", tid="serve"):
+        logits, cache = step(params, cache, tok)
+        jax.block_until_ready(logits)
 
     out_tokens = [tok]
     t0 = time.time()
     for i in range(args.tokens):
-        logits, cache = step(params, cache, out_tokens[-1])
-        nxt = jnp.argmax(logits[..., :cfg.vocab_size], axis=-1)
+        # block per token so each span is a real decode latency, not a
+        # dispatch time (the usual serving TPOT measurement)
+        with rec.span("decode.token", tid="serve", token=i):
+            logits, cache = step(params, cache, out_tokens[-1])
+            nxt = jnp.argmax(logits[..., :cfg.vocab_size], axis=-1)
+            jax.block_until_ready(nxt)
         out_tokens.append(nxt.reshape(args.batch, 1).astype(jnp.int32))
-    jax.block_until_ready(out_tokens[-1])
     dt = time.time() - t0
 
     seqs = jnp.concatenate(out_tokens, axis=1)
@@ -57,6 +67,14 @@ def main():
           f"cache_len={args.context}")
     print(f"decoded {args.tokens} tokens/seq in {dt:.2f}s "
           f"({args.batch*args.tokens/dt:.1f} tok/s on CPU)")
+    spans = [s for s in rec.events if s["name"] == "decode.token"]
+    lat = sorted(s["dur_s"] for s in spans)
+    p50 = lat[len(lat) // 2]
+    p95 = lat[min(int(len(lat) * 0.95), len(lat) - 1)]
+    print(f"per-token latency: p50={p50*1e3:.2f}ms p95={p95*1e3:.2f}ms")
+    if args.trace:
+        rec.save(args.trace, process_name="serve")
+        print(f"wrote decode-latency trace to {args.trace}")
     for b in range(min(args.batch, 2)):
         print(f"  seq[{b}]: {seqs[b, :16].tolist()} ...")
     assert bool(jnp.isfinite(logits).all())

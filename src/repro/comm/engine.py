@@ -221,11 +221,27 @@ class CommEngine:
     behind ``bucketed=False`` as the parity reference; both draw the same
     stochastic-rounding uniforms per element (global counter indices), so
     they are bit-exact against each other for the Moniqua wire.
+
+    ``telemetry`` (static, default off) makes ``mix`` additionally return a
+    round-health dict (``repro.obs.metrics``): consensus inf-distance and
+    theta headroom, the modulo alias sentinel, EF residual norm, warmup
+    indicator, payload bits/param.  Stateless wires then return
+    ``(X, health)``, stateful ones ``(X, state, health)``.  The telemetry
+    is purely observational — computed from the round's own flat buffer /
+    payload / state with pure jnp, feeding nothing back into the mix — so
+    the mixed output (and payload and WireState) is bit-exact with the
+    flag on or off, and the health values themselves are identical across
+    backends and gossip paths (always evaluated on the canonical flat
+    buffer with the jnp reference encode, which is bitwise equal to the
+    Pallas and per-leaf payloads by the parity contracts).  When off, the
+    flag is a Python-level branch: the telemetry graph is never traced,
+    hence dead-code-free under jit.
     """
     topo: Topology
     codec: Any = dataclasses.field(default_factory=MoniquaWire)
     backend: str = "auto"
     bucketed: bool = True
+    telemetry: bool = False
 
     # -- persistent per-worker codec state (WireState) ---------------------
     @property
@@ -274,6 +290,10 @@ class CommEngine:
         ``state`` carry from :meth:`init_wire_state` and return
         ``(X_{k+1/2}, new_state)`` — an explicit jit-safe carry, exactly
         like ``theta``.
+
+        With ``telemetry=True`` a round-health dict rides along as the
+        final element of the return: ``(X, health)`` stateless,
+        ``(X, state, health)`` stateful (see the class docstring).
         """
         if self.stateful:
             if not isinstance(state, dict) or "residual" not in state:
@@ -283,39 +303,98 @@ class CommEngine:
                     "returned (X, state) carry across rounds")
             offsets = self.topo.neighbor_offsets()
             if not offsets or not jax.tree.leaves(X):
-                return X, state              # nothing on the wire
+                if self.telemetry:           # nothing on the wire
+                    from repro.obs import metrics as obs_metrics
+                    return X, state, obs_metrics.round_health_zero()
+                return X, state
             if ledger is not None:
                 self._record(X, ledger)
-            return self._mix_stateful(X, state, key)
+            Xm, new_state = self._mix_stateful(X, state, key)
+            if self.telemetry:
+                return Xm, new_state, self._round_health(X, theta, key,
+                                                         new_state)
+            return Xm, new_state
         offsets = self.topo.neighbor_offsets()
-        if not offsets:                      # single worker: nothing on wire
-            return X
-        if not jax.tree.leaves(X):           # empty pytree: nothing to mix
+        if not offsets or not jax.tree.leaves(X):
+            # single worker or empty pytree: nothing on the wire
+            if self.telemetry:
+                from repro.obs import metrics as obs_metrics
+                return X, obs_metrics.round_health_zero()
             return X
         if ledger is not None:
             self._record(X, ledger)
         if self.codec.name == "moniqua" and theta is None:
             raise ValueError("MoniquaWire needs the a-priori bound theta")
         if self.bucketed:
-            return self._mix_bucketed(X, theta, key)
-        if self.codec.name == "full":
-            return gossip.mix(X, self.topo)
-        backend = resolve_backend(self.backend)
-        self._require_key(key)
-        base_seed = kops._key_to_seed(key)
-        leaves, td = jax.tree.flatten(X)
-        if self.codec.name == "moniqua":
-            # global counter indices: leaf i's elements hash
-            # (seed, layout.offset_i + e), the SAME pairs the bucketed
-            # one-shot encode hashes — the bucketed-vs-per-leaf parity
-            layout = self.layout(X)
-            out = [self._mix_leaf(l, theta, base_seed, backend,
-                                  idx_base=layout.offsets[i])
-                   for i, l in enumerate(leaves)]
+            Xm = self._mix_bucketed(X, theta, key)
+        elif self.codec.name == "full":
+            Xm = gossip.mix(X, self.topo)
         else:
-            out = [self._mix_leaf(l, theta, _leaf_seed(base_seed, i), backend)
-                   for i, l in enumerate(leaves)]
-        return jax.tree.unflatten(td, out)
+            backend = resolve_backend(self.backend)
+            self._require_key(key)
+            base_seed = kops._key_to_seed(key)
+            leaves, td = jax.tree.flatten(X)
+            if self.codec.name == "moniqua":
+                # global counter indices: leaf i's elements hash
+                # (seed, layout.offset_i + e), the SAME pairs the bucketed
+                # one-shot encode hashes — the bucketed-vs-per-leaf parity
+                layout = self.layout(X)
+                out = [self._mix_leaf(l, theta, base_seed, backend,
+                                      idx_base=layout.offsets[i])
+                       for i, l in enumerate(leaves)]
+            else:
+                out = [self._mix_leaf(l, theta, _leaf_seed(base_seed, i),
+                                      backend)
+                       for i, l in enumerate(leaves)]
+            Xm = jax.tree.unflatten(td, out)
+        if self.telemetry:
+            return Xm, self._round_health(X, theta, key, None)
+        return Xm
+
+    # -- round health (telemetry=True) -------------------------------------
+    def _round_health(self, X: PyTree, theta, key: Optional[jax.Array],
+                      new_state: Optional[dict]) -> dict:
+        """Health counters for the round just mixed (``repro.obs.metrics``).
+
+        Always evaluated on the canonical flat bucket buffer with pure-jnp
+        math, so the values are identical whichever backend or gossip path
+        produced the mix: the per-leaf payloads concatenate to the bucketed
+        one bitwise (PR-4 parity), and the jnp reference encode equals the
+        Pallas kernel bitwise (PR-1 parity).  On the bucketed moniqua path
+        the sentinel's re-encode duplicates the round's own encode
+        subgraph, which XLA CSEs away; elsewhere telemetry pays one extra
+        encode per round — acceptable for an opt-in diagnostics flag.
+        """
+        from repro.obs import metrics as obs_metrics
+        with jax.named_scope("comm.telemetry"):
+            layout = self.layout(X)
+            flat = layout.flatten(X)
+            offsets = self.topo.neighbor_offsets()
+            h = obs_metrics.round_health_zero()
+            h["consensus_inf"] = obs_metrics.consensus_inf(flat, offsets)
+            h["bits_per_param"] = jnp.float32(
+                8.0 * self.payload_bytes_per_broadcast(X)
+                / max(layout.total_elems, 1))
+            if self.codec.name == "moniqua" and theta is not None:
+                spec = self.codec.spec
+                theta = jnp.asarray(theta, jnp.float32)
+                B = modulo.b_theta(theta, spec.delta)
+                h["headroom"] = h["consensus_inf"] / B
+                if spec.delta < 0.25:    # sentinel pinned to 0 otherwise
+                    seed = kops._key_to_seed(key)
+                    packed = kops.moniqua_encode_stacked(flat, B, spec,
+                                                         seed, backend="jnp")
+                    h["alias_count"] = obs_metrics.moniqua_alias_count(
+                        packed, flat, B, theta, spec, offsets)
+            if new_state is not None:
+                h["ef_residual_l2"] = jnp.sqrt(jnp.sum(
+                    jnp.square(new_state["residual"].astype(jnp.float32))))
+                if self.codec.name == "onebit":
+                    # the counter was already bumped: -1 recovers the flag
+                    # the round just executed under
+                    h["warm"] = (new_state["step"] - 1
+                                 < self.codec.warmup).astype(jnp.float32)
+            return h
 
     # -- bucketed round: one encode, one roll per offset, one reduce -------
     def _mix_bucketed(self, X: PyTree, theta,
@@ -338,26 +417,35 @@ class CommEngine:
         spec = self.codec.spec
         if self.codec.name == "moniqua":
             B = modulo.b_theta(theta, spec.delta)
-            packed = kops.moniqua_encode_stacked(flat, B, spec, seed,
-                                                 backend=backend)
-            p_nbrs = jnp.stack([gossip._roll(packed, o) for o in offsets])
-            out = kops.moniqua_decode_reduce_stacked(packed, p_nbrs, flat, B,
-                                                     weights, spec,
+            with jax.named_scope("comm.encode"):
+                packed = kops.moniqua_encode_stacked(flat, B, spec, seed,
                                                      backend=backend)
+            with jax.named_scope("comm.permute"):
+                p_nbrs = jnp.stack([gossip._roll(packed, o)
+                                    for o in offsets])
+            with jax.named_scope("comm.decode_reduce"):
+                out = kops.moniqua_decode_reduce_stacked(packed, p_nbrs,
+                                                         flat, B, weights,
+                                                         spec,
+                                                         backend=backend)
             return layout.unflatten(out)
         # qsgd on the flat buffer, with per-tensor scale granularity kept
         # (segment slices of the bucket); one decode per neighbor replaces
         # the per-leaf qsgd_decode copies
         seg = layout.segment_sizes
-        packed, scales = qsgd_encode_segmented(flat, spec, seed, seg)
-        xq_self = qsgd_decode_segmented(packed, scales, spec, seg)
-        acc = None
-        for o, w in zip(offsets, weights):
-            xq_j = qsgd_decode_segmented(gossip._roll(packed, o),
-                                         gossip._roll(scales, o), spec, seg)
-            t = (xq_j - xq_self) * w
-            acc = t if acc is None else acc + t
-        out = (flat.astype(jnp.float32) + acc).astype(flat.dtype)
+        with jax.named_scope("comm.encode"):
+            packed, scales = qsgd_encode_segmented(flat, spec, seed, seg)
+        with jax.named_scope("comm.decode_reduce"):
+            xq_self = qsgd_decode_segmented(packed, scales, spec, seg)
+            acc = None
+            for o, w in zip(offsets, weights):
+                with jax.named_scope("comm.permute"):
+                    p_o = gossip._roll(packed, o)
+                    s_o = gossip._roll(scales, o)
+                xq_j = qsgd_decode_segmented(p_o, s_o, spec, seg)
+                t = (xq_j - xq_self) * w
+                acc = t if acc is None else acc + t
+            out = (flat.astype(jnp.float32) + acc).astype(flat.dtype)
         return layout.unflatten(out)
 
     # -- stateful wires: error-feedback rounds on the flat bucket ----------
@@ -424,12 +512,15 @@ class CommEngine:
 
         if self.codec.name == "ef_qsgd":
             v = v_base + residual
-            packed, scales = ef_qsgd_encode_segmented(v, spec, seed,
-                                                      segments, idx_base)
-            d_self = qsgd_decode_segmented(packed, scales, spec, segments)
-            out = reduce(d_self, lambda o: qsgd_decode_segmented(
-                gossip._roll(packed, o), gossip._roll(scales, o), spec,
-                segments))
+            with jax.named_scope("comm.encode"):
+                packed, scales = ef_qsgd_encode_segmented(v, spec, seed,
+                                                          segments, idx_base)
+            with jax.named_scope("comm.decode_reduce"):
+                d_self = qsgd_decode_segmented(packed, scales, spec,
+                                               segments)
+                out = reduce(d_self, lambda o: qsgd_decode_segmented(
+                    gossip._roll(packed, o), gossip._roll(scales, o), spec,
+                    segments))
             return out, v - d_self
 
         # onebit: fp32 gossip during warmup, 1-bit sign codes + EF after.
@@ -634,6 +725,30 @@ class CommEngine:
         return (unflat(oi, xi), unflat(oj, xj),
                 {"residual": ri[0], "step": state_i["step"] + jnp.int32(1)},
                 {"residual": rj[0], "step": state_j["step"] + jnp.int32(1)})
+
+    def pair_health(self, xi: jax.Array, xj: jax.Array, theta=None,
+                    key: Optional[jax.Array] = None) -> dict:
+        """Round health of one :meth:`pair_average` edge exchange.
+
+        Observational twin of ``mix``'s telemetry for the AD-PSGD
+        primitive: consensus distance of the endpoints, plus (Moniqua) the
+        theta headroom and both-direction alias sentinel on payloads
+        re-encoded under the exchange seed — bit-identical to what
+        ``pair_average`` ships.  Call on the *pre-exchange* endpoints.
+        """
+        from repro.obs import metrics as obs_metrics
+        with jax.named_scope("comm.telemetry"):
+            spec = (self.codec.spec
+                    if self.codec.name == "moniqua" else None)
+            h = obs_metrics.pair_health(
+                xi, xj, theta=theta, spec=spec,
+                seed=kops._key_to_seed(key) if spec is not None else None)
+            if spec is None:
+                bits = getattr(getattr(self.codec, "spec", None), "bits",
+                               32)
+                h["bits_per_param"] = jnp.float32(
+                    32.0 if self.codec.name == "full" else float(bits))
+            return h
 
     # -- gossip building blocks shared by the algorithm zoo ----------------
     def neighbor_sum(self, X: PyTree, transform) -> PyTree:

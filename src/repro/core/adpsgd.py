@@ -39,6 +39,8 @@ class ADPSGDConfig:
     max_delay: int = 4
     quantized: bool = False     # False = plain AD-PSGD, True = Moniqua
     wire: str = "moniqua"       # wire codec when quantized (moniqua | qsgd)
+    telemetry: bool = False     # per-exchange edge health (repro.obs);
+                                #   run() then also returns a health trace
 
     def engine(self) -> CommEngine:
         """Pair-exchange engine: the quantized wire or the exact baseline."""
@@ -70,12 +72,22 @@ def run(
     num_iters: int,
     cfg: ADPSGDConfig,
     key: jax.Array,
-) -> Tuple[jax.Array, jax.Array]:
-    """Run the simulation; returns (final X [n,d], mean-model trace [K,d])."""
+) -> Tuple[jax.Array, ...]:
+    """Run the simulation; returns (final X [n,d], mean-model trace [K,d]).
+
+    With ``cfg.telemetry`` a third element rides along: the per-iteration
+    edge-health trace (``CommEngine.pair_health`` of the exchanged pair,
+    stacked over iterations — each value a ``[K]`` array keyed like
+    ``repro.obs.metrics.round_health_zero``).  Health is computed on the
+    *pre-exchange* endpoints under the exchange key, so it observes exactly
+    the payloads the exchange ships; the model trajectory is bit-exact with
+    the flag on or off (pure observation, no feedback).
+    """
     n, d = x0.shape
     T = cfg.max_delay
     hist0 = jnp.broadcast_to(x0, (T + 1, n, d))  # staleness ring buffer
     offsets = jnp.asarray([o % n for o in cfg.topo.neighbor_offsets()])
+    eng = cfg.engine()
 
     def body(carry, k):
         X, hist, kkey = carry
@@ -87,11 +99,18 @@ def run(
         g = grad_fn(x_stale, i, k_g)
         # gossip on a random incident edge, then the (delayed) gradient update
         j = (i + offsets[jax.random.randint(k_nb, (), 0, offsets.shape[0])]) % n
+        out = jnp.mean(X, axis=0)
+        if cfg.telemetry:
+            out = (out, eng.pair_health(X[i], X[j], theta=cfg.theta,
+                                        key=k_q))
         X = _pair_average(X, i, j, cfg, k_q)
         X = X.at[i].add(-alpha * g)
         hist = hist.at[(k + 1) % (T + 1)].set(X)
-        return (X, hist, kkey), jnp.mean(X, axis=0)
+        return (X, hist, kkey), out
 
-    (Xf, _, _), trace = jax.lax.scan(body, (x0, hist0, key),
-                                     jnp.arange(num_iters))
-    return Xf, trace
+    (Xf, _, _), out = jax.lax.scan(body, (x0, hist0, key),
+                                   jnp.arange(num_iters))
+    if cfg.telemetry:
+        trace, health = out
+        return Xf, trace, health
+    return Xf, out

@@ -38,6 +38,7 @@ from repro.comm.engine import CommEngine, FullPrecisionWire, make_wire
 from repro.core.moniqua import MoniquaCodec
 from repro.core.quantizers import QuantSpec
 from repro.core.topology import Topology
+from repro.obs import metrics as obs_metrics
 
 PyTree = Any
 
@@ -51,6 +52,13 @@ class AlgoHyper:
     x ``backend``) for the quantized-gossip algorithms, ``exact_engine()``
     the full-precision engine the baselines (and replica mixing) use.
     Swapping codec, topology, or backend is a one-field change here.
+
+    ``telemetry`` turns on the engine's round-health observability
+    (``repro.obs.metrics``): the instrumented algorithms (Moniqua family,
+    DPSGD, D2) then carry the accumulated health dict under
+    ``extra["health"]`` and the trainer surfaces it as ``obs_*`` metrics.
+    Purely observational — params / payloads / WireState are bit-exact
+    with the flag on or off.
     """
     topo: Topology
     codec: MoniquaCodec = MoniquaCodec()
@@ -61,16 +69,22 @@ class AlgoHyper:
     backend: str = "auto"         # comm backend: jnp | pallas | auto
     bucketed: bool = True         # flat-buffer gossip (comm/bucket.py)
     warmup: int = 16              # onebit wire: fp32 rounds before 1-bit+EF
+    telemetry: bool = False       # round-health observability (repro.obs)
 
     def engine(self) -> CommEngine:
         return CommEngine(self.topo,
                           make_wire(self.wire, self.codec.spec,
                                     warmup=self.warmup),
-                          self.backend, bucketed=self.bucketed)
+                          self.backend, bucketed=self.bucketed,
+                          telemetry=self.telemetry)
 
-    def exact_engine(self) -> CommEngine:
+    def exact_engine(self, telemetry: bool = False) -> CommEngine:
+        """Full-precision engine.  ``telemetry`` is opt-in per call site:
+        the instrumented baselines (DPSGD, D2) pass ``self.telemetry``;
+        internal replica/estimator mixing (Choco, DCD, ...) keeps the
+        plain single-value return."""
         return CommEngine(self.topo, FullPrecisionWire(), self.backend,
-                          bucketed=self.bucketed)
+                          bucketed=self.bucketed, telemetry=telemetry)
 
 
 # ---------------------------------------------------------------------------
@@ -181,8 +195,21 @@ class AllReduce(Algorithm):
 class DPSGD(Algorithm):
     name = "dpsgd"
 
+    def init(self, X, hp):
+        return ({"health": obs_metrics.init_health()} if hp.telemetry
+                else {})
+
     def step(self, X, extra, g, alpha, k, key, hp):
-        return _sgd(hp.exact_engine().mix(X), g, alpha), extra
+        eng = hp.exact_engine(telemetry=hp.telemetry)
+        if hp.telemetry:
+            # theta rides along as a pure diagnostic: "what bound would a
+            # Moniqua wire need here" — the full wire itself ignores it
+            Xm, h = eng.mix(X, theta=hp.theta)
+            extra = dict(extra)
+            extra["health"] = obs_metrics.accumulate_health(
+                extra["health"], h)
+            return _sgd(Xm, g, alpha), extra
+        return _sgd(eng.mix(X), g, alpha), extra
 
     def bytes_per_step(self, X, hp):
         return hp.exact_engine().bytes_per_round(X)
@@ -229,14 +256,29 @@ class Moniqua(Algorithm):
 
     def init(self, X, hp):
         eng = hp.engine()
-        return {"wire": eng.init_wire_state(X)} if eng.stateful else {}
+        extra = {"wire": eng.init_wire_state(X)} if eng.stateful else {}
+        if hp.telemetry:
+            extra["health"] = obs_metrics.init_health()
+        return extra
 
     def step(self, X, extra, g, alpha, k, key, hp):
         eng = hp.engine()
         if eng.stateful:
+            if hp.telemetry:
+                Xm, ws, h = eng.mix(X, theta=hp.theta, key=key,
+                                    state=extra["wire"])
+                return _sgd(Xm, g, alpha), {
+                    "wire": ws,
+                    "health": obs_metrics.accumulate_health(
+                        extra["health"], h)}
             Xm, ws = eng.mix(X, theta=hp.theta, key=key,
                              state=extra["wire"])
             return _sgd(Xm, g, alpha), {"wire": ws}
+        if hp.telemetry:
+            Xm, h = eng.mix(X, theta=hp.theta, key=key)
+            extra = {"health": obs_metrics.accumulate_health(
+                extra["health"], h)}
+            return _sgd(Xm, g, alpha), extra
         Xm = eng.mix(X, theta=hp.theta, key=key)
         return _sgd(Xm, g, alpha), extra
 
@@ -354,10 +396,13 @@ class D2(Algorithm):
     name = "d2"
 
     def init(self, X, hp):
-        return {"x_prev": jax.tree.map(
-                    lambda x: jnp.array(x, dtype=jnp.float32, copy=True), X),
-                "g_prev": _zeros_like(X),
-                "alpha_prev": jnp.zeros((), jnp.float32)}
+        extra = {"x_prev": jax.tree.map(
+                     lambda x: jnp.array(x, dtype=jnp.float32, copy=True), X),
+                 "g_prev": _zeros_like(X),
+                 "alpha_prev": jnp.zeros((), jnp.float32)}
+        if hp.telemetry:
+            extra["health"] = obs_metrics.init_health()
+        return extra
 
     def _half_step(self, X, extra, g, alpha):
         x_prev, g_prev, a_prev = extra["x_prev"], extra["g_prev"], extra["alpha_prev"]
@@ -368,11 +413,21 @@ class D2(Algorithm):
 
     def step(self, X, extra, g, alpha, k, key, hp):
         Xh = self._half_step(X, extra, g, alpha)
-        Xn = jax.tree.map(lambda a, x: a.astype(x.dtype),
-                          hp.exact_engine().mix(Xh), X)
-        extra = {"x_prev": jax.tree.map(lambda x: x.astype(jnp.float32), X),
-                 "g_prev": g, "alpha_prev": jnp.asarray(alpha, jnp.float32)}
-        return Xn, extra
+        eng = hp.exact_engine(telemetry=hp.telemetry)
+        h = None
+        if hp.telemetry:
+            Xm, h = eng.mix(Xh, theta=hp.theta)
+        else:
+            Xm = eng.mix(Xh)
+        Xn = jax.tree.map(lambda a, x: a.astype(x.dtype), Xm, X)
+        new_extra = {"x_prev": jax.tree.map(lambda x: x.astype(jnp.float32),
+                                            X),
+                     "g_prev": g,
+                     "alpha_prev": jnp.asarray(alpha, jnp.float32)}
+        if h is not None:
+            new_extra["health"] = obs_metrics.accumulate_health(
+                extra["health"], h)
+        return Xn, new_extra
 
     def bytes_per_step(self, X, hp):
         return hp.exact_engine().bytes_per_round(X)
@@ -399,18 +454,29 @@ class MoniquaD2(D2):
     def step(self, X, extra, g, alpha, k, key, hp):
         Xh = self._half_step(X, extra, g, alpha)
         eng = hp.engine()
-        ws = None
+        ws = h = None
         if eng.stateful:
-            Xn, ws = eng.mix(Xh, theta=hp.theta, key=key,
-                             state=extra["wire"])
+            if hp.telemetry:
+                Xn, ws, h = eng.mix(Xh, theta=hp.theta, key=key,
+                                    state=extra["wire"])
+            else:
+                Xn, ws = eng.mix(Xh, theta=hp.theta, key=key,
+                                 state=extra["wire"])
+        elif hp.telemetry:
+            Xn, h = eng.mix(Xh, theta=hp.theta, key=key)
         else:
             Xn = eng.mix(Xh, theta=hp.theta, key=key)
         Xn = jax.tree.map(lambda a, x: a.astype(x.dtype), Xn, X)
-        extra = {"x_prev": jax.tree.map(lambda x: x.astype(jnp.float32), X),
-                 "g_prev": g, "alpha_prev": jnp.asarray(alpha, jnp.float32)}
+        new_extra = {"x_prev": jax.tree.map(lambda x: x.astype(jnp.float32),
+                                            X),
+                     "g_prev": g,
+                     "alpha_prev": jnp.asarray(alpha, jnp.float32)}
         if ws is not None:
-            extra["wire"] = ws
-        return Xn, extra
+            new_extra["wire"] = ws
+        if h is not None:
+            new_extra["health"] = obs_metrics.accumulate_health(
+                extra["health"], h)
+        return Xn, new_extra
 
     def bytes_per_step(self, X, hp):
         return hp.engine().bytes_per_round(X)

@@ -85,6 +85,40 @@ def decode_reduce_values(qb_self: jax.Array, qb_nbrs, y: jax.Array, B,
     return y + acc                                      # line 6
 
 
+def alias_band_mask(qb: jax.Array, y: jax.Array, B, theta) -> jax.Array:
+    """Modulo alias sentinel on one dequantized neighbor payload.
+
+    The Lemma-1 recovered neighbor difference is ``dhat = cmod(qb - y, B)``
+    (line 5 above, before adding ``y`` back).  Under the lemma's hypothesis
+    ``|x_j - x_i| < theta`` the decode never wraps and
+    ``|dhat| <= |x_j - x_i| + delta*B < theta + delta*B = B/2``, so the
+    outer band ``|dhat| >= theta`` is unreachable except when the true
+    distance is already within ``delta*B`` of the bound.  A nonzero count
+    therefore means the theta budget is exhausted or violated.
+
+    Detection semantics (aliasing is per-element undetectable from the
+    payload alone — that is what aliasing *means* — so this is the
+    strongest payload-only test): an element with true distance ``d``
+    fires iff ``d mod B`` lands in the width-``2*delta*B`` window
+    ``[theta, B - theta]`` straddling the wrap point ``B/2``.  Distances
+    *crossing* the bound transit the window deterministically; a gross,
+    already-wrapped violation (``d`` pseudo-uniform mod B across elements)
+    fires with per-element rate ``~2*delta`` per neighbor — e.g. 1/128 at
+    8 bits, 1/2 at 2 bits — so over a model's worth of elements any
+    sustained violation produces counts in the thousands per round while
+    a safe run stays at exactly zero.  Computable from payload + local
+    reference only, i.e. from what a receiver has on real hardware
+    (telemetry: see ``repro.obs.metrics.moniqua_alias_count``; pure-jnp
+    twin of the recovered difference: ``ref.recovered_diff_ref``).
+
+    Observational only — shares ``unpack_values`` with the kernel math but
+    feeds nothing back into the mix, so telemetry on/off is bit-exact.
+    """
+    d = qb - y.astype(jnp.float32)
+    dhat = d - B * jnp.floor(d / B + 0.5)               # cmod(d, B)
+    return jnp.abs(dhat) >= jnp.asarray(theta, jnp.float32)
+
+
 def _decode_reduce_kernel(ps_ref, pn_ref, y_ref, b_ref, o_ref, *,
                           bits: int, weights: tuple):
     B = b_ref[0]

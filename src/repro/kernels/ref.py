@@ -91,6 +91,14 @@ def decode_ref(packed: jax.Array, y: jax.Array, B, bits: int) -> jax.Array:
     return cmod(qb - yf, B) + yf
 
 
+def recovered_diff_ref(packed: jax.Array, y: jax.Array, B,
+                       bits: int) -> jax.Array:
+    """The Lemma-1 recovered neighbor difference ``cmod(q*B - y, B)``
+    (``decode_ref`` minus the reference) — what the alias sentinel
+    (``moniqua_decode_reduce.alias_band_mask``) thresholds at ``theta``."""
+    return cmod(value_ref(packed, B, bits) - y.astype(jnp.float32), B)
+
+
 def decode_self_ref(packed: jax.Array, x: jax.Array, B, bits: int) -> jax.Array:
     """Algorithm 1 line 4: sender-side biased reconstruction."""
     qb = value_ref(packed, B, bits)

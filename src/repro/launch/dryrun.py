@@ -38,8 +38,8 @@ from repro.core.moniqua import MoniquaCodec
 from repro.core.quantizers import QuantSpec
 from repro.core.theta import ThetaSchedule
 from repro.core.topology import ring
-from repro.launch.mesh import (make_production_mesh, mesh_context,
-                               mesh_shape_dict)
+from repro.launch.mesh import (make_host_mesh, make_production_mesh,
+                               mesh_context, mesh_shape_dict)
 from repro.models.model_factory import build_model
 from repro.models.sharding import ShardingRules
 from repro.optim.sgd import SGDConfig
@@ -91,10 +91,15 @@ class DryrunResult:
 def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                mesh=None, algo: str = "moniqua", bits: int = 8,
                wire: str = "moniqua", comm_backend: str = "auto",
-               bucketed: bool = True,
+               bucketed: bool = True, telemetry: bool = False,
                scenario: Optional[str] = None,
-               verbose: bool = True, override: Optional[dict] = None
-               ) -> DryrunResult:
+               verbose: bool = True, override: Optional[dict] = None,
+               rec=None) -> DryrunResult:
+    """One (arch x shape x mesh) lower+compile.  ``rec`` (a
+    ``repro.obs.trace.SpanRecorder``) gets lower/compile phase spans;
+    ``telemetry`` threads the obs flag into the train step being lowered,
+    so the compiled artifact is the instrumented one."""
+    import contextlib
     cfg = get_config(arch)
     if override:
         cfg = dataclasses.replace(cfg, **override)
@@ -105,9 +110,16 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         return DryrunResult(arch, shape_name, mesh_name, "skipped",
                             error=reason)
     t0 = time.time()
+
+    def span(name):
+        if rec is None:
+            return contextlib.nullcontext()
+        return rec.span(name, tid=f"{arch}/{shape_name}", mesh=mesh_name)
+
     try:
         mesh = mesh or make_production_mesh(multi_pod=multi_pod)
         ms = mesh_shape_dict(mesh)
+        mesh_name = "x".join(str(v) for v in mesh.devices.shape)
         chips = 1
         for v in ms.values():
             chips *= v
@@ -117,15 +129,17 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
         from repro.models import sharding as SH
         with mesh_context(mesh), SH.constraint_context(rules, ms):
-            if shape.kind == "train":
-                lowered = _lower_train(model, shape, mesh, ms, rules,
-                                       n_workers, algo, bits, wire,
-                                       comm_backend, bucketed)
-            elif shape.kind == "prefill":
-                lowered = _lower_prefill(model, shape, mesh, ms, rules)
-            else:
-                lowered = _lower_decode(model, shape, mesh, ms, rules)
-            compiled = lowered.compile()
+            with span("dryrun.lower"):
+                if shape.kind == "train":
+                    lowered = _lower_train(model, shape, mesh, ms, rules,
+                                           n_workers, algo, bits, wire,
+                                           comm_backend, bucketed, telemetry)
+                elif shape.kind == "prefill":
+                    lowered = _lower_prefill(model, shape, mesh, ms, rules)
+                else:
+                    lowered = _lower_decode(model, shape, mesh, ms, rules)
+            with span("dryrun.compile"):
+                compiled = lowered.compile()
         mem = compiled.memory_analysis()
         print(f"[{arch} x {shape_name} x {mesh_name}] memory_analysis:",
               mem)
@@ -139,8 +153,10 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         sim_pred: Dict[str, Any] = {}
         if scenario and shape.kind == "train":
             hp = _hyper(cfg, n_workers, algo, bits, wire, comm_backend,
-                        bucketed)
-            sim_pred = _sim_predict(scenario, model, hp, n_workers, roof)
+                        bucketed, telemetry)
+            with span("dryrun.sim"):
+                sim_pred = _sim_predict(scenario, model, hp, n_workers,
+                                        roof)
             if verbose:
                 print(f"[{arch} x {shape_name} x {mesh_name}] sim "
                       f"{scenario}: round="
@@ -195,11 +211,12 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 
 def _hyper(cfg, n_workers, algo, bits, wire="moniqua", comm_backend="auto",
-           bucketed=True):
+           bucketed=True, telemetry=False):
     topo = ring(n_workers)
     spec = QuantSpec(bits=bits, stochastic=bits > 1)
     return AlgoHyper(topo=topo, codec=MoniquaCodec(spec), theta=2.0,
-                     wire=wire, backend=comm_backend, bucketed=bucketed)
+                     wire=wire, backend=comm_backend, bucketed=bucketed,
+                     telemetry=telemetry)
 
 
 def _sim_predict(scenario_name: str, model, hp, n_workers: int, roof):
@@ -233,10 +250,11 @@ def _sim_predict(scenario_name: str, model, hp, n_workers: int, roof):
 
 
 def _lower_train(model, shape, mesh, ms, rules, n_workers, algo_name, bits,
-                 wire="moniqua", comm_backend="auto", bucketed=True):
+                 wire="moniqua", comm_backend="auto", bucketed=True,
+                 telemetry=False):
     algo = get_algorithm(algo_name)
     hp = _hyper(model.cfg, n_workers, algo_name, bits, wire, comm_backend,
-                bucketed)
+                bucketed, telemetry)
     tcfg = TS.TrainStepConfig(algo=algo_name, sgd=SGDConfig(), lr=0.1,
                               theta=ThetaSchedule(mode="constant", value=2.0))
     step = TS.make_train_step(model, hp, tcfg)
@@ -307,29 +325,89 @@ def main(argv=None) -> int:
                          "of each train config on this simulated network "
                          "(see repro/sim/scenarios.py)")
     ap.add_argument("--out", default=None, help="append JSONL results here")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="thread AlgoHyper.telemetry into the lowered train "
+                         "step (obs_* round-health metrics compile in)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace JSON of the lower/compile "
+                         "phase spans (open in Perfetto)")
+    ap.add_argument("--log-jsonl", default=None, metavar="PATH",
+                    help="write a repro.obs.runlog JSONL: one event per "
+                         "combination + phase spans + final result")
+    ap.add_argument("--host-mesh", default=None, metavar="DxM[:pod=P]",
+                    help="use a small host mesh 'DATAxMODEL' (optionally "
+                         "'PODxDATAxMODEL') instead of the 256-chip "
+                         "production mesh; pair with REPRO_DRYRUN_DEVICES "
+                         "so enough forced host devices exist (CI smoke)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="shrink every arch to a tiny layer stack before "
+                         "lowering (CI-scale smoke; same mesh/sharding "
+                         "logic, minutes instead of hours)")
     args = ap.parse_args(argv)
 
     archs = [args.arch] if args.arch else assigned_archs()
     shapes = [args.shape] if args.shape else list(
         ["train_4k", "prefill_32k", "decode_32k", "long_500k"])
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    override = None
+    if args.reduced:
+        override = dict(num_layers=2, d_model=256, num_heads=4,
+                        num_kv_heads=2, head_dim=64, d_ff=512,
+                        vocab_size=512, remat=False)
+
+    rec = writer = None
+    if args.trace or args.log_jsonl:
+        from repro.obs.trace import SpanRecorder
+        rec = SpanRecorder()
+    if args.log_jsonl:
+        from repro.obs.runlog import RunLogWriter
+        writer = RunLogWriter(args.log_jsonl, run=vars(args), tool="dryrun")
 
     failures = 0
-    for mp in meshes:
-        mesh = make_production_mesh(multi_pod=mp)
-        for arch in archs:
-            for shape in shapes:
-                res = dryrun_one(arch, shape, multi_pod=mp, mesh=mesh,
-                                 algo=args.algo, bits=args.bits,
-                                 wire=args.wire,
-                                 comm_backend=args.comm_backend,
-                                 bucketed=not args.per_leaf_comm,
-                                 scenario=args.scenario)
-                if res.status == "error":
-                    failures += 1
-                if args.out:
-                    with open(args.out, "a") as f:
-                        f.write(json.dumps(res.row()) + "\n")
+    try:
+        for mp in meshes:
+            if args.host_mesh:
+                dims = [int(x) for x in args.host_mesh.lower().split("x")]
+                if len(dims) == 3:
+                    mesh = make_host_mesh(data=dims[1], model=dims[2],
+                                          pod=dims[0])
+                    mp = True
+                else:
+                    mesh = make_host_mesh(data=dims[0], model=dims[1])
+                    mp = False
+            else:
+                mesh = make_production_mesh(multi_pod=mp)
+            for arch in archs:
+                for shape in shapes:
+                    res = dryrun_one(arch, shape, multi_pod=mp, mesh=mesh,
+                                     algo=args.algo, bits=args.bits,
+                                     wire=args.wire,
+                                     comm_backend=args.comm_backend,
+                                     bucketed=not args.per_leaf_comm,
+                                     telemetry=args.telemetry,
+                                     scenario=args.scenario,
+                                     override=override, rec=rec)
+                    if res.status == "error":
+                        failures += 1
+                    if args.out:
+                        with open(args.out, "a") as f:
+                            f.write(json.dumps(res.row()) + "\n")
+                    if writer is not None:
+                        writer.event("dryrun", {
+                            "arch": res.arch, "shape": res.shape,
+                            "mesh": res.mesh, "status": res.status,
+                            "seconds": res.seconds,
+                            "peak_estimate_gb":
+                                res.memory.get("peak_estimate_gb")})
+        if writer is not None:
+            writer.spans_from(rec)
+            writer.result(failures=failures,
+                          combinations=len(meshes) * len(archs) * len(shapes))
+        if rec is not None and args.trace:
+            rec.save(args.trace, process_name="dryrun")
+    finally:
+        if writer is not None:
+            writer.close()
     print(f"dry-run complete; failures={failures}")
     return 1 if failures else 0
 

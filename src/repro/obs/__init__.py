@@ -1,0 +1,21 @@
+"""repro.obs — observability for modulo-quantized decentralized SGD.
+
+Three cooperating layers (see ``docs/observability.md``):
+
+* :mod:`repro.obs.metrics` — jit-safe, on-device round-health counters
+  (consensus inf-distance, theta headroom, the modulo **alias sentinel**,
+  EF residual norms, payload bits/param).  Computed inside
+  ``CommEngine.mix`` when the engine's static ``telemetry`` flag is set,
+  carried in the step pytree under ``extra["health"]``, drained with the
+  rest of the metrics at ``log_every``.  Purely observational: the mix
+  output is bit-exact with telemetry on or off.
+* :mod:`repro.obs.trace` — host-side span recorder + Chrome-trace JSON
+  export (openable in Perfetto), plus the converter that renders a
+  ``repro.sim`` event timeline in the same format so measured runs and
+  simulator predictions line up side by side.
+* :mod:`repro.obs.runlog` — schema-versioned JSONL run logs
+  (``repro.obs.runlog/v1``) written by the trainer, the dryrun CLI, and
+  the benchmarks; summarized by ``tools/obs_report.py`` and validated /
+  CI-gated by ``tools/check_obs.py``.
+"""
+from repro.obs import metrics, runlog, trace  # noqa: F401

@@ -1,0 +1,202 @@
+"""Jit-safe round-health metrics for decentralized gossip.
+
+Everything here is pure jnp on values the communication round already has
+(the flat staging buffer, the packed payload, the EF residual), so the
+telemetry is *observational*: it adds reductions next to the mix but never
+feeds back into it — mix outputs are bit-exact with telemetry on or off,
+and because the math is the same jnp graph regardless of the engine's
+kernel backend or gossip path (bucketed / per-leaf), the telemetry values
+themselves are backend- and path-invariant too.
+
+The health dict (``round_health_zero`` fixes the pytree structure):
+
+``consensus_inf``
+    ``max_{o, elements} |x_i - x_{i+o}|_inf`` over the topology's neighbor
+    offsets — the quantity Lemma 1's hypothesis bounds by ``theta``.
+``headroom``
+    ``consensus_inf / B`` with ``B = 2*theta/(1-2*delta)`` (Moniqua wire
+    only; 0 otherwise).  Safe iff ``headroom < theta/B = (1-2*delta)/2``;
+    ``tools/obs_report.py`` also reports ``consensus_inf / theta``, whose
+    safe threshold is 1 for every wire.
+``alias_count``
+    the modulo **alias sentinel**: elements whose Lemma-1 recovered
+    neighbor difference lands in the outer band ``|cmod(q*B - y, B)| >=
+    theta`` (``kernels/moniqua_decode_reduce.py::alias_band_mask``).
+    Under Lemma 1's hypothesis the recovered difference stays below
+    ``theta + delta*B = B/2`` and only enters ``[theta, B/2)`` when the
+    true distance is within ``delta*B`` of the bound — so a nonzero count
+    means the theta budget is exhausted or already violated.  Safe runs
+    are exactly zero while ``consensus_inf < theta - delta*B`` (the guard
+    band — quantization alone moves the recovered difference by up to
+    ``delta*B``); violations fire deterministically while crossing the
+    bound and with per-element rate ``~2*delta`` per neighbor once
+    grossly aliased (see ``alias_band_mask`` for the full semantics), so
+    sustained violations yield large counts over a model's worth of
+    elements.  Computed from the payload + local reference only, i.e.
+    from exactly what a receiver has on real hardware.  Pinned to 0 for
+    ``delta >= 1/4`` (1-bit nearest / 2-bit stochastic), where the guard
+    band vanishes and a payload-only test carries no information.
+``alias_total``
+    cumulative ``alias_count`` across rounds (algorithm-level carry; see
+    ``init_health`` / ``accumulate_health``).
+``ef_residual_l2``
+    ``||residual||_2`` of the post-round WireState (EF wires; 0 otherwise)
+    — the divergence signal PR 6 could only get by hand-plotting.
+``warm``
+    1.0 while the onebit wire is inside its fp32 warmup phase.
+``bits_per_param``
+    payload bits per model parameter actually shipped per neighbor
+    (trace-time constant from the engine's bytes accounting).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import gossip
+from repro.core import modulo
+from repro.core.quantizers import QuantSpec
+
+HEALTH_ROUND_KEYS = ("consensus_inf", "headroom", "alias_count",
+                     "ef_residual_l2", "warm", "bits_per_param")
+HEALTH_KEYS = HEALTH_ROUND_KEYS + ("alias_total",)
+
+
+def round_health_zero() -> Dict[str, jax.Array]:
+    """Engine-level health dict with every counter at zero.
+
+    Fixes the pytree structure so the ``extra["health"]`` carry is stable
+    across jitted steps (counts are int32, everything else f32).
+    """
+    z = jnp.zeros((), jnp.float32)
+    return {"consensus_inf": z, "headroom": z,
+            "alias_count": jnp.zeros((), jnp.int32),
+            "ef_residual_l2": z, "warm": z, "bits_per_param": z}
+
+
+def init_health() -> Dict[str, jax.Array]:
+    """Algorithm-level carry: the round dict plus the cumulative alias
+    counter (``accumulate_health`` folds each round into it)."""
+    h = round_health_zero()
+    h["alias_total"] = jnp.zeros((), jnp.int32)
+    return h
+
+
+def accumulate_health(prev: Dict[str, jax.Array],
+                      round_h: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """New carry: this round's values, cumulative alias count threaded."""
+    out = dict(round_h)
+    out["alias_total"] = prev["alias_total"] + round_h["alias_count"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Consensus distance.
+# ---------------------------------------------------------------------------
+
+def consensus_inf(flat: jax.Array, offsets: Sequence[int]) -> jax.Array:
+    """``max_o max_elements |x_i - x_{i+o}|`` on the stacked flat buffer."""
+    x = flat.astype(jnp.float32)
+    m = jnp.zeros((), jnp.float32)
+    for o in offsets:
+        m = jnp.maximum(m, jnp.max(jnp.abs(x - gossip._roll(x, o))))
+    return m
+
+
+def consensus_inf_segments(flat: jax.Array, offsets: Sequence[int],
+                           segments: Sequence[int]) -> jax.Array:
+    """Per-segment ``|x_i - x_j|_inf`` maxima, shape ``[num_segments]``.
+
+    The health scalar is the max of these (per-segment maxima max out to
+    the global max); the per-segment view localizes which tensor is
+    eating the theta budget.
+    """
+    x = flat.astype(jnp.float32)
+    d = jnp.zeros_like(x)
+    for o in offsets:
+        d = jnp.maximum(d, jnp.abs(x - gossip._roll(x, o)))
+    out, off = [], 0
+    for s in segments:
+        out.append(jnp.max(jax.lax.slice_in_dim(d, off, off + s, axis=1)))
+        off += s
+    return jnp.stack(out)
+
+
+# ---------------------------------------------------------------------------
+# The modulo alias sentinel.
+# ---------------------------------------------------------------------------
+
+def moniqua_alias_count(packed: jax.Array, flat: jax.Array, B, theta,
+                        spec: QuantSpec, offsets: Sequence[int]
+                        ) -> jax.Array:
+    """Alias-band elements summed over every neighbor payload of the round.
+
+    ``packed`` is the stacked wire payload (``[n, D/vpb]`` uint8, exactly
+    what the round's encode produced), ``flat`` the local references the
+    receivers decode against.  Each neighbor's payload is dequantized with
+    the kernel's shared math and tested against the outer-band predicate —
+    see ``kernels/moniqua_decode_reduce.py::alias_band_mask``.
+
+    The zero-false-positive guarantee has a **guard band**: quantization
+    alone moves the recovered difference by up to ``delta*B``, so safe
+    runs are certain to count zero only while ``consensus_inf < theta -
+    delta*B``.  At ``delta = 1/4`` (1-bit nearest, 2-bit stochastic)
+    ``delta*B == theta`` and the margin vanishes entirely — quantization
+    error alone can land tiny distances on the band edge — so for
+    ``spec.delta >= 1/4`` the sentinel is pinned to 0 (not meaningful
+    from the payload alone; watch ``headroom`` instead, whose safe
+    threshold ``(1-2*delta)/2`` already encodes the same budget).
+    """
+    from repro.kernels import moniqua_decode_reduce as _dr
+    if spec.delta >= 0.25:          # no payload-only margin at this width
+        return jnp.zeros((), jnp.int32)
+    y = flat.astype(jnp.float32)
+    count = jnp.zeros((), jnp.int32)
+    for o in offsets:
+        qb = _dr.unpack_values(gossip._roll(packed, o), spec.bits, B)
+        mask = _dr.alias_band_mask(qb, y, B, theta)
+        count = count + jnp.sum(mask, dtype=jnp.int32)
+    return count
+
+
+# ---------------------------------------------------------------------------
+# AD-PSGD pair exchanges.
+# ---------------------------------------------------------------------------
+
+def pair_health(xi: jax.Array, xj: jax.Array, theta=None,
+                spec: Optional[QuantSpec] = None,
+                seed: Optional[jax.Array] = None
+                ) -> Dict[str, jax.Array]:
+    """Health of one edge exchange: pre-round models of the two endpoints.
+
+    With a Moniqua ``spec`` the payloads are re-encoded under the exchange
+    seed (bit-identical to what ``CommEngine.pair_average`` ships — same
+    encode, same seed) and the alias band is tested in both decode
+    directions; without one only the consensus distance is meaningful.
+    Returns the same keys as ``round_health_zero``.
+    """
+    from repro.kernels import moniqua_decode_reduce as _dr
+    from repro.kernels import ops as kops
+    h = round_health_zero()
+    fi = xi.astype(jnp.float32)
+    fj = xj.astype(jnp.float32)
+    h["consensus_inf"] = jnp.max(jnp.abs(fi - fj))
+    if spec is None or theta is None:
+        return h
+    theta = jnp.asarray(theta, jnp.float32)
+    B = modulo.b_theta(theta, spec.delta)
+    h["headroom"] = h["consensus_inf"] / B
+    if spec.delta < 0.25:   # guard band exists (see moniqua_alias_count)
+        pi = kops.moniqua_encode_jnp(xi, B, spec, seed)
+        pj = kops.moniqua_encode_jnp(xj, B, spec, seed)
+        n_last = xi.shape[-1]
+        qi = _dr.unpack_values(pi, spec.bits, B)[..., :n_last]
+        qj = _dr.unpack_values(pj, spec.bits, B)[..., :n_last]
+        h["alias_count"] = (
+            jnp.sum(_dr.alias_band_mask(qj, fi, B, theta), dtype=jnp.int32)
+            + jnp.sum(_dr.alias_band_mask(qi, fj, B, theta),
+                      dtype=jnp.int32))
+    h["bits_per_param"] = jnp.float32(float(spec.bits))
+    return h

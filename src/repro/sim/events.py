@@ -126,6 +126,16 @@ class SimTrace:
     def count(self, kind: str) -> int:
         return sum(1 for e in self.events if e.kind == kind)
 
+    def to_chrome(self, pid: int = 1, process_name: str = "sim"
+                  ) -> Dict[str, Any]:
+        """Chrome-trace JSON of this timeline (one track per worker, plus a
+        barrier track) — same format as the host-side
+        :class:`~repro.obs.trace.SpanRecorder`, so
+        :func:`~repro.obs.trace.merge_chrome_traces` puts a measured run
+        and its sim prediction side by side in one Perfetto view."""
+        from repro.obs.trace import sim_trace_to_chrome
+        return sim_trace_to_chrome(self, pid=pid, process_name=process_name)
+
 
 # ---------------------------------------------------------------------------
 # Synchronous-round mode.

@@ -27,13 +27,17 @@ def make_prefill_step(model: Model, *, last_only: bool = True
     final position only — what a serving sampler consumes (vLLM semantics);
     the full [B, S, V] f32 logits tensor is never materialised."""
     def prefill_step(params, batch):
-        return model.prefill_logits(params, batch, last_only=last_only)
+        # named scope: the prefill phase is attributed in XLA/profiler
+        # output (same convention as CommEngine's comm.* gossip phases)
+        with jax.named_scope("serve.prefill"):
+            return model.prefill_logits(params, batch, last_only=last_only)
     return prefill_step
 
 
 def make_serve_step(model: Model) -> Callable[..., Tuple[jax.Array, PyTree]]:
     def serve_step(params, cache, token):
-        return model.decode_step(params, cache, token)
+        with jax.named_scope("serve.decode"):
+            return model.decode_step(params, cache, token)
     return serve_step
 
 

@@ -186,6 +186,11 @@ def make_train_step(model: Model, hp: AlgoHyper, tcfg: TrainStepConfig
                    "theta": jnp.asarray(theta, jnp.float32), "g_inf": g_inf,
                    "wire_bytes": jnp.asarray(
                        algo.bytes_per_step(X, hp), jnp.float32)}
+        if isinstance(extra, dict) and "health" in extra:
+            # hp.telemetry: the algorithm's accumulated round-health carry
+            # (repro.obs.metrics) surfaces as obs_* step metrics
+            metrics.update({f"obs_{k}": v
+                            for k, v in extra["health"].items()})
         return new_state, metrics
 
     return train_step

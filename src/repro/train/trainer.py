@@ -27,6 +27,11 @@ from repro.train import train_step as TS
 PyTree = Any
 
 
+def _null_ctx():
+    import contextlib
+    return contextlib.nullcontext()
+
+
 @dataclasses.dataclass
 class TrainerConfig:
     algo: str = "moniqua"
@@ -49,6 +54,12 @@ class TrainerConfig:
     backend: str = "auto"       # CommEngine backend (jnp | pallas | auto)
     bucketed: bool = True       # flat-buffer gossip (comm/bucket.py)
     warmup: int = 16            # onebit wire: fp32 rounds before 1-bit+EF
+    telemetry: bool = False     # round-health obs_* metrics (repro.obs);
+                                #   static flag — off costs nothing under jit
+    log_jsonl: Optional[str] = None   # schema-versioned run log (repro.obs.
+                                #   runlog); drained metrics + spans + result
+    trace_path: Optional[str] = None  # Chrome-trace JSON of the host-side
+                                #   phase spans (Perfetto / chrome://tracing)
 
 
 def build_hyper(tc: TrainerConfig) -> AlgoHyper:
@@ -59,7 +70,8 @@ def build_hyper(tc: TrainerConfig) -> AlgoHyper:
     spec = QuantSpec(bits=tc.bits, stochastic=tc.bits > 1)
     return AlgoHyper(topo=topo, codec=MoniquaCodec(spec), theta=tc.theta,
                      gamma=tc.gamma, wire=tc.wire, backend=tc.backend,
-                     bucketed=tc.bucketed, warmup=tc.warmup)
+                     bucketed=tc.bucketed, warmup=tc.warmup,
+                     telemetry=tc.telemetry)
 
 
 class Trainer:
@@ -138,24 +150,61 @@ class Trainer:
         # replays exactly the batches the uninterrupted run would have seen
         k0 = int(jax.device_get(state["step"]))
         history: List[Dict] = []
+        rec = writer = None
+        if tc.trace_path or tc.log_jsonl:
+            from repro.obs.trace import SpanRecorder
+            rec = SpanRecorder()
+        if tc.log_jsonl:
+            from repro.obs.runlog import RunLogWriter
+            run_meta = dataclasses.asdict(tc)
+            run_meta["theta_mode"] = self.tcfg.theta.mode
+            writer = RunLogWriter(tc.log_jsonl, run=run_meta, tool="trainer")
         t0 = time.time()
-        for k in range(k0, k0 + tc.steps):
-            batch = self.pipeline.worker_batch(k)
-            state, metrics = self.jstep(state, batch)
-            if (k - k0) % tc.log_every == 0 or k == k0 + tc.steps - 1:
-                m = {kk: float(v) for kk, v in metrics.items()}
-                m["step"] = k
-                m["wall"] = time.time() - t0
-                history.append(m)
-                if callback:
-                    callback(k, m)
-            if (tc.checkpoint_path and tc.checkpoint_every
-                    and (k + 1) % tc.checkpoint_every == 0):
-                meta = {"step": k + 1, "algo": tc.algo, "wire": tc.wire}
-                # params-only artifact (the eval/restore surface) ...
-                ckpt.save(tc.checkpoint_path, state["params"], meta)
-                # ... plus the FULL state (momentum, WireState, counters,
-                # PRNG key) so training resumes bit-identically
-                ckpt.save(tc.checkpoint_path + ".state", state, meta)
+        try:
+            for k in range(k0, k0 + tc.steps):
+                batch = self.pipeline.worker_batch(k)
+                if rec is not None:
+                    with rec.span("train.step", tid="train", step=k):
+                        state, metrics = self.jstep(state, batch)
+                else:
+                    state, metrics = self.jstep(state, batch)
+                if (k - k0) % tc.log_every == 0 or k == k0 + tc.steps - 1:
+                    # drain the whole metrics dict in ONE host transfer —
+                    # per-scalar float() round-trips device-synced once per
+                    # metric per log point
+                    m = {kk: float(v)
+                         for kk, v in jax.device_get(metrics).items()}
+                    m["step"] = k
+                    m["wall"] = time.time() - t0
+                    history.append(m)
+                    if writer is not None:
+                        writer.step(k, {kk: v for kk, v in m.items()
+                                        if kk not in ("step", "wall")},
+                                    wall_s=m["wall"])
+                    if callback:
+                        callback(k, m)
+                if (tc.checkpoint_path and tc.checkpoint_every
+                        and (k + 1) % tc.checkpoint_every == 0):
+                    meta = {"step": k + 1, "algo": tc.algo, "wire": tc.wire}
+                    ckpt_ctx = (rec.span("train.checkpoint", tid="train",
+                                         step=k + 1)
+                                if rec is not None else _null_ctx())
+                    with ckpt_ctx:
+                        # params-only artifact (the eval/restore surface)
+                        ckpt.save(tc.checkpoint_path, state["params"], meta)
+                        # ... plus the FULL state (momentum, WireState,
+                        # counters, PRNG key) so training resumes
+                        # bit-identically
+                        ckpt.save(tc.checkpoint_path + ".state", state, meta)
+            bps = self.bytes_per_step(state)
+            if writer is not None:
+                writer.spans_from(rec)
+                writer.result(bytes_per_step=bps,
+                              steps=tc.steps, wall_s=time.time() - t0)
+            if rec is not None and tc.trace_path:
+                rec.save(tc.trace_path, process_name="trainer")
+        finally:
+            if writer is not None:
+                writer.close()
         return {"state": state, "history": history,
-                "bytes_per_step": self.bytes_per_step(state)}
+                "bytes_per_step": bps}

@@ -33,7 +33,8 @@ DOC_FILES = ["README.md"] + sorted(
 ROOTS = ("src/", "docs/", "tests/", "benchmarks/", "examples/", "tools/",
          ".github/")
 SPAN_RE = re.compile(r"`([^`\n]+)`")
-BENCH_RE = re.compile(r"^(BENCH_\w+\.json|requirements[\w.-]*\.txt)$")
+BENCH_RE = re.compile(
+    r"^(BENCH_\w+\.json|RUNLOG_\w+\.jsonl|requirements[\w.-]*\.txt)$")
 
 # artifacts the docs promise and CI gates on: these must EXIST in the repo
 # even if no markdown span happens to reference them — a deleted trajectory
@@ -42,9 +43,11 @@ REQUIRED_ARTIFACTS = (
     "docs/codecs.md",
     "docs/simulator.md",
     "docs/kernels.md",
+    "docs/observability.md",
     "BENCH_network_sim.json",
     "BENCH_comm_fusion.json",
     "BENCH_memory_overhead.json",
+    "RUNLOG_sample.jsonl",
 )
 
 

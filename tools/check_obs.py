@@ -1,0 +1,92 @@
+#!/usr/bin/env python
+"""CI gate for the observability pipeline: validate run logs, fail on alias.
+
+    PYTHONPATH=src python tools/check_obs.py RUNLOG.jsonl [more.jsonl ...] \
+        [--trace trace.json] [--require-telemetry] [--allow-alias]
+
+Exit non-zero if any run log fails ``repro.obs.runlog`` schema validation,
+any supplied Chrome trace is structurally invalid, or (unless
+``--allow-alias``) any run log records a modulo alias event — an alias in
+a smoke run means the theta configuration violates Lemma 1's hypothesis
+and the build must not ship it silently.  ``--require-telemetry``
+additionally fails logs whose step records carry no ``obs_*`` metrics
+(catches a CI job that forgot to turn the flag on).
+
+``tools/obs_report.py`` is the human-facing twin; this one only gates.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs import runlog as RL  # noqa: E402
+from repro.obs import trace as TR  # noqa: E402
+
+
+def check_runlog(path: str, require_telemetry: bool,
+                 allow_alias: bool) -> list:
+    errors = RL.validate_runlog(path)
+    if errors:
+        return errors
+    records = RL.read_runlog(path)
+    steps = RL.step_records(records)
+    if require_telemetry:
+        has_obs = any(k.startswith("obs_")
+                      for r in steps
+                      if isinstance(r.get("metrics"), dict)
+                      for k in r["metrics"])
+        if not has_obs:
+            errors.append(f"{path}: --require-telemetry but no obs_* "
+                          "metrics in any step record (telemetry flag off?)")
+    if not allow_alias:
+        aliases = RL.alias_events(records)
+        if aliases:
+            errors.append(
+                f"{path}: {aliases} modulo alias events recorded — theta "
+                "is undersized for this run (Lemma 1 hypothesis violated); "
+                "a smoke run must be alias-free")
+    return errors
+
+
+def check_trace(path: str) -> list:
+    try:
+        with open(path) as f:
+            obj = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+    return [f"{path}: {e}" for e in TR.validate_chrome(obj)]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("runlogs", nargs="*", help="runlog JSONL files to gate")
+    ap.add_argument("--trace", action="append", default=[],
+                    help="Chrome-trace JSON files to validate")
+    ap.add_argument("--require-telemetry", action="store_true",
+                    help="fail logs with no obs_* step metrics")
+    ap.add_argument("--allow-alias", action="store_true",
+                    help="do not fail on recorded alias events (for "
+                         "deliberately-undersized-theta experiments)")
+    args = ap.parse_args(argv)
+    if not args.runlogs and not args.trace:
+        ap.error("nothing to check: pass runlog files and/or --trace")
+    errors = []
+    for path in args.runlogs:
+        errors.extend(check_runlog(path, args.require_telemetry,
+                                   args.allow_alias))
+    for path in args.trace:
+        errors.extend(check_trace(path))
+    for e in errors:
+        print(f"check_obs: FAIL: {e}")
+    if not errors:
+        n = len(args.runlogs) + len(args.trace)
+        print(f"check_obs: OK ({n} artifact(s) validated, alias-free)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

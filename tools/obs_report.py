@@ -1,0 +1,173 @@
+#!/usr/bin/env python
+"""Summarize repro.obs run logs (and optional Chrome traces) for humans.
+
+    PYTHONPATH=src python tools/obs_report.py RUNLOG.jsonl [more.jsonl ...] \
+        [--trace trace.json]
+
+For each run log: the run configuration, loss trajectory, recorded
+per-round theta, the theta-headroom percentiles with their safe
+thresholds, the modulo alias sentinel (LOUD warning on any event — it
+means Lemma 1's hypothesis failed and decodes wrapped), payload
+bits/param, and the host-side phase breakdown from the recorded spans.
+
+Reads anything ``repro.obs.runlog`` writes: trainer runs, ``--log-jsonl``
+dryruns, benchmark ``*.runlog.jsonl`` sidecars.  The CI gate lives in
+``tools/check_obs.py``; this tool only reports.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs import runlog as RL  # noqa: E402
+from repro.obs import trace as TR  # noqa: E402
+
+
+def _pct(values, q):
+    if not values:
+        return 0.0
+    vs = sorted(values)
+    return vs[min(int(len(vs) * q), len(vs) - 1)]
+
+
+def _metric_series(steps, key):
+    return [r["metrics"][key] for r in steps
+            if isinstance(r.get("metrics"), dict)
+            and isinstance(r["metrics"].get(key), (int, float))]
+
+
+def report_runlog(path: str) -> int:
+    """Print one run log's summary; returns the number of schema errors."""
+    errors = RL.validate_runlog(path)
+    print(f"== {path}")
+    if errors:
+        for e in errors:
+            print(f"  SCHEMA ERROR: {e}")
+        return len(errors)
+    records = RL.read_runlog(path)
+    head = records[0]
+    run = head.get("run", {}) or {}
+    cfg_bits = [f"tool={head.get('tool')}"]
+    for k in ("algo", "wire", "bits", "n_workers", "topology", "backend",
+              "theta", "theta_mode", "bench"):
+        if k in run:
+            cfg_bits.append(f"{k}={run[k]}")
+    print("  " + "  ".join(cfg_bits))
+
+    steps = RL.step_records(records)
+    if steps:
+        losses = _metric_series(steps, "loss")
+        thetas = _metric_series(steps, "theta")
+        print(f"  steps logged: {len(steps)}"
+              + (f"  loss {losses[0]:.4g} -> {losses[-1]:.4g}"
+                 if losses else ""))
+        if thetas:
+            print(f"  theta recorded per round: min={min(thetas):.4g} "
+                  f"max={max(thetas):.4g}")
+        headroom = _metric_series(steps, "obs_headroom")
+        consensus = _metric_series(steps, "obs_consensus_inf")
+        if headroom and any(h > 0 for h in headroom):
+            # safe threshold: headroom < theta/B = (1-2*delta)/2 < 0.5
+            print(f"  theta headroom (consensus/B): "
+                  f"p50={_pct(headroom, 0.50):.4g} "
+                  f"p95={_pct(headroom, 0.95):.4g} "
+                  f"max={max(headroom):.4g}   (safe < 0.5)")
+        if consensus and thetas and all(t > 0 for t in thetas):
+            ratio = [c / t for c, t in zip(consensus, thetas)]
+            print(f"  consensus/theta: p50={_pct(ratio, 0.50):.4g} "
+                  f"p95={_pct(ratio, 0.95):.4g} max={max(ratio):.4g}   "
+                  f"(safe < 1)")
+        bpp = _metric_series(steps, "obs_bits_per_param")
+        if bpp:
+            print(f"  payload bits/param: {bpp[-1]:.4g}")
+        ef = _metric_series(steps, "obs_ef_residual_l2")
+        if ef and any(v > 0 for v in ef):
+            print(f"  EF residual l2: first={ef[0]:.4g} last={ef[-1]:.4g} "
+                  f"max={max(ef):.4g}")
+        warm = _metric_series(steps, "obs_warm")
+        if warm and any(v > 0 for v in warm):
+            print(f"  warmup rounds in log: "
+                  f"{sum(1 for v in warm if v > 0)}/{len(warm)}")
+        aliases = RL.alias_events(records)
+        if aliases:
+            print(f"  *** ALIAS WARNING: {aliases} modulo alias events — "
+                  f"theta is undersized, Lemma 1's |x_i - x_j| < theta "
+                  f"hypothesis FAILED and decodes wrapped.  Raise theta "
+                  f"(or its schedule) before trusting this run. ***")
+        elif _metric_series(steps, "obs_alias_count"):
+            print("  alias sentinel: 0 events (theta bound held)")
+
+    spans = [r for r in records if r.get("kind") == "span"]
+    if spans:
+        by_name = {}
+        for s in spans:
+            by_name.setdefault(s["name"], []).append(s["dur_s"])
+        total = sum(sum(v) for v in by_name.values())
+        print("  phase breakdown (host spans):")
+        for name, durs in sorted(by_name.items(),
+                                 key=lambda kv: -sum(kv[1])):
+            tot = sum(durs)
+            share = 100.0 * tot / total if total else 0.0
+            print(f"    {name:<22} {tot:8.3f}s  x{len(durs):<5} "
+                  f"{share:5.1f}%")
+
+    events = [r for r in records if r.get("kind") == "event"]
+    if events:
+        kinds = {}
+        for e in events:
+            kinds[e["name"]] = kinds.get(e["name"], 0) + 1
+        print("  events: " + ", ".join(f"{k} x{v}"
+                                       for k, v in sorted(kinds.items())))
+    for r in records:
+        if r.get("kind") == "result":
+            fields = {k: v for k, v in r.items() if k != "kind"}
+            print("  result: " + json.dumps(fields))
+    return 0
+
+
+def report_trace(path: str) -> int:
+    print(f"== {path}")
+    try:
+        with open(path) as f:
+            obj = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"  UNREADABLE: {e}")
+        return 1
+    errors = TR.validate_chrome(obj)
+    for e in errors:
+        print(f"  TRACE ERROR: {e}")
+    evs = obj.get("traceEvents", [])
+    spans = [e for e in evs if e.get("ph") == "X"]
+    pids = sorted({e.get("pid", 0) for e in evs})
+    print(f"  {len(evs)} events ({len(spans)} spans) across "
+          f"{len(pids)} process(es); open in Perfetto / chrome://tracing")
+    by_name = {}
+    for s in spans:
+        by_name.setdefault(s["name"], []).append(s.get("dur", 0.0))
+    for name, durs in sorted(by_name.items(), key=lambda kv: -sum(kv[1]))[:10]:
+        print(f"    {name:<22} {sum(durs)/1e6:8.3f}s  x{len(durs)}")
+    return len(errors)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("runlogs", nargs="*", help="runlog JSONL files")
+    ap.add_argument("--trace", action="append", default=[],
+                    help="Chrome-trace JSON files to summarize")
+    args = ap.parse_args(argv)
+    if not args.runlogs and not args.trace:
+        ap.error("nothing to report: pass runlog files and/or --trace")
+    failures = 0
+    for path in args.runlogs:
+        failures += report_runlog(path)
+    for path in args.trace:
+        failures += report_trace(path)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
