@@ -133,9 +133,9 @@ def _time_pair(eng_leaf: CommEngine, eng_bucket: CommEngine, X,
 
     def jit_mix(eng):
         if needs_theta:
-            f = jax.jit(lambda x, k: eng.mix(x, theta=2.0, key=k))
+            f = jax.jit(lambda x, k: eng.mix(x, theta=2.0, key=k).x)
         else:
-            f = jax.jit(lambda x, k: eng.mix(x, key=k))
+            f = jax.jit(lambda x, k: eng.mix(x, key=k).x)
         jax.block_until_ready(f(X, key))        # compile + warm up
         return f
 

@@ -1,0 +1,209 @@
+"""Whole-step wall-clock: barrier gossip round vs chunk-pipelined round.
+
+PR-4 fused the round into one flat bucket; this benchmark measures the
+next lever: splitting that bucket into K slot-aligned chunks and running
+the staged ``RoundPlan`` pipeline (encode t / permute t-1 / decode-reduce
+t-2, comm/engine.py).  On a mesh the win is overlap — chunk t's
+collective-permute hides behind t+1's encode; on this CPU host the same
+restructuring still wins wall-clock because each ~(D/K)-sized chunk stays
+cache-resident across its three phases instead of streaming the whole
+multi-MB buffer through memory three times per round.
+
+Measured: the **whole jitted train step** (fwd + bwd + optimizer + gossip,
+``train/train_step.py``) on reduced model-zoo configs, ``chunks=1`` vs
+``chunks=K``, interleaved rep-by-rep with min-over-reps (contention noise
+only inflates samples).  The pipeline is only worth shipping if the round
+it produces is the same round — so the table also records the bit-exact
+booleans for ALL five wires (outputs and, for the EF wires, the post-round
+WireState), ``chunks=1`` vs ``chunks=K``, which ``tools/check_bench.py``
+gates alongside the speedups.
+
+``BENCH_overlap.json`` is the committed trajectory; CI's bench-smoke job
+writes ``BENCH_overlap.smoke.json`` and the gate compares the two.
+
+Usage:  python benchmarks/bench_overlap.py [--smoke]
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.engine import CommEngine, make_wire
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.core.quantizers import QuantSpec
+from repro.core.topology import ring
+from repro.models.model_factory import build_model
+from repro.train.trainer import Trainer, TrainerConfig
+
+N_WORKERS = 8
+CHUNKS = 4          # the pipelined K; tuned on this host (K=2..8 sweep)
+SHAPE = InputShape("bench", seq_len=32, global_batch=8, kind="train")
+
+# whole-step timing: the two quantized wires whose codec work dominates
+# the round (the fp32 wire is a memcpy-bound roll — nothing to pipeline)
+TIMED_WIRES = [("moniqua-8bit", "moniqua", 8), ("qsgd-8bit", "qsgd", 8)]
+
+# bit-exactness is checked for the FULL wire family
+BITEXACT_WIRES = [("full", 32), ("moniqua", 8), ("qsgd", 8),
+                  ("ef_qsgd", 4), ("onebit", 1)]
+
+
+def _zoo():
+    return [("transformer", "llama3.2-3b"), ("mamba2", "zamba2-1.2b"),
+            ("moe", "dbrx-132b")]
+
+
+def _stack(params, n=N_WORKERS):
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), params)
+
+
+# ---------------------------------------------------------------------------
+# Whole-step timing.
+# ---------------------------------------------------------------------------
+
+def _trainer(model, wire, chunks):
+    tc = TrainerConfig(algo="moniqua", wire=wire, n_workers=N_WORKERS,
+                       bits=8, theta=2.0, steps=1, comm_path="bucketed",
+                       chunks=chunks)
+    return Trainer(model, SHAPE, tc)
+
+
+def _time_step_pair(model, wire, reps):
+    """Min-over-reps whole-step seconds, barrier (K=1) vs pipelined (K=K),
+    interleaved rep by rep so host drift hits both equally."""
+    trs = (_trainer(model, wire, 1), _trainer(model, wire, CHUNKS))
+    batch = trs[0].pipeline.worker_batch(0)
+    for tr in trs:                       # compile + warm up (donated state)
+        out, _ = tr.jstep(tr.init_state(), batch)
+        jax.block_until_ready(out["params"])
+    times = ([], [])
+    for _ in range(reps):
+        for tr, acc in zip(trs, times):
+            state = tr.init_state()      # fresh: jstep donates its input
+            t0 = time.perf_counter()
+            out, _ = tr.jstep(state, batch)
+            jax.block_until_ready(out["params"])
+            acc.append(time.perf_counter() - t0)
+    return min(times[0]), min(times[1])
+
+
+# ---------------------------------------------------------------------------
+# Bit-exactness: chunks=K is the same round as chunks=1, every wire.
+# ---------------------------------------------------------------------------
+
+def _bitexact_row(model_name, X):
+    rows = []
+    for wire, bits in BITEXACT_WIRES:
+        spec = QuantSpec(bits=min(bits, 8), stochastic=1 < bits <= 8)
+        codec = (make_wire(wire, spec, warmup=1)
+                 if wire in ("ef_qsgd", "onebit") else make_wire(wire, spec))
+        a = CommEngine(ring(N_WORKERS), codec, backend="jnp",
+                       path="bucketed", chunks=1)
+        b = CommEngine(ring(N_WORKERS), codec, backend="jnp",
+                       path="bucketed", chunks=CHUNKS)
+        kw = {"theta": 2.0, "key": jax.random.PRNGKey(0)}
+        if wire == "full":
+            kw = {}
+        elif wire != "moniqua":
+            kw.pop("theta")
+        sa = a.init_wire_state(X) if a.stateful else None
+        ra = a.mix(X, state=sa, **kw)
+        rb = b.mix(X, state=sa, **kw)
+        ok = all(bool(jnp.all(la == lb)) for la, lb in
+                 zip(jax.tree.leaves(ra.x), jax.tree.leaves(rb.x)))
+        if a.stateful:
+            ok = ok and all(bool(jnp.all(la == lb)) for la, lb in
+                            zip(jax.tree.leaves(ra.state["residual"]),
+                                jax.tree.leaves(rb.state["residual"])))
+        rows.append({"model": model_name, "wire": wire, "bits": bits,
+                     "chunks": CHUNKS, "bitexact": bool(ok)})
+    return rows
+
+
+# ---------------------------------------------------------------------------
+
+def run(quick: bool = False) -> dict:
+    reps = 2 if quick else 5
+    zoo = _zoo()[:1] if quick else _zoo()
+    table, bitexact = [], []
+    for model_name, cfg_name in zoo:
+        model = build_model(get_config(cfg_name).reduced())
+        X = _stack(model.init(jax.random.PRNGKey(0)))
+        d = sum(int(np.prod(l.shape[1:])) for l in jax.tree.leaves(X))
+        eng = CommEngine(ring(N_WORKERS), make_wire("moniqua"),
+                         backend="jnp", path="bucketed")
+        layout = eng.layout(X)
+        n_chunks = len(layout.chunks(CHUNKS))
+        for label, wire, bits in TIMED_WIRES:
+            t_barrier, t_pipe = _time_step_pair(model, wire, reps)
+            table.append({
+                "model": model_name, "wire": label, "chunks": n_chunks,
+                "params_per_worker": d,
+                "n_slots": len(layout.slots),
+                "step_ms_barrier": t_barrier * 1e3,
+                "step_ms_pipelined": t_pipe * 1e3,
+                "speedup_x": t_barrier / t_pipe,
+            })
+        bitexact.extend(_bitexact_row(model_name, X))
+
+    all_exact = all(r["bitexact"] for r in bitexact)
+    head = max(table, key=lambda r: r["speedup_x"])
+    return {
+        "table": table,
+        "bitexact": bitexact,
+        "all_bitexact": all_exact,
+        "headline": {"model": head["model"], "wire": head["wire"],
+                     "chunks": head["chunks"],
+                     "speedup_x": head["speedup_x"],
+                     "step_ms_barrier": head["step_ms_barrier"],
+                     "step_ms_pipelined": head["step_ms_pipelined"]},
+        "backend": "jnp (jitted, this host)",
+        "n_workers": N_WORKERS,
+        "chunks": CHUNKS,
+        "reps": reps,
+        "notes": (
+            "Whole jitted train-step wall-clock (fwd+bwd+optimizer+gossip, "
+            "train/train_step.py make_train_step via the Trainer), ring "
+            "n=8, reduced model-zoo configs, barrier round (chunks=1) vs "
+            "the staged RoundPlan pipeline (chunks=4, comm/engine.py); "
+            "paths timed interleaved rep-by-rep, min over reps.  The "
+            "pipelined round does identical work in K slot-aligned "
+            "windows (encode t / permute t-1 / decode-reduce t-2); on a "
+            "mesh the permute overlaps neighboring chunks' codec phases, "
+            "and on this CPU host the chunk-sized working set stays "
+            "cache-resident across its three phases, which is where the "
+            "measured win comes from.  'bitexact' rows verify chunks=4 "
+            "against chunks=1 bitwise for all five wires (outputs + EF "
+            "WireState) — the pipeline is a schedule change, not a "
+            "numerics change."),
+    }
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer reps, first zoo model only; write "
+                         "BENCH_overlap.smoke.json")
+    args = ap.parse_args()
+    out = run(quick=args.smoke)
+    name = "BENCH_overlap.smoke.json" if args.smoke else "BENCH_overlap.json"
+    path = os.path.join(_ROOT, name)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, default=float)
+    print(json.dumps(out["headline"], indent=2, default=float))
+    print(f"wrote {path}")

@@ -75,7 +75,7 @@ def _codec_rows(X, grad_seconds: float, quick: bool):
         eng = C.build_engine(wire, bits, n=N_WORKERS)
         wire_bytes = eng.bytes_per_round(X)
         key = jax.random.PRNGKey(0)
-        mix = jax.jit(lambda x, k: eng.mix(x, theta=2.0, key=k))
+        mix = jax.jit(lambda x, k: eng.mix(x, theta=2.0, key=k).x)
         out = mix(X, key)                       # compile + warm up
         jax.block_until_ready(out)
         t0 = time.time()

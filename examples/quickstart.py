@@ -55,7 +55,8 @@ def demo_gossip():
     X = base + jax.random.uniform(jax.random.PRNGKey(1), (8, 128),
                                   minval=-0.45, maxval=0.45) * theta
     ledger = gossip.BytesLedger()
-    X1 = engine.mix(X, theta=theta, key=jax.random.PRNGKey(2), ledger=ledger)
+    X1 = engine.mix(X, theta=theta, key=jax.random.PRNGKey(2),
+                    ledger=ledger).x
     spread = lambda A: float(jnp.abs(A - A.mean(0)).max())
     drift = float(jnp.abs(X1.mean(0) - X.mean(0)).max())
     f32 = gossip.dtype_bytes_tree(X) * len(engine.topo.neighbor_offsets())

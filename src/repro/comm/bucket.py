@@ -69,6 +69,29 @@ class LeafSlot:
 
 
 @dataclasses.dataclass(frozen=True)
+class BucketChunk:
+    """One contiguous window of the flat buffer, covering whole leaf slots.
+
+    The staged-round pipeline (``CommEngine.round_plan``) encodes, permutes
+    and decode-reduces one chunk at a time.  Chunk boundaries always fall on
+    slot boundaries, so per-tensor codec statistics (qsgd's max-norm scale,
+    onebit's lo/hi levels) never straddle a chunk, and — because every
+    ``padded_size`` is a multiple of the layout alignment — chunk offsets
+    stay on the values-per-byte packing boundary.
+    """
+    index: int               # position in the chunk sequence
+    offset: int              # element offset of the window in the buffer
+    size: int                # padded elements in the window
+    slots: Tuple[LeafSlot, ...]   # the (contiguous) slots covered
+
+    @property
+    def segment_sizes(self) -> Tuple[int, ...]:
+        """Per-tensor segment lengths inside this chunk (cf.
+        ``BucketLayout.segment_sizes``, restricted to the window)."""
+        return tuple(s.padded_size for s in self.slots)
+
+
+@dataclasses.dataclass(frozen=True)
 class BucketLayout:
     """Cached flat-buffer layout for one stacked pytree structure.
 
@@ -114,6 +137,19 @@ class BucketLayout:
         max-norm scale) use to stay per-tensor on the flat buffer."""
         return tuple(s.padded_size for s in self.slots)
 
+    def chunks(self, k: int) -> Tuple[BucketChunk, ...]:
+        """Partition the buffer into (at most) ``k`` contiguous chunks.
+
+        Deterministic static partition, balanced by padded element count
+        with a greedy sweep: each chunk accumulates whole slots until it
+        reaches the remaining-average target.  ``k`` is clamped to
+        ``num_leaves`` (a chunk never splits a slot, so per-tensor scale
+        segments stay intact) and to >= 1.  ``chunks(1)`` is the whole
+        buffer — the barrier round — and the concatenation of chunk
+        windows always covers ``[0, padded_elems)`` exactly, in order.
+        """
+        return _chunks_of(self, max(int(k), 1))
+
     # -- the two jit-safe data movers --------------------------------------
     def flatten(self, X: PyTree) -> jax.Array:
         """Stacked pytree -> one ``[n, padded_elems]`` staging buffer.
@@ -151,6 +187,40 @@ class BucketLayout:
             out.append(seg.reshape((self.n_workers,) + s.shape)
                        .astype(s.dtype))
         return self.treedef.unflatten(out)
+
+
+@functools.lru_cache(maxsize=1024)
+def _chunks_of(layout: "BucketLayout", k: int) -> Tuple[BucketChunk, ...]:
+    """Greedy slot-aligned partition (memoized: layouts are frozen/hashable,
+    so a jitted round re-tracing with the same (layout, k) reuses the same
+    static chunk descriptors)."""
+    slots = layout.slots
+    k = min(k, len(slots))
+    chunks, start = [], 0
+    remaining = layout.padded_elems
+    for i in range(k):
+        target = remaining / (k - i)
+        end, acc = start, 0
+        # take slots until the chunk reaches the remaining-average target;
+        # every chunk takes at least one slot so all k chunks are non-empty
+        while end < len(slots) and (end == start or acc < target):
+            nxt = acc + slots[end].padded_size
+            # stop before overshooting past the target by more than the
+            # undershoot — keeps chunk sizes balanced around the target
+            if end > start and nxt - target > target - acc:
+                break
+            acc = nxt
+            end += 1
+        # leave enough slots for the chunks still to come
+        end = min(end, len(slots) - (k - i - 1))
+        end = max(end, start + 1)
+        window = slots[start:end]
+        chunks.append(BucketChunk(index=i, offset=window[0].offset,
+                                  size=sum(s.padded_size for s in window),
+                                  slots=tuple(window)))
+        remaining -= chunks[-1].size
+        start = end
+    return tuple(chunks)
 
 
 def _common_stage_dtype(dtypes) -> Any:

@@ -30,17 +30,50 @@ paper's algorithm zoo (and every future scaling PR) plugs into:
   agree **bit-exactly** in interpret mode — the parity contract
   ``tests/test_engine.py`` enforces.
 
-Why the fused backend matters: the legacy path
-(``comm/gossip.py::moniqua_gossip``) decodes every neighbor payload into a
-full f32 model copy before reducing — ``m`` extra HBM materializations per
-round.  The fused decode-reduce kernel unpacks all payloads, applies the
-modulo recovery and accumulates the weighted delta in VMEM, writing the mixed
-result once (HBM-traffic model in ``docs/kernels.md``).
+Results are uniform: ``mix`` always returns a :class:`MixResult`
+(``x``, ``state``, ``health`` — ``state == {}`` for stateless wires,
+``health is None`` with telemetry off) and ``pair_average`` a
+:class:`PairResult`; callers use attribute access, never tuple-arity
+branching.
+
+Gossip path (``path=``): ``"bucketed"`` flattens the whole stacked pytree
+into one contiguous per-worker staging buffer (``comm/bucket.py``) so a
+round is one encode launch, one packed roll per offset, one fused
+decode-reduce, and one scatter back to leaves; ``"per_leaf"`` keeps the
+leaf-by-leaf round as the parity reference; ``"auto"`` (default) picks per
+(layout, codec) from a memoized crossover table seeded by the committed
+``BENCH_comm_fusion.json`` — bucketing wins exactly when the per-leaf
+tile-grid pad amplification (dozens of sub-tile biases each padded to
+256x1024) dwarfs the bucketed single pad, which the committed data shows
+only for many-small-leaf models on the Moniqua wire.  Stateful (EF) wires
+always bucket: their canonical residual lives in the flat domain.
+
+Staged rounds: ``round_plan(X)`` returns a :class:`RoundPlan` exposing one
+gossip round as three separable phases per chunk — ``encode_chunk(i)``,
+``permute(i)``, ``decode_reduce(i)`` — over the ``BucketLayout.chunks(K)``
+partition (slot-aligned, so per-tensor scales never straddle a chunk).
+``RoundPlan.run()`` software-pipelines them in the skewed order
+encode(t) / permute(t-1) / decode-reduce(t-2), so chunk t's
+collective-permute is issued while t+1 encodes and t-1 reduces — the
+ROADMAP's overlap item.  Because every codec hashes *global* element
+indices (``idx_base`` = chunk offset) and chunk boundaries stay on
+values-per-byte segment boundaries, the pipelined round is **bit-exact**
+against the barrier round (``chunks=1``) for every wire — outputs, payload
+bits, and post-round WireState (``tests/test_overlap.py``).
+
+Step-level overlap: ``mix_stale`` (stateless Moniqua only) applies the
+*previous* round's payloads to the current model and immediately encodes
+the result for the next round, carrying ``(packed, ref, B, valid)`` across
+steps — one-round-stale mixing, so the decode-reduce of round k can hide
+behind the forward pass of step k+1.  Staleness-tolerance for decentralized
+SGD with quantized updates (PAPERS.md) covers this delay-1 schedule.
 
 Bytes accounting is trace-time bookkeeping: ``mix(..., ledger=...)`` records
 payload-bytes-per-worker into a :class:`~repro.comm.gossip.BytesLedger`, and
 ``bytes_per_round`` returns the same number without running anything — the
-input to the analytic network model in ``benchmarks/``.
+input to the analytic network model in ``benchmarks/``.  Payload bytes are
+path-independent (the vpb row alignment makes the bucketed payload equal
+the per-leaf sum exactly), so ``path="auto"`` never changes the ledger.
 
 Sharded meshes: the Moniqua backends tile each worker's slice separately
 (``kernels/ops.py`` stacked wrappers vmap the tile layout over the worker
@@ -50,17 +83,6 @@ same (seed, element) pairs — stochastic rounding uses Supp.-C shared
 randomness exactly: identical models encode to identical payloads on
 every worker.
 
-Bucketing: by default the engine does not gossip leaf by leaf.  A cached
-:class:`~repro.comm.bucket.BucketLayout` flattens the whole stacked pytree
-into one contiguous per-worker buffer, so a round is one encode launch,
-one packed roll per offset (the whole-model collective-permute), one fused
-decode-reduce, and one scatter back to leaves — the per-leaf fixed costs
-(kernel dispatch and, above all, the 256x1024 tile-grid pad that turns a
-64-element bias into 262k elements of codec work) are paid once per round
-instead of once per leaf.  ``bucketed=False`` keeps the per-leaf path as
-the parity reference; ``benchmarks/bench_comm_fusion.py`` measures the
-gap and commits it to ``BENCH_comm_fusion.json``.
-
 Wall-clock prediction: the byte counts this engine produces feed the
 event-driven simulator (``repro.sim``), which prices them under explicit
 link/compute models per named scenario — see ``docs/simulator.md``.
@@ -68,7 +90,11 @@ link/compute models per named scenario — see ``docs/simulator.md``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+import functools
+import json
+import math
+import os
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -87,11 +113,16 @@ from repro.core.quantizers import (QuantSpec, ef_qsgd_encode_segmented,
 from repro.core.topology import Topology
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
+from repro.kernels.moniqua_encode import (DEFAULT_BLOCK_COLS,
+                                          DEFAULT_BLOCK_ROWS)
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 PyTree = Any
 
 WIRES = ("full", "moniqua", "qsgd", "ef_qsgd", "onebit")
 BACKENDS = ("auto", "jnp", "pallas")
+PATHS = ("bucketed", "per_leaf", "auto")
 
 
 def resolve_backend(backend: str) -> str:
@@ -100,6 +131,35 @@ def resolve_backend(backend: str) -> str:
     if backend == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "jnp"
     return backend
+
+
+# ---------------------------------------------------------------------------
+# Uniform round results.
+# ---------------------------------------------------------------------------
+
+class MixResult(NamedTuple):
+    """What one gossip round returns — always the same three fields.
+
+    ``x`` is the mixed model ``X_{k+1/2}``; ``state`` is the post-round
+    WireState carry (``{}`` for stateless wires — thread it back into the
+    next ``mix`` for EF wires, or the gossip carry for ``mix_stale``);
+    ``health`` is the round-health dict (``None`` unless the engine was
+    built with ``telemetry=True``).  Use attribute access: the fields are
+    uniform precisely so call sites never branch on arity again.
+    """
+    x: Any
+    state: dict = {}
+    health: Optional[dict] = None
+
+
+class PairResult(NamedTuple):
+    """What one ``pair_average`` edge exchange returns (AD-PSGD primitive):
+    both updated endpoints plus their post-exchange WireState carries
+    (``{}`` for stateless wires)."""
+    xi: Any
+    xj: Any
+    state_i: dict = {}
+    state_j: dict = {}
 
 
 # ---------------------------------------------------------------------------
@@ -160,8 +220,8 @@ class OneBitWire:
     per-segment cluster-mean levels) and an error-feedback residual.  The
     carried step counter is the ``need_reset``-style hook: crossing it flips
     the round's codec inside the jitted step (a ``jnp.where`` select — see
-    ``_ef_flat_round``), and checkpointing the counter resumes the schedule
-    bit-identically."""
+    ``RoundPlan.decode_reduce``), and checkpointing the counter resumes the
+    schedule bit-identically."""
     spec: QuantSpec = dataclasses.field(
         default_factory=lambda: QuantSpec(bits=1, stochastic=False))
     warmup: int = 16
@@ -196,6 +256,79 @@ def make_wire(name: str, spec: Optional[QuantSpec] = None, warmup: int = 16):
 
 
 # ---------------------------------------------------------------------------
+# Auto path selection: per-(layout, codec) crossover from committed bench data.
+# ---------------------------------------------------------------------------
+
+def _tile_padded(elems: int) -> int:
+    """Elements after padding a flat segment to the Pallas encode tile grid
+    (same accounting as ``benchmarks/bench_comm_fusion.py``)."""
+    rows = -(-elems // DEFAULT_BLOCK_COLS)
+    return -(-rows // DEFAULT_BLOCK_ROWS) * DEFAULT_BLOCK_ROWS \
+        * DEFAULT_BLOCK_COLS
+
+
+# measured crossover when BENCH_comm_fusion.json is absent (derived from the
+# same committed data: moniqua buckets win only where per-leaf tile padding
+# amplifies ~30x over bucketed; qsgd/full buckets lose on every measured model)
+_FALLBACK_CROSSOVER = {"moniqua": 9.8, "qsgd": float("inf"),
+                       "full": float("inf")}
+
+
+@functools.lru_cache(maxsize=1)
+def _crossover_table() -> Dict[str, float]:
+    """Per-wire pad-amplification threshold above which bucketing wins.
+
+    Seeded from the committed ``BENCH_comm_fusion.json``: each measured
+    model has a pad-amplification ratio (per-leaf tile-padded elements /
+    bucketed tile-padded elements) and a bucketed-vs-per-leaf speedup per
+    codec.  The threshold is the geometric mean of the worst winning and
+    best losing ratio — ``inf`` when bucketing never won, ``1.0`` when it
+    never lost.  Falls back to the hardcoded equivalents when the file is
+    missing (fresh checkout before benches ran).
+    """
+    try:
+        root = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))))
+        with open(os.path.join(root, "BENCH_comm_fusion.json")) as f:
+            data = json.load(f)
+        ratios = {o["model"]: (o["tile_padded_elems_per_leaf_path"]
+                               / o["tile_padded_elems_bucketed"])
+                  for o in data["overhead"]}
+        wire_of = {"moniqua-1bit": "moniqua", "moniqua-8bit": "moniqua",
+                   "qsgd-8bit": "qsgd", "fp32": "full"}
+        wins: Dict[str, list] = {}
+        losses: Dict[str, list] = {}
+        for row in data["table"]:
+            wire = wire_of.get(row["codec"])
+            if wire is None or row["model"] not in ratios:
+                continue
+            side = wins if row["speedup_x"] >= 1.0 else losses
+            side.setdefault(wire, []).append(ratios[row["model"]])
+        table = dict(_FALLBACK_CROSSOVER)
+        for wire in ("moniqua", "qsgd", "full"):
+            w, l = wins.get(wire), losses.get(wire)
+            if not w:
+                table[wire] = float("inf")
+            elif not l:
+                table[wire] = 1.0
+            else:
+                table[wire] = math.sqrt(max(l) * min(w))
+        return table
+    except Exception:
+        return dict(_FALLBACK_CROSSOVER)
+
+
+@functools.lru_cache(maxsize=1024)
+def _auto_bucketed(layout: bucket.BucketLayout, codec_name: str) -> bool:
+    """``path="auto"`` decision for one (layout, stateless codec): bucket
+    exactly when this tree's per-leaf pad amplification clears the measured
+    crossover for the wire."""
+    per_leaf = sum(_tile_padded(s.padded_size) for s in layout.slots)
+    ratio = per_leaf / max(_tile_padded(layout.padded_elems), 1)
+    return ratio >= _crossover_table().get(codec_name, float("inf"))
+
+
+# ---------------------------------------------------------------------------
 # The engine.
 # ---------------------------------------------------------------------------
 
@@ -205,33 +338,229 @@ def _leaf_seed(base_seed: jax.Array, leaf_idx: int) -> jax.Array:
         (leaf_idx * 0x9E3779B1) & 0xFFFFFFFF)
 
 
+@dataclasses.dataclass
+class RoundPlan:
+    """One gossip round, staged: per-chunk encode / permute / decode-reduce.
+
+    Built by :meth:`CommEngine.round_plan`.  The three phase methods are
+    separable and chunk-indexed so a caller (or :meth:`run`) can interleave
+    them; each is bit-exact per chunk against the barrier round's math on
+    the same window because
+
+    * chunk windows cover whole leaf slots (``BucketLayout.chunks``), so
+      per-tensor codec statistics (qsgd scales, onebit lo/hi levels) see
+      exactly the segments the whole-buffer round sees;
+    * encode kernels hash *global* element indices (``idx_base`` = the
+      chunk's buffer offset; qsgd additionally strides its worker axis by
+      the whole-buffer width), so every element draws the same rounding
+      uniform regardless of chunking;
+    * chunk offsets are values-per-byte aligned, so the chunk payloads are
+      byte-exact windows of the whole-buffer payload;
+    * the decode-reduce accumulation order per element is identical.
+
+    ``run()`` executes the software pipeline: at tick t it issues
+    encode(t), permute(t-1), decode_reduce(t-2) — so the permute of chunk
+    t-1 (the round's only cross-worker traffic) is in flight between the
+    codec work of its neighbors.  With ``chunks=1`` the skew degenerates to
+    the barrier round (encode, permute, reduce back-to-back) — the parity
+    reference ``tests/test_overlap.py`` pins.
+    """
+    engine: "CommEngine"
+    layout: bucket.BucketLayout
+    chunks: Tuple[bucket.BucketChunk, ...]
+    flat: jax.Array
+    backend: str
+    theta: Any = None
+    B: Any = None
+    seed: Optional[jax.Array] = None
+    residual: Optional[jax.Array] = None
+    step: Optional[jax.Array] = None
+
+    @property
+    def num_chunks(self) -> int:
+        return len(self.chunks)
+
+    def _win(self, arr: jax.Array, c: bucket.BucketChunk) -> jax.Array:
+        return jax.lax.slice_in_dim(arr, c.offset, c.offset + c.size, axis=1)
+
+    # -- phase 1: encode one chunk -----------------------------------------
+    def encode_chunk(self, i: int) -> Tuple[jax.Array, ...]:
+        """Encode chunk ``i`` of the staging buffer; returns the wire-specific
+        payload tuple (plus, for EF wires, the compensated value ``v`` that
+        the decode-reduce phase needs to close the residual)."""
+        c = self.chunks[i]
+        eng = self.engine
+        name = eng.codec.name
+        with obs_trace.chunk_phase("comm.encode", i, self.num_chunks):
+            if name == "full":
+                return (self._win(self.flat, c),)
+            if name == "moniqua":
+                return (kops.moniqua_encode_chunk(
+                    self.flat, c.offset, c.size, self.B, eng.codec.spec,
+                    self.seed, backend=self.backend),)
+            if name == "qsgd":
+                packed, scales = qsgd_encode_segmented(
+                    self._win(self.flat, c), eng.codec.spec, self.seed,
+                    c.segment_sizes, idx_base=c.offset,
+                    idx_stride=self.layout.padded_elems)
+                return (packed, scales)
+            # EF wires: compensate with the residual window before encoding
+            v = self._win(self.flat, c) + self._win(self.residual, c)
+            if name == "ef_qsgd":
+                packed, scales = ef_qsgd_encode_segmented(
+                    v, eng.codec.spec, self.seed, c.segment_sizes, c.offset)
+                return (packed, scales, v)
+            packed, lo, hi = onebit_encode_segmented(
+                v, self.seed, c.segment_sizes, c.offset,
+                eng.codec.spec.stochastic)
+            return (packed, lo, hi, v)
+
+    # -- phase 2: circulate one chunk's payload ----------------------------
+    def permute(self, i: int, enc: Tuple[jax.Array, ...]):
+        """Roll chunk ``i``'s payload along the worker axis — the round's
+        only cross-worker traffic (one collective-permute per offset on a
+        mesh).  The EF wires' local ``v`` never rides the wire."""
+        eng = self.engine
+        name = eng.codec.name
+        with obs_trace.chunk_phase("comm.permute", i, self.num_chunks):
+            if name == "full":
+                # the raw wire reduces over ALL offsets (self included, where
+                # _roll no-ops) — exactly gossip.mix's circulant
+                return tuple(gossip._roll(enc[0], o)
+                             for o in eng.topo.offsets)
+            offsets = eng.topo.neighbor_offsets()
+            if name == "moniqua":
+                return jnp.stack([gossip._roll(enc[0], o) for o in offsets])
+            n_payload = 2 if name in ("qsgd", "ef_qsgd") else 3
+            return tuple(tuple(gossip._roll(p, o) for p in enc[:n_payload])
+                         for o in offsets)
+
+    # -- phase 3: decode neighbors, accumulate the consensus step ----------
+    def decode_reduce(self, i: int, enc: Tuple[jax.Array, ...], nbrs):
+        """Decode chunk ``i``'s circulated payloads against the local window
+        and apply (*) on it.  Stateless wires return the mixed window;
+        stateful (EF) wires return ``(mixed window, new residual window)``.
+        """
+        c = self.chunks[i]
+        eng = self.engine
+        name = eng.codec.name
+        spec = getattr(eng.codec, "spec", None)
+        seg = c.segment_sizes
+        with obs_trace.chunk_phase("comm.decode_reduce", i, self.num_chunks):
+            if name == "full":
+                out = None
+                for w, r in zip(eng.topo.weights, nbrs):
+                    t = r * w
+                    out = t if out is None else out + t
+                return out.astype(enc[0].dtype)
+            weights = eng._neighbor_weights()
+            if name == "moniqua":
+                return kops.moniqua_decode_reduce_chunk(
+                    enc[0], nbrs, self.flat, c.offset, c.size, self.B,
+                    weights, spec, backend=self.backend)
+            if name == "qsgd":
+                win = self._win(self.flat, c)
+                packed, scales = enc
+                d_self = qsgd_decode_segmented(packed, scales, spec, seg)
+                acc = None
+                for (p_o, s_o), w in zip(nbrs, weights):
+                    t = (qsgd_decode_segmented(p_o, s_o, spec, seg)
+                         - d_self) * w
+                    acc = t if acc is None else acc + t
+                return (win.astype(jnp.float32) + acc).astype(win.dtype)
+            if name == "ef_qsgd":
+                win = self._win(self.flat, c)
+                packed, scales, v = enc
+                d_self = qsgd_decode_segmented(packed, scales, spec, seg)
+                acc = None
+                for (p_o, s_o), w in zip(nbrs, weights):
+                    t = (qsgd_decode_segmented(p_o, s_o, spec, seg)
+                         - d_self) * w
+                    acc = t if acc is None else acc + t
+                return win + acc, v - d_self
+            # onebit: fp32 gossip during warmup, sign codes + EF after; the
+            # warm/quantized switch is a jnp.where select, NOT lax.cond —
+            # cond bodies compile as separate XLA computations whose fusion
+            # choices depend on buffer width, breaking the chunked-vs-
+            # barrier bitwise contract at the ulp level.
+            win = self._win(self.flat, c)
+            rwin = self._win(self.residual, c)
+            packed, lo, hi, v = enc
+            warm_p = self.step < eng.codec.warmup
+            out_warm = gossip.mix(win, eng.topo)
+            d_self = onebit_decode_segmented(packed, lo, hi, seg)
+            acc = None
+            for (p_o, lo_o, hi_o), w in zip(nbrs, weights):
+                t = (onebit_decode_segmented(p_o, lo_o, hi_o, seg)
+                     - d_self) * w
+                acc = t if acc is None else acc + t
+            return (jnp.where(warm_p, out_warm, win + acc),
+                    jnp.where(warm_p, rwin, v - d_self))
+
+    # -- the software pipeline ---------------------------------------------
+    def run(self):
+        """Execute the full round through the skewed pipeline.
+
+        Returns the mixed flat buffer (stateless wires) or
+        ``(mixed flat buffer, new flat residual)`` (stateful wires).  With
+        one chunk this is exactly the barrier round.
+        """
+        K = self.num_chunks
+        stateful = self.engine.stateful
+        enc: Dict[int, Any] = {}
+        nbr: Dict[int, Any] = {}
+        outs: list = [None] * K
+        ress: list = [None] * K
+        for t in range(K + 2):
+            if t < K:
+                enc[t] = self.encode_chunk(t)
+            if 0 <= t - 1 < K:
+                nbr[t - 1] = self.permute(t - 1, enc[t - 1])
+            if 0 <= t - 2 < K:
+                r = self.decode_reduce(t - 2, enc.pop(t - 2), nbr.pop(t - 2))
+                if stateful:
+                    outs[t - 2], ress[t - 2] = r
+                else:
+                    outs[t - 2] = r
+        out = outs[0] if K == 1 else jnp.concatenate(outs, axis=1)
+        if stateful:
+            res = ress[0] if K == 1 else jnp.concatenate(ress, axis=1)
+            return out, res
+        return out
+
+
 @dataclasses.dataclass(frozen=True)
 class CommEngine:
     """One gossip round, end-to-end: codec x topology x backend + accounting.
 
     Static (hashable) configuration only — per-round dynamics (``theta``, the
-    PRNG key, the ledger) are call arguments, so an engine can be constructed
-    freely inside a jitted step function.
+    PRNG key, the ledger, WireState) are call arguments, so an engine can be
+    constructed freely inside a jitted step function.
 
-    ``bucketed`` (default) flattens the whole stacked pytree into one
-    contiguous per-worker staging buffer (``comm/bucket.py``) so a round
-    costs **one** encode launch, **one** packed payload roll per offset,
-    and **one** fused decode-reduce — instead of that trio per leaf, each
-    with its own pad to the 256x1024 tile grid.  The per-leaf path stays
-    behind ``bucketed=False`` as the parity reference; both draw the same
-    stochastic-rounding uniforms per element (global counter indices), so
-    they are bit-exact against each other for the Moniqua wire.
+    ``path`` selects the gossip data path: ``"bucketed"`` stages the whole
+    stacked pytree in one flat buffer (one encode launch, one packed roll
+    per offset, one fused decode-reduce), ``"per_leaf"`` gossips leaf by
+    leaf (the parity reference), and ``"auto"`` (default) picks per
+    (layout, codec) from the measured crossover table (module docstring).
+    The legacy ``bucketed=`` boolean is accepted as a deprecated alias.
+    Both paths draw the same stochastic-rounding uniforms per element
+    (global counter indices), so they are bit-exact against each other for
+    the Moniqua wire.
 
-    ``telemetry`` (static, default off) makes ``mix`` additionally return a
-    round-health dict (``repro.obs.metrics``): consensus inf-distance and
-    theta headroom, the modulo alias sentinel, EF residual norm, warmup
-    indicator, payload bits/param.  Stateless wires then return
-    ``(X, health)``, stateful ones ``(X, state, health)``.  The telemetry
-    is purely observational — computed from the round's own flat buffer /
-    payload / state with pure jnp, feeding nothing back into the mix — so
-    the mixed output (and payload and WireState) is bit-exact with the
-    flag on or off, and the health values themselves are identical across
-    backends and gossip paths (always evaluated on the canonical flat
+    ``chunks`` sets the default chunk count for the staged round
+    (``round_plan``): the bucketed flat buffer is split into that many
+    slot-aligned windows and the phases software-pipelined.  ``chunks=1``
+    is the barrier round; any K is bit-exact against it.
+
+    ``telemetry`` (static, default off) attaches a round-health dict
+    (``repro.obs.metrics``) to the returned :class:`MixResult`: consensus
+    inf-distance and theta headroom, the modulo alias sentinel, EF residual
+    norm, warmup indicator, payload bits/param.  The telemetry is purely
+    observational — computed from the round's own flat buffer / payload /
+    state with pure jnp, feeding nothing back into the mix — so the mixed
+    output (and payload and WireState) is bit-exact with the flag on or
+    off, and the health values themselves are identical across backends,
+    gossip paths, and chunk counts (always evaluated on the canonical flat
     buffer with the jnp reference encode, which is bitwise equal to the
     Pallas and per-leaf payloads by the parity contracts).  When off, the
     flag is a Python-level branch: the telemetry graph is never traced,
@@ -240,16 +569,29 @@ class CommEngine:
     topo: Topology
     codec: Any = dataclasses.field(default_factory=MoniquaWire)
     backend: str = "auto"
-    bucketed: bool = True
+    path: str = "auto"
+    chunks: int = 1
     telemetry: bool = False
+    # deprecated alias for path= ("bucketed"/"per_leaf"); None = use path
+    bucketed: dataclasses.InitVar[Optional[bool]] = None
+
+    def __post_init__(self, bucketed: Optional[bool]) -> None:
+        if bucketed is not None:
+            object.__setattr__(self, "path",
+                               "bucketed" if bucketed else "per_leaf")
+        if self.path not in PATHS:
+            raise ValueError(f"unknown path {self.path!r}; one of {PATHS}")
+        if int(self.chunks) < 1:
+            raise ValueError(f"chunks must be >= 1, got {self.chunks}")
 
     # -- persistent per-worker codec state (WireState) ---------------------
     @property
     def stateful(self) -> bool:
         """True for wires carrying per-worker state (EF residuals) across
-        rounds; their ``mix`` takes a ``state`` carry and returns
-        ``(X, new_state)`` — thread it like ``theta``, checkpoint it like
-        params (``checkpoint/ckpt.py`` serializes it inside trainer state)."""
+        rounds; their ``mix`` takes a ``state`` carry and the returned
+        ``MixResult.state`` must be threaded into the next round — like
+        ``theta``, and checkpointed like params (``checkpoint/ckpt.py``
+        serializes it inside trainer state)."""
         return bool(getattr(self.codec, "stateful", False))
 
     def init_wire_state(self, X: PyTree) -> dict:
@@ -276,57 +618,103 @@ class CommEngine:
             return 0
         return self.layout(X).padded_elems * 4 + 4
 
+    # -- gossip path resolution --------------------------------------------
+    def resolved_path(self, X: PyTree) -> str:
+        """The concrete path (``"bucketed"``/``"per_leaf"``) this engine
+        takes for ``X``: the configured one, or — under ``"auto"`` — the
+        measured per-(layout, codec) crossover.  Stateful wires always
+        bucket (their canonical residual lives in the flat domain)."""
+        if self.path != "auto":
+            return self.path
+        if self.stateful:
+            return "bucketed"
+        layout = self.layout(X)
+        return ("bucketed" if _auto_bucketed(layout, self.codec.name)
+                else "per_leaf")
+
+    def _use_bucketed(self, X: PyTree) -> bool:
+        return self.resolved_path(X) == "bucketed"
+
+    # -- the staged round --------------------------------------------------
+    def round_plan(self, X: PyTree, theta=None,
+                   key: Optional[jax.Array] = None,
+                   state: Optional[dict] = None,
+                   chunks: Optional[int] = None) -> RoundPlan:
+        """Stage one gossip round on the flat bucket: returns a
+        :class:`RoundPlan` whose ``encode_chunk``/``permute``/
+        ``decode_reduce`` phases the caller can interleave (or just
+        ``run()``).  ``chunks`` overrides the engine default K.
+
+        The plan always works in the bucketed flat domain; a mixed-dtype
+        tree on the raw wire has no bucketed round (f32 staging would
+        change the mixing arithmetic) and raises here — ``mix`` handles
+        that case by falling back to the per-leaf circulant.
+        """
+        layout = self.layout(X)
+        if self.codec.name == "full" and not layout.uniform_dtype:
+            raise ValueError(
+                "no staged round for a mixed-dtype tree on the full wire "
+                "(f32 staging would change the mixing arithmetic); "
+                "use mix(), which falls back to the per-leaf circulant")
+        if self.stateful:
+            self._check_wire_state(state)
+        k = self.chunks if chunks is None else int(chunks)
+        backend = resolve_backend(self.backend)
+        flat = layout.flatten(X)
+        B = None
+        seed = None
+        residual = None
+        step = None
+        if self.codec.name != "full":
+            self._require_key(key)
+            seed = kops._key_to_seed(key)
+        if self.codec.name == "moniqua":
+            if theta is None:
+                raise ValueError("MoniquaWire needs the a-priori bound theta")
+            B = modulo.b_theta(theta, self.codec.spec.delta)
+        if self.stateful:
+            flat = flat.astype(jnp.float32)
+            residual, step = state["residual"], state["step"]
+        return RoundPlan(engine=self, layout=layout, chunks=layout.chunks(k),
+                         flat=flat, backend=backend, theta=theta, B=B,
+                         seed=seed, residual=residual, step=step)
+
     # -- the tentpole primitive --------------------------------------------
     def mix(self, X: PyTree, theta=None, key: Optional[jax.Array] = None,
             ledger: Optional[BytesLedger] = None,
-            state: Optional[dict] = None) -> PyTree:
+            state: Optional[dict] = None) -> MixResult:
         """One gossip round on stacked models (leaves ``[n, ...]``).
 
-        Returns ``X_{k+1/2}``; with the full-precision codec this is exactly
-        the circulant ``X W`` of ``gossip.mix``.  ``ledger`` (if given) is
+        Returns a :class:`MixResult`: ``.x`` is ``X_{k+1/2}`` (with the
+        full-precision codec exactly the circulant ``X W`` of
+        ``gossip.mix``), ``.state`` the post-round WireState (``{}`` for
+        stateless wires; stateful wires require the ``state`` carry from
+        :meth:`init_wire_state` and the caller must thread ``.state`` into
+        the next round), ``.health`` the round-health dict when the engine
+        has ``telemetry=True`` (else ``None``).  ``ledger`` (if given) is
         credited at trace time with payload-bytes * n_neighbors per round.
-
-        Stateful wires (``self.stateful``) additionally require the
-        ``state`` carry from :meth:`init_wire_state` and return
-        ``(X_{k+1/2}, new_state)`` — an explicit jit-safe carry, exactly
-        like ``theta``.
-
-        With ``telemetry=True`` a round-health dict rides along as the
-        final element of the return: ``(X, health)`` stateless,
-        ``(X, state, health)`` stateful (see the class docstring).
         """
         if self.stateful:
-            if not isinstance(state, dict) or "residual" not in state:
-                raise ValueError(
-                    f"{self.codec.name} wire is stateful: pass "
-                    "state=engine.init_wire_state(X) and thread the "
-                    "returned (X, state) carry across rounds")
-            offsets = self.topo.neighbor_offsets()
-            if not offsets or not jax.tree.leaves(X):
-                if self.telemetry:           # nothing on the wire
-                    from repro.obs import metrics as obs_metrics
-                    return X, state, obs_metrics.round_health_zero()
-                return X, state
-            if ledger is not None:
-                self._record(X, ledger)
-            Xm, new_state = self._mix_stateful(X, state, key)
-            if self.telemetry:
-                return Xm, new_state, self._round_health(X, theta, key,
-                                                         new_state)
-            return Xm, new_state
+            self._check_wire_state(state)
         offsets = self.topo.neighbor_offsets()
         if not offsets or not jax.tree.leaves(X):
             # single worker or empty pytree: nothing on the wire
-            if self.telemetry:
-                from repro.obs import metrics as obs_metrics
-                return X, obs_metrics.round_health_zero()
-            return X
+            return self._empty_round(X, state)
         if ledger is not None:
             self._record(X, ledger)
         if self.codec.name == "moniqua" and theta is None:
             raise ValueError("MoniquaWire needs the a-priori bound theta")
-        if self.bucketed:
-            Xm = self._mix_bucketed(X, theta, key)
+        if self.stateful:
+            Xm, new_state = self._mix_stateful(X, state, key)
+            health = (self._round_health(X, theta, key, new_state)
+                      if self.telemetry else None)
+            return MixResult(Xm, new_state, health)
+        layout = self.layout(X)
+        full_mixed_dtype = (self.codec.name == "full"
+                            and not layout.uniform_dtype)
+        if self._use_bucketed(X) and not full_mixed_dtype:
+            Xm = layout.unflatten(
+                self.round_plan(X, theta=theta, key=key).run())
         elif self.codec.name == "full":
             Xm = gossip.mix(X, self.topo)
         else:
@@ -338,7 +726,6 @@ class CommEngine:
                 # global counter indices: leaf i's elements hash
                 # (seed, layout.offset_i + e), the SAME pairs the bucketed
                 # one-shot encode hashes — the bucketed-vs-per-leaf parity
-                layout = self.layout(X)
                 out = [self._mix_leaf(l, theta, base_seed, backend,
                                       idx_base=layout.offsets[i])
                        for i, l in enumerate(leaves)]
@@ -347,9 +734,104 @@ class CommEngine:
                                       backend)
                        for i, l in enumerate(leaves)]
             Xm = jax.tree.unflatten(td, out)
-        if self.telemetry:
-            return Xm, self._round_health(X, theta, key, None)
-        return Xm
+        health = (self._round_health(X, theta, key, None)
+                  if self.telemetry else None)
+        return MixResult(Xm, {}, health)
+
+    def _empty_round(self, X: PyTree, state: Optional[dict]) -> MixResult:
+        """Degenerate round (single worker / empty pytree): same MixResult
+        shape as the main path, nothing on the wire."""
+        health = obs_metrics.round_health_zero() if self.telemetry else None
+        carry = state if (state is not None) else {}
+        return MixResult(X, carry, health)
+
+    def _check_wire_state(self, state: Optional[dict]) -> None:
+        if not isinstance(state, dict) or "residual" not in state:
+            raise ValueError(
+                f"{self.codec.name} wire is stateful: pass "
+                "state=engine.init_wire_state(X) and thread the returned "
+                "MixResult.state carry across rounds")
+
+    # -- step-level overlap: one-round-stale mixing ------------------------
+    def init_gossip_carry(self, X: PyTree) -> dict:
+        """Fresh carry for :meth:`mix_stale` (stateless Moniqua only).
+
+        Holds the payload of the *previous* round — the packed residue, the
+        reference buffer it was encoded from, the modulo base ``B`` it was
+        encoded under, and a validity flag (the first round has nothing to
+        decode).  Accepts abstract shapes (build under ``eval_shape``).
+        """
+        if self.stateful or self.codec.name != "moniqua":
+            raise ValueError(
+                "one-round-stale overlap needs the stateless moniqua wire "
+                f"(got {self.codec.name!r})")
+        layout = self.layout(X)
+        vpb = self.codec.spec.values_per_byte
+        return {"packed": jnp.zeros((layout.n_workers,
+                                     layout.padded_elems // vpb), jnp.uint8),
+                "ref": jnp.zeros((layout.n_workers, layout.padded_elems),
+                                 jnp.float32),
+                "B": jnp.zeros((), jnp.float32),
+                "valid": jnp.zeros((), jnp.bool_)}
+
+    def mix_stale(self, X: PyTree, carry: dict, theta=None,
+                  key: Optional[jax.Array] = None,
+                  ledger: Optional[BytesLedger] = None) -> MixResult:
+        """One-round-stale gossip: apply the PREVIOUS round's payloads to
+        this round's model, then encode the mixed result for the next round.
+
+        The returned ``MixResult.state`` is the new carry (thread it like
+        WireState).  Step k's model moves by the consensus delta computed
+        from round k-1's payloads — decoded against the *reference they
+        were encoded from*, under the *B they were encoded under* — so a
+        trainer can issue the next forward pass while the previous round's
+        decode-reduce is still in flight.  Delay-1 staleness is covered by
+        the asynchronous-decentralized-SGD analyses in PAPERS.md; the first
+        round (``valid`` unset) applies no delta.
+        """
+        if self.stateful or self.codec.name != "moniqua":
+            raise ValueError(
+                "mix_stale needs the stateless moniqua wire "
+                f"(got {self.codec.name!r})")
+        if not isinstance(carry, dict) or "packed" not in carry:
+            raise ValueError(
+                "pass carry=engine.init_gossip_carry(X) and thread the "
+                "returned MixResult.state across steps")
+        offsets = self.topo.neighbor_offsets()
+        if not offsets or not jax.tree.leaves(X):
+            return self._empty_round(X, carry)
+        if theta is None:
+            raise ValueError("MoniquaWire needs the a-priori bound theta")
+        if ledger is not None:
+            self._record(X, ledger)
+        backend = resolve_backend(self.backend)
+        self._require_key(key)
+        seed = kops._key_to_seed(key)
+        spec = self.codec.spec
+        layout = self.layout(X)
+        weights = self._neighbor_weights()
+        flat = layout.flatten(X).astype(jnp.float32)
+        # decode round k-1 against its own reference/B, apply the delta late
+        with obs_trace.named_phase("comm.decode_reduce"):
+            p_nbrs = jnp.stack([gossip._roll(carry["packed"], o)
+                                for o in offsets])
+            mixed_ref = kops.moniqua_decode_reduce_stacked(
+                carry["packed"], p_nbrs, carry["ref"], carry["B"], weights,
+                spec, backend=backend)
+            out = flat + jnp.where(carry["valid"],
+                                   mixed_ref - carry["ref"], 0.0)
+        # encode round k from the post-mix model, for consumption at k+1
+        B = modulo.b_theta(theta, spec.delta)
+        with obs_trace.named_phase("comm.encode"):
+            packed = kops.moniqua_encode_stacked(out, B, spec, seed,
+                                                 backend=backend)
+        new_carry = {"packed": packed, "ref": out,
+                     "B": jnp.asarray(B, jnp.float32),
+                     "valid": jnp.ones((), jnp.bool_)}
+        Xm = layout.unflatten(out.astype(layout.stage_dtype))
+        health = (self._round_health(X, theta, key, None)
+                  if self.telemetry else None)
+        return MixResult(Xm, new_carry, health)
 
     # -- round health (telemetry=True) -------------------------------------
     def _round_health(self, X: PyTree, theta, key: Optional[jax.Array],
@@ -357,15 +839,15 @@ class CommEngine:
         """Health counters for the round just mixed (``repro.obs.metrics``).
 
         Always evaluated on the canonical flat bucket buffer with pure-jnp
-        math, so the values are identical whichever backend or gossip path
-        produced the mix: the per-leaf payloads concatenate to the bucketed
-        one bitwise (PR-4 parity), and the jnp reference encode equals the
-        Pallas kernel bitwise (PR-1 parity).  On the bucketed moniqua path
-        the sentinel's re-encode duplicates the round's own encode
-        subgraph, which XLA CSEs away; elsewhere telemetry pays one extra
-        encode per round — acceptable for an opt-in diagnostics flag.
+        math, so the values are identical whichever backend, gossip path,
+        or chunk count produced the mix: the per-leaf/chunked payloads
+        concatenate to the bucketed one bitwise (PR-4 parity), and the jnp
+        reference encode equals the Pallas kernel bitwise (PR-1 parity).
+        On the bucketed moniqua path the sentinel's re-encode duplicates
+        the round's own encode subgraph, which XLA CSEs away; elsewhere
+        telemetry pays one extra encode per round — acceptable for an
+        opt-in diagnostics flag.
         """
-        from repro.obs import metrics as obs_metrics
         with jax.named_scope("comm.telemetry"):
             layout = self.layout(X)
             flat = layout.flatten(X)
@@ -396,88 +878,35 @@ class CommEngine:
                                  < self.codec.warmup).astype(jnp.float32)
             return h
 
-    # -- bucketed round: one encode, one roll per offset, one reduce -------
-    def _mix_bucketed(self, X: PyTree, theta,
-                      key: Optional[jax.Array]) -> PyTree:
-        offsets = self.topo.neighbor_offsets()
-        weights = self._neighbor_weights()
-        layout = self.layout(X)
-        if self.codec.name == "full" and not layout.uniform_dtype:
-            # mixed-dtype raw wire: f32 staging would change the mixing
-            # arithmetic (bf16 rolls accumulate in bf16 per leaf), breaking
-            # the `mix == gossip.mix` contract — and the full wire has no
-            # per-leaf encode/pad cost to amortize, so fall back per leaf
-            return gossip.mix(X, self.topo)
-        flat = layout.flatten(X)             # [n, D] staging buffer
-        if self.codec.name == "full":
-            return layout.unflatten(gossip.mix(flat, self.topo))
-        backend = resolve_backend(self.backend)
-        self._require_key(key)
-        seed = kops._key_to_seed(key)
-        spec = self.codec.spec
-        if self.codec.name == "moniqua":
-            B = modulo.b_theta(theta, spec.delta)
-            with jax.named_scope("comm.encode"):
-                packed = kops.moniqua_encode_stacked(flat, B, spec, seed,
-                                                     backend=backend)
-            with jax.named_scope("comm.permute"):
-                p_nbrs = jnp.stack([gossip._roll(packed, o)
-                                    for o in offsets])
-            with jax.named_scope("comm.decode_reduce"):
-                out = kops.moniqua_decode_reduce_stacked(packed, p_nbrs,
-                                                         flat, B, weights,
-                                                         spec,
-                                                         backend=backend)
-            return layout.unflatten(out)
-        # qsgd on the flat buffer, with per-tensor scale granularity kept
-        # (segment slices of the bucket); one decode per neighbor replaces
-        # the per-leaf qsgd_decode copies
-        seg = layout.segment_sizes
-        with jax.named_scope("comm.encode"):
-            packed, scales = qsgd_encode_segmented(flat, spec, seed, seg)
-        with jax.named_scope("comm.decode_reduce"):
-            xq_self = qsgd_decode_segmented(packed, scales, spec, seg)
-            acc = None
-            for o, w in zip(offsets, weights):
-                with jax.named_scope("comm.permute"):
-                    p_o = gossip._roll(packed, o)
-                    s_o = gossip._roll(scales, o)
-                xq_j = qsgd_decode_segmented(p_o, s_o, spec, seg)
-                t = (xq_j - xq_self) * w
-                acc = t if acc is None else acc + t
-            out = (flat.astype(jnp.float32) + acc).astype(flat.dtype)
-        return layout.unflatten(out)
-
     # -- stateful wires: error-feedback rounds on the flat bucket ----------
     def _mix_stateful(self, X: PyTree, state: dict,
                       key: Optional[jax.Array]
                       ) -> Tuple[PyTree, dict]:
         """One EF gossip round; returns ``(X_{k+1/2}, new WireState)``.
 
-        Both the bucketed and the per-leaf paths run the same per-segment
-        math on the canonical flat residual buffer: the bucketed round does
-        it in one segmented launch over ``[n, D]``, the per-leaf round one
-        leaf segment at a time (each leaf's payload rolled separately).
-        Same per-segment scales, same row-position rounding uniforms
-        (``idx_base`` = the segment's bucket offset), same accumulation
-        order — so outputs, payload bits, AND post-round state agree
-        bitwise (the ``tests/test_engine.py`` stateful contracts).
+        Both the bucketed (staged-plan) and the per-leaf paths run the same
+        per-segment math on the canonical flat residual buffer: the
+        bucketed round does it chunk by chunk over ``[n, D]`` (one
+        segmented launch per chunk), the per-leaf round one leaf segment at
+        a time (each leaf's payload rolled separately).  Same per-segment
+        scales, same row-position rounding uniforms (``idx_base`` = the
+        segment's bucket offset), same accumulation order — so outputs,
+        payload bits, AND post-round state agree bitwise (the
+        ``tests/test_engine.py`` stateful contracts).
 
         EF math runs in f32 on both backends (no Pallas kernel for the EF
         wires yet; ``resolve_backend`` still validates the name so the
         engine surface stays uniform).
         """
-        resolve_backend(self.backend)
-        self._require_key(key)
-        seed = kops._key_to_seed(key)
         layout = self.layout(X)
-        flat = layout.flatten(X).astype(jnp.float32)
-        residual, step = state["residual"], state["step"]
-        if self.bucketed:
-            out, res = self._ef_flat_round(flat, residual,
-                                           layout.segment_sizes, 0, seed,
-                                           step)
+        if self._use_bucketed(X):
+            out, res = self.round_plan(X, key=key, state=state).run()
         else:
+            resolve_backend(self.backend)
+            self._require_key(key)
+            seed = kops._key_to_seed(key)
+            flat = layout.flatten(X).astype(jnp.float32)
+            residual, step = state["residual"], state["step"]
             out = jnp.zeros_like(flat)
             res = jnp.zeros_like(residual)
             for s in layout.slots:
@@ -489,16 +918,19 @@ class CommEngine:
                                              s.offset, seed, step)
                 out = jax.lax.dynamic_update_slice(out, oi, (0, s.offset))
                 res = jax.lax.dynamic_update_slice(res, rn, (0, s.offset))
-        new_state = {"residual": res, "step": step + jnp.int32(1)}
+        new_state = {"residual": res,
+                     "step": state["step"] + jnp.int32(1)}
         return layout.unflatten(out.astype(layout.stage_dtype)), new_state
 
     def _ef_flat_round(self, v_base: jax.Array, residual: jax.Array,
                        segments: Tuple[int, ...], idx_base: int,
                        seed: jax.Array, step: jax.Array
                        ) -> Tuple[jax.Array, jax.Array]:
-        """EF round on one flat f32 buffer slice: encode ``v = x + r``,
-        gossip the codes, mix ``x + sum w_o (decode_j - decode_self)``,
-        keep ``r' = v - decode_self``."""
+        """EF round on one flat f32 buffer slice (the per-leaf path): encode
+        ``v = x + r``, gossip the codes, mix
+        ``x + sum w_o (decode_j - decode_self)``, keep
+        ``r' = v - decode_self``.  The bucketed path runs the identical
+        math through ``RoundPlan`` phases."""
         offsets = self.topo.neighbor_offsets()
         weights = self._neighbor_weights()
         spec = self.codec.spec
@@ -623,8 +1055,7 @@ class CommEngine:
     def pair_average(self, xi: jax.Array, xj: jax.Array, theta=None,
                      key: Optional[jax.Array] = None,
                      state_i: Optional[dict] = None,
-                     state_j: Optional[dict] = None
-                     ) -> Tuple[jax.Array, ...]:
+                     state_j: Optional[dict] = None) -> PairResult:
         """One gossip on edge (i, j) with the pair-averaging ``W_k``.
 
         Quantized codecs exchange payloads and decode against each endpoint's
@@ -632,15 +1063,16 @@ class CommEngine:
         same seed (shared randomness).  Simulator-scale API: always pure-jnp
         (AD-PSGD runs under ``lax.scan`` on host devices).
 
-        Stateful wires additionally require per-endpoint ``state_i`` /
-        ``state_j`` carries from :meth:`init_edge_state` and return a
-        4-tuple ``(xi', xj', state_i', state_j')``.
+        Returns a :class:`PairResult`; stateful wires additionally require
+        per-endpoint ``state_i`` / ``state_j`` carries from
+        :meth:`init_edge_state` and fill ``.state_i`` / ``.state_j`` with
+        the post-exchange carries (``{}`` for stateless wires).
         """
         if self.stateful:
             return self._pair_average_stateful(xi, xj, key, state_i, state_j)
         if self.codec.name == "full":
             avg = 0.5 * (xi + xj)
-            return avg, avg
+            return PairResult(avg, avg)
         self._require_key(key)
         seed = kops._key_to_seed(key)
         if self.codec.name == "moniqua":
@@ -657,20 +1089,19 @@ class CommEngine:
             xi_at_j = modulo.recover(val(pi), xj, B)
             xi_self = modulo.local_bias(val(pi), xi, B)
             xj_self = modulo.local_bias(val(pj), xj, B)
-            return (xi + 0.5 * (xj_at_i - xi_self),
-                    xj + 0.5 * (xi_at_j - xj_self))
+            return PairResult(xi + 0.5 * (xj_at_i - xi_self),
+                              xj + 0.5 * (xi_at_j - xj_self))
         spec = self.codec.spec
         pi, si = qsgd_encode(xi, spec, seed, worker_axis=False)
         pj, sj = qsgd_encode(xj, spec, seed, worker_axis=False)
         qi = qsgd_decode(pi, si, spec, xi.shape[-1])
         qj = qsgd_decode(pj, sj, spec, xj.shape[-1])
-        return xi + 0.5 * (qj - qi), xj + 0.5 * (qi - qj)
+        return PairResult(xi + 0.5 * (qj - qi), xj + 0.5 * (qi - qj))
 
     def _pair_average_stateful(self, xi: jax.Array, xj: jax.Array,
                                key: Optional[jax.Array],
                                state_i: Optional[dict],
-                               state_j: Optional[dict]
-                               ) -> Tuple[jax.Array, jax.Array, dict, dict]:
+                               state_j: Optional[dict]) -> PairResult:
         """EF edge exchange: each endpoint compensates with its own residual,
         ships codes of ``x + r``, and keeps ``r' = x + r - decode(sent)``."""
         for s in (state_i, state_j):
@@ -678,7 +1109,7 @@ class CommEngine:
                 raise ValueError(
                     f"{self.codec.name} wire is stateful: pass state_i/"
                     "state_j=engine.init_edge_state(x) and thread the "
-                    "returned (xi, xj, state_i, state_j) across edges")
+                    "returned PairResult.state_i/.state_j across edges")
         self._require_key(key)
         seed = kops._key_to_seed(key)
         spec = self.codec.spec
@@ -722,9 +1153,10 @@ class CommEngine:
             oj = jnp.where(warm_p, avg, fj + 0.5 * (di - dj))
             ri = jnp.where(warm_p, state_i["residual"][None, :], vi - di)
             rj = jnp.where(warm_p, state_j["residual"][None, :], vj - dj)
-        return (unflat(oi, xi), unflat(oj, xj),
-                {"residual": ri[0], "step": state_i["step"] + jnp.int32(1)},
-                {"residual": rj[0], "step": state_j["step"] + jnp.int32(1)})
+        return PairResult(
+            unflat(oi, xi), unflat(oj, xj),
+            {"residual": ri[0], "step": state_i["step"] + jnp.int32(1)},
+            {"residual": rj[0], "step": state_j["step"] + jnp.int32(1)})
 
     def pair_health(self, xi: jax.Array, xj: jax.Array, theta=None,
                     key: Optional[jax.Array] = None) -> dict:
@@ -736,7 +1168,6 @@ class CommEngine:
         re-encoded under the exchange seed — bit-identical to what
         ``pair_average`` ships.  Call on the *pre-exchange* endpoints.
         """
-        from repro.obs import metrics as obs_metrics
         with jax.named_scope("comm.telemetry"):
             spec = (self.codec.spec
                     if self.codec.name == "moniqua" else None)
@@ -770,7 +1201,8 @@ class CommEngine:
         4-byte scale per tensor, so its bytes match the per-leaf sum too.
         A mixed-dtype tree on the ``full`` wire mixes per leaf (f32
         staging would change the arithmetic), so its bytes are the
-        per-leaf sum as well.
+        per-leaf sum as well.  Because the paths agree byte for byte,
+        ``path="auto"`` resolution never changes this number.
         """
         if not jax.tree.leaves(X):
             return 0
@@ -786,7 +1218,7 @@ class CommEngine:
             nbytes += (4 if self.codec.name == "ef_qsgd"
                        else 8) * layout.num_leaves
             return nbytes
-        if self.bucketed:
+        if self._use_bucketed(X):
             layout = self.layout(X)
             if self.codec.name == "full":
                 if not layout.uniform_dtype:   # per-leaf fallback path

@@ -57,10 +57,9 @@ def _pair_average(X: jax.Array, i: jax.Array, j: jax.Array,
     other and decodes against its own model (CommEngine.pair_average,
     Algorithm 3 lines 4-7; shared randomness via one key for both encodes).
     """
-    new_i, new_j = cfg.engine().pair_average(X[i], X[j], theta=cfg.theta,
-                                             key=key)
-    X = X.at[i].set(new_i)
-    X = X.at[j].set(new_j)
+    res = cfg.engine().pair_average(X[i], X[j], theta=cfg.theta, key=key)
+    X = X.at[i].set(res.xi)
+    X = X.at[j].set(res.xj)
     return X
 
 

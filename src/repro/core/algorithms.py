@@ -67,24 +67,27 @@ class AlgoHyper:
     naive_delta: float = 0.05     # absolute lattice pitch for the naive baseline
     wire: str = "moniqua"         # wire codec for quantized gossip (engine())
     backend: str = "auto"         # comm backend: jnp | pallas | auto
-    bucketed: bool = True         # flat-buffer gossip (comm/bucket.py)
+    path: str = "auto"            # gossip path: bucketed | per_leaf | auto
+    chunks: int = 1               # staged-round chunk count (1 = barrier)
+    overlap: str = "none"         # step-level overlap: none | stale (Moniqua)
     warmup: int = 16              # onebit wire: fp32 rounds before 1-bit+EF
     telemetry: bool = False       # round-health observability (repro.obs)
+    bucketed: Optional[bool] = None   # deprecated alias for path=
 
     def engine(self) -> CommEngine:
         return CommEngine(self.topo,
                           make_wire(self.wire, self.codec.spec,
                                     warmup=self.warmup),
-                          self.backend, bucketed=self.bucketed,
-                          telemetry=self.telemetry)
+                          self.backend, path=self.path, chunks=self.chunks,
+                          telemetry=self.telemetry, bucketed=self.bucketed)
 
     def exact_engine(self, telemetry: bool = False) -> CommEngine:
         """Full-precision engine.  ``telemetry`` is opt-in per call site:
         the instrumented baselines (DPSGD, D2) pass ``self.telemetry``;
-        internal replica/estimator mixing (Choco, DCD, ...) keeps the
-        plain single-value return."""
+        internal replica/estimator mixing (Choco, DCD, ...) leaves it off."""
         return CommEngine(self.topo, FullPrecisionWire(), self.backend,
-                          bucketed=self.bucketed, telemetry=telemetry)
+                          path=self.path, chunks=self.chunks,
+                          telemetry=telemetry, bucketed=self.bucketed)
 
 
 # ---------------------------------------------------------------------------
@@ -201,15 +204,14 @@ class DPSGD(Algorithm):
 
     def step(self, X, extra, g, alpha, k, key, hp):
         eng = hp.exact_engine(telemetry=hp.telemetry)
+        # theta rides along as a pure diagnostic: "what bound would a
+        # Moniqua wire need here" — the full wire itself ignores it
+        res = eng.mix(X, theta=hp.theta)
         if hp.telemetry:
-            # theta rides along as a pure diagnostic: "what bound would a
-            # Moniqua wire need here" — the full wire itself ignores it
-            Xm, h = eng.mix(X, theta=hp.theta)
             extra = dict(extra)
             extra["health"] = obs_metrics.accumulate_health(
-                extra["health"], h)
-            return _sgd(Xm, g, alpha), extra
-        return _sgd(eng.mix(X), g, alpha), extra
+                extra["health"], res.health)
+        return _sgd(res.x, g, alpha), extra
 
     def bytes_per_step(self, X, hp):
         return hp.exact_engine().bytes_per_round(X)
@@ -250,37 +252,43 @@ class Moniqua(Algorithm):
     warmup counter) lives under ``extra["wire"]`` and is threaded through
     the engine's ``mix`` carry — which is exactly what puts EF's Θ(nd)
     buffers on the Table 1/2 memory axis while Moniqua's own wire stays at
-    zero (``extra_memory_bytes``)."""
+    zero (``extra_memory_bytes``).
+
+    ``hp.overlap == "stale"`` (stateless Moniqua wire only) switches the
+    round to the engine's one-round-stale ``mix_stale``: step k applies
+    the consensus delta decoded from round k-1's payloads, and the gossip
+    carry (previous packed residue + its reference/B) lives under
+    ``extra["gossip"]`` — the step-level overlap that lets the decode
+    hide behind the next forward pass."""
     name = "moniqua"
     quantized = True
 
     def init(self, X, hp):
         eng = hp.engine()
-        extra = {"wire": eng.init_wire_state(X)} if eng.stateful else {}
+        extra = {}
+        if eng.stateful:
+            extra["wire"] = eng.init_wire_state(X)
+        elif hp.overlap == "stale":
+            extra["gossip"] = eng.init_gossip_carry(X)
         if hp.telemetry:
             extra["health"] = obs_metrics.init_health()
         return extra
 
     def step(self, X, extra, g, alpha, k, key, hp):
         eng = hp.engine()
+        new_extra = dict(extra)
         if eng.stateful:
-            if hp.telemetry:
-                Xm, ws, h = eng.mix(X, theta=hp.theta, key=key,
-                                    state=extra["wire"])
-                return _sgd(Xm, g, alpha), {
-                    "wire": ws,
-                    "health": obs_metrics.accumulate_health(
-                        extra["health"], h)}
-            Xm, ws = eng.mix(X, theta=hp.theta, key=key,
-                             state=extra["wire"])
-            return _sgd(Xm, g, alpha), {"wire": ws}
+            res = eng.mix(X, theta=hp.theta, key=key, state=extra["wire"])
+            new_extra["wire"] = res.state
+        elif hp.overlap == "stale":
+            res = eng.mix_stale(X, extra["gossip"], theta=hp.theta, key=key)
+            new_extra["gossip"] = res.state
+        else:
+            res = eng.mix(X, theta=hp.theta, key=key)
         if hp.telemetry:
-            Xm, h = eng.mix(X, theta=hp.theta, key=key)
-            extra = {"health": obs_metrics.accumulate_health(
-                extra["health"], h)}
-            return _sgd(Xm, g, alpha), extra
-        Xm = eng.mix(X, theta=hp.theta, key=key)
-        return _sgd(Xm, g, alpha), extra
+            new_extra["health"] = obs_metrics.accumulate_health(
+                extra["health"], res.health)
+        return _sgd(res.x, g, alpha), new_extra
 
     def bytes_per_step(self, X, hp):
         return hp.engine().bytes_per_round(X)
@@ -305,7 +313,7 @@ class ChocoSGD(Algorithm):
         q = _nq_tree(jax.tree.map(lambda a, b: a - b, Xh, x_hat),
                      hp.codec.spec.bits, key)
         x_hat = jax.tree.map(lambda a, b: a + b, x_hat, q)
-        mixed_hat = hp.exact_engine().mix(x_hat)
+        mixed_hat = hp.exact_engine().mix(x_hat).x
         Xn = jax.tree.map(
             lambda x, mh, h: (x + hp.gamma * (mh - h)).astype(x.dtype),
             Xh, mixed_hat, x_hat)
@@ -334,7 +342,7 @@ class DeepSqueeze(Algorithm):
         v = jax.tree.map(lambda a, b: a + b, Xh, e)
         c = _nq_tree(v, hp.codec.spec.bits, key)
         e = jax.tree.map(lambda a, b: a - b, v, c)
-        mixed_c = hp.exact_engine().mix(c)
+        mixed_c = hp.exact_engine().mix(c).x
         Xn = jax.tree.map(
             lambda x, mc, ci: (x + hp.gamma * (mc - ci)).astype(x.dtype),
             Xh, mixed_c, c)
@@ -360,7 +368,7 @@ class DCD(Algorithm):
 
     def step(self, X, extra, g, alpha, k, key, hp):
         x_hat = extra["x_hat"]
-        mixed_hat = hp.exact_engine().mix(x_hat)
+        mixed_hat = hp.exact_engine().mix(x_hat).x
         Xn = _sgd(jax.tree.map(lambda x, mh, h: x + (mh - h), X, mixed_hat, x_hat),
                   g, alpha)
         z = jax.tree.map(lambda a, b: a - b, Xn, x_hat)
@@ -382,7 +390,7 @@ class ECD(DCD):
 
     def step(self, X, extra, g, alpha, k, key, hp):
         x_hat = extra["x_hat"]
-        mixed_hat = hp.exact_engine().mix(x_hat)
+        mixed_hat = hp.exact_engine().mix(x_hat).x
         Xn = _sgd(jax.tree.map(lambda x, mh, h: x + (mh - h), X, mixed_hat, x_hat),
                   g, alpha)
         z = jax.tree.map(lambda a, b: 2.0 * a - b, Xn, x_hat)  # extrapolation
@@ -414,19 +422,15 @@ class D2(Algorithm):
     def step(self, X, extra, g, alpha, k, key, hp):
         Xh = self._half_step(X, extra, g, alpha)
         eng = hp.exact_engine(telemetry=hp.telemetry)
-        h = None
-        if hp.telemetry:
-            Xm, h = eng.mix(Xh, theta=hp.theta)
-        else:
-            Xm = eng.mix(Xh)
-        Xn = jax.tree.map(lambda a, x: a.astype(x.dtype), Xm, X)
+        res = eng.mix(Xh, theta=hp.theta)
+        Xn = jax.tree.map(lambda a, x: a.astype(x.dtype), res.x, X)
         new_extra = {"x_prev": jax.tree.map(lambda x: x.astype(jnp.float32),
                                             X),
                      "g_prev": g,
                      "alpha_prev": jnp.asarray(alpha, jnp.float32)}
-        if h is not None:
+        if hp.telemetry:
             new_extra["health"] = obs_metrics.accumulate_health(
-                extra["health"], h)
+                extra["health"], res.health)
         return Xn, new_extra
 
     def bytes_per_step(self, X, hp):
@@ -454,28 +458,18 @@ class MoniquaD2(D2):
     def step(self, X, extra, g, alpha, k, key, hp):
         Xh = self._half_step(X, extra, g, alpha)
         eng = hp.engine()
-        ws = h = None
-        if eng.stateful:
-            if hp.telemetry:
-                Xn, ws, h = eng.mix(Xh, theta=hp.theta, key=key,
-                                    state=extra["wire"])
-            else:
-                Xn, ws = eng.mix(Xh, theta=hp.theta, key=key,
-                                 state=extra["wire"])
-        elif hp.telemetry:
-            Xn, h = eng.mix(Xh, theta=hp.theta, key=key)
-        else:
-            Xn = eng.mix(Xh, theta=hp.theta, key=key)
-        Xn = jax.tree.map(lambda a, x: a.astype(x.dtype), Xn, X)
+        res = eng.mix(Xh, theta=hp.theta, key=key,
+                      state=extra["wire"] if eng.stateful else None)
+        Xn = jax.tree.map(lambda a, x: a.astype(x.dtype), res.x, X)
         new_extra = {"x_prev": jax.tree.map(lambda x: x.astype(jnp.float32),
                                             X),
                      "g_prev": g,
                      "alpha_prev": jnp.asarray(alpha, jnp.float32)}
-        if ws is not None:
-            new_extra["wire"] = ws
-        if h is not None:
+        if eng.stateful:
+            new_extra["wire"] = res.state
+        if hp.telemetry:
             new_extra["health"] = obs_metrics.accumulate_health(
-                extra["health"], h)
+                extra["health"], res.health)
         return Xn, new_extra
 
     def bytes_per_step(self, X, hp):

@@ -243,7 +243,9 @@ def _segment_scale_map(scales: jax.Array, segments) -> jax.Array:
 
 def qsgd_encode_segmented(x: jax.Array, spec: QuantSpec,
                           seed: Optional[jax.Array],
-                          segments: tuple[int, ...]
+                          segments: tuple[int, ...],
+                          idx_base: int = 0,
+                          idx_stride: Optional[int] = None
                           ) -> tuple[jax.Array, jax.Array]:
     """QSGD on a flat ``[n, D]`` bucket with one scale per *segment*.
 
@@ -255,6 +257,15 @@ def qsgd_encode_segmented(x: jax.Array, spec: QuantSpec,
     representable while the quantize/pack work stays one fused launch
     over the whole bucket.  Returns (packed codes ``[n, D*bits/8]``,
     scales ``[n, L]`` — both ride the wire).
+
+    The rounding-uniform counter for element ``(w, e)`` is
+    ``w * idx_stride + idx_base + e``.  With the defaults (``idx_base=0``,
+    ``idx_stride = x.shape[-1]``) that is exactly the row-major flat index
+    of the whole buffer — the historical bit stream.  A *chunked* encode
+    (``CommEngine.round_plan``) passes the chunk's buffer offset and the
+    FULL buffer width as the stride, so each element hashes the same
+    ``(seed, global index)`` pair it would in the one-shot encode and the
+    pipelined round stays bit-exact against the barrier round.
     """
     xf = x.astype(jnp.float32)
     off, parts = 0, []
@@ -268,7 +279,11 @@ def qsgd_encode_segmented(x: jax.Array, spec: QuantSpec,
     if spec.stochastic:
         if seed is None:
             raise ValueError("stochastic QSGD rounding needs a seed")
-        idx = jnp.arange(x.size, dtype=jnp.uint32).reshape(x.shape)
+        stride = x.shape[-1] if idx_stride is None else int(idx_stride)
+        idx = (jnp.arange(x.shape[0], dtype=jnp.uint32)[:, None]
+               * jnp.uint32(stride)
+               + jnp.arange(x.shape[-1], dtype=jnp.uint32)[None, :]
+               + jnp.uint32(idx_base))
         codes = jnp.floor(lat + _counter_uniform(jnp.asarray(seed, jnp.uint32),
                                                  idx))
     else:

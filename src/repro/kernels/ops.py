@@ -243,6 +243,41 @@ def moniqua_decode_reduce_stacked(p_self: jax.Array, p_nbrs: jax.Array,
                     in_axes=(0, 1, 0))(p_self, p_nbrs, y)
 
 
+# ---------------------------------------------------------------------------
+# Chunk-windowed launches: one pipeline stage of a staged gossip round.
+#
+# ``CommEngine.round_plan`` splits the flat [n, D] bucket into contiguous
+# chunks (``comm/bucket.py::BucketLayout.chunks``) and encodes/decodes one
+# window at a time so the chunk's collective-permute can overlap its
+# neighbors' codec work.  Correctness hinges on the counter index: the
+# window's elements must hash the SAME (seed, global index) pairs the
+# one-shot whole-buffer encode hashes, so ``idx_base`` is the window's
+# element offset in the buffer — that is the whole bit-exactness argument
+# (identical per-element op sequence on a slice, identical uniforms).
+# ---------------------------------------------------------------------------
+
+def moniqua_encode_chunk(flat: jax.Array, offset: int, size: int, B,
+                         spec: QuantSpec, seed: jax.Array, *,
+                         backend: str) -> jax.Array:
+    """Encode the window ``flat[:, offset:offset+size]`` of a stacked flat
+    buffer, with globally-indexed rounding uniforms (``idx_base=offset``)."""
+    win = jax.lax.slice_in_dim(flat, offset, offset + size, axis=1)
+    return moniqua_encode_stacked(win, B, spec, seed, backend=backend,
+                                  idx_base=offset)
+
+
+def moniqua_decode_reduce_chunk(p_self: jax.Array, p_nbrs: jax.Array,
+                                flat: jax.Array, offset: int, size: int, B,
+                                weights, spec: QuantSpec, *,
+                                backend: str) -> jax.Array:
+    """Fused decode-reduce of one chunk's payloads against the matching
+    window of the local flat buffer (decode draws no randomness, so only
+    the window slice matters — no idx_base needed)."""
+    win = jax.lax.slice_in_dim(flat, offset, offset + size, axis=1)
+    return moniqua_decode_reduce_stacked(p_self, p_nbrs, win, B, weights,
+                                         spec, backend=backend)
+
+
 # Reference-path conveniences used by MoniquaCodec(use_pallas=True)
 
 def moniqua_unpack_value(packed, B, spec: QuantSpec, last_dim: int):

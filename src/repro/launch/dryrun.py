@@ -91,7 +91,8 @@ class DryrunResult:
 def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                mesh=None, algo: str = "moniqua", bits: int = 8,
                wire: str = "moniqua", comm_backend: str = "auto",
-               bucketed: bool = True, telemetry: bool = False,
+               comm_path: str = "auto", chunks: int = 1,
+               bucketed: Optional[bool] = None, telemetry: bool = False,
                scenario: Optional[str] = None,
                verbose: bool = True, override: Optional[dict] = None,
                rec=None) -> DryrunResult:
@@ -133,7 +134,8 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                 if shape.kind == "train":
                     lowered = _lower_train(model, shape, mesh, ms, rules,
                                            n_workers, algo, bits, wire,
-                                           comm_backend, bucketed, telemetry)
+                                           comm_backend, comm_path, chunks,
+                                           bucketed, telemetry)
                 elif shape.kind == "prefill":
                     lowered = _lower_prefill(model, shape, mesh, ms, rules)
                 else:
@@ -153,7 +155,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         sim_pred: Dict[str, Any] = {}
         if scenario and shape.kind == "train":
             hp = _hyper(cfg, n_workers, algo, bits, wire, comm_backend,
-                        bucketed, telemetry)
+                        comm_path, chunks, bucketed, telemetry)
             with span("dryrun.sim"):
                 sim_pred = _sim_predict(scenario, model, hp, n_workers,
                                         roof)
@@ -211,12 +213,12 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 
 def _hyper(cfg, n_workers, algo, bits, wire="moniqua", comm_backend="auto",
-           bucketed=True, telemetry=False):
+           comm_path="auto", chunks=1, bucketed=None, telemetry=False):
     topo = ring(n_workers)
     spec = QuantSpec(bits=bits, stochastic=bits > 1)
     return AlgoHyper(topo=topo, codec=MoniquaCodec(spec), theta=2.0,
-                     wire=wire, backend=comm_backend, bucketed=bucketed,
-                     telemetry=telemetry)
+                     wire=wire, backend=comm_backend, path=comm_path,
+                     chunks=chunks, bucketed=bucketed, telemetry=telemetry)
 
 
 def _sim_predict(scenario_name: str, model, hp, n_workers: int, roof):
@@ -250,11 +252,11 @@ def _sim_predict(scenario_name: str, model, hp, n_workers: int, roof):
 
 
 def _lower_train(model, shape, mesh, ms, rules, n_workers, algo_name, bits,
-                 wire="moniqua", comm_backend="auto", bucketed=True,
-                 telemetry=False):
+                 wire="moniqua", comm_backend="auto", comm_path="auto",
+                 chunks=1, bucketed=None, telemetry=False):
     algo = get_algorithm(algo_name)
     hp = _hyper(model.cfg, n_workers, algo_name, bits, wire, comm_backend,
-                bucketed, telemetry)
+                comm_path, chunks, bucketed, telemetry)
     tcfg = TS.TrainStepConfig(algo=algo_name, sgd=SGDConfig(), lr=0.1,
                               theta=ThetaSchedule(mode="constant", value=2.0))
     step = TS.make_train_step(model, hp, tcfg)
@@ -315,9 +317,15 @@ def main(argv=None) -> int:
     ap.add_argument("--comm-backend", default="auto",
                     choices=["auto", "jnp", "pallas"],
                     help="CommEngine backend")
+    ap.add_argument("--comm-path", default="auto",
+                    choices=["bucketed", "per_leaf", "auto"],
+                    help="CommEngine gossip path: bucketed flat buffer, "
+                         "per-leaf mixing, or the memoized auto crossover")
+    ap.add_argument("--chunks", type=int, default=1,
+                    help="staged-round chunk count for the pipelined "
+                         "gossip round (1 = barrier round)")
     ap.add_argument("--per-leaf-comm", action="store_true",
-                    help="disable bucketed flat-buffer gossip (mix leaf "
-                         "by leaf, the CommEngine bucketed=False path)")
+                    help="deprecated alias for --comm-path per_leaf")
     ap.add_argument("--scenario", default=None,
                     help="repro.sim scenario name (incl. contended fabrics "
                          "like oversubscribed-tor / shared-uplink-ring and "
@@ -383,7 +391,10 @@ def main(argv=None) -> int:
                                      algo=args.algo, bits=args.bits,
                                      wire=args.wire,
                                      comm_backend=args.comm_backend,
-                                     bucketed=not args.per_leaf_comm,
+                                     comm_path=("per_leaf"
+                                                if args.per_leaf_comm
+                                                else args.comm_path),
+                                     chunks=args.chunks,
                                      telemetry=args.telemetry,
                                      scenario=args.scenario,
                                      override=override, rec=rec)

@@ -42,6 +42,24 @@ def named_phase(name: str):
     return jax.named_scope(name)
 
 
+def chunk_phase(phase: str, chunk: Optional[int] = None,
+                total: Optional[int] = None):
+    """Named scope for one phase of one *chunk* of a staged gossip round.
+
+    A chunk-pipelined round (``CommEngine.round_plan``) runs each phase K
+    times; labelling the scopes ``comm.encode/chunk03of08`` keeps the base
+    ``COMM_PHASES`` name as a prefix (existing phase-based tooling still
+    aggregates by prefix) while the profiler timeline shows the skewed
+    encode(i+1)/permute(i)/decode(i-1) ladder span by span.  A barrier
+    round (``chunk=None`` or a single chunk) keeps the plain phase label.
+    """
+    if chunk is None or (total or 0) <= 1:
+        return named_phase(phase)
+    suffix = (f"chunk{chunk:02d}of{total:02d}" if total is not None
+              else f"chunk{chunk:02d}")
+    return named_phase(f"{phase}/{suffix}")
+
+
 def trace_annotation(name: str):
     """``jax.profiler.TraceAnnotation`` when available (host-side; shows up
     in profiler timelines), otherwise a no-op context."""

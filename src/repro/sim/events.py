@@ -388,7 +388,8 @@ def replay_adpsgd(scenario, engine, x0, grad_fn, alpha: float,
             grads[i] = grad_fn(snap[i], i, kg)
         kp = jax.random.PRNGKey(
             sim_randint(scenario_seed, 2**31 - 1, STREAM_PAIR, idx))
-        X[i], X[j] = engine.pair_average(X[i], X[j], theta=theta, key=kp)
+        res = engine.pair_average(X[i], X[j], theta=theta, key=kp)
+        X[i], X[j] = res.xi, res.xj
 
     def on_update(i: int, step: int, stale: int) -> None:
         X[i] = X[i] - alpha * grads[i]

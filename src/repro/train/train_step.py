@@ -6,19 +6,22 @@ over the worker mesh axes.  Per-worker gradients are ``vmap(grad(loss))`` —
 XLA keeps them communication-free along the worker axis; the only cross-worker
 traffic is the algorithm's gossip, which every algorithm routes through
 ``repro.comm.engine.CommEngine`` (quantized collective-permutes for Moniqua;
-``AlgoHyper.wire`` / ``AlgoHyper.backend`` / ``AlgoHyper.bucketed`` select
-codec, backend, and flat-buffer bucketing, and the per-step wire bytes are
-reported in the step metrics).  With bucketing (the default) the gossip
-inside the jitted step flattens the whole param tree through a memoized
-``comm/bucket.py`` layout — the trainer warms that cache from the abstract
-state before jit, so tracing never rebuilds it.
+``AlgoHyper.wire`` / ``AlgoHyper.backend`` / ``AlgoHyper.path`` /
+``AlgoHyper.chunks`` select codec, backend, gossip path, and the staged
+round's chunk count, and the per-step wire bytes are reported in the step
+metrics).  On the bucketed path the gossip inside the jitted step flattens
+the whole param tree through a memoized ``comm/bucket.py`` layout — the
+trainer warms that cache from the abstract state before jit, so tracing
+never rebuilds it.
 
 Stateful wires (``ef_qsgd`` / ``onebit``) need no special-casing here: their
 per-worker ``WireState`` (EF residual + warmup counter) lives inside the
 algorithm's ``extra`` carry, so it flows through the jitted step, the
 ``extra_spec`` sharding resolution (residual rows shard on the worker axis,
 the counter replicates), and full-state checkpointing like any other
-algorithm buffer.
+algorithm buffer.  The same holds for ``AlgoHyper.overlap == "stale"``:
+the one-round-stale gossip carry (previous packed payload + reference)
+rides under ``extra["gossip"]``.
 
 ``state_pspecs`` / ``batch_pspecs`` resolve the logical-axis annotations into
 PartitionSpecs for jit shardings (trainer and launch/dryrun share them).

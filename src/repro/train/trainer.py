@@ -52,8 +52,11 @@ class TrainerConfig:
     wire: str = "moniqua"       # CommEngine wire codec (moniqua | qsgd |
                                 #   ef_qsgd | onebit | full)
     backend: str = "auto"       # CommEngine backend (jnp | pallas | auto)
-    bucketed: bool = True       # flat-buffer gossip (comm/bucket.py)
+    comm_path: str = "auto"     # gossip path: bucketed | per_leaf | auto
+    chunks: int = 1             # staged-round chunk count (1 = barrier)
+    overlap: str = "none"       # step-level overlap: none | stale (moniqua)
     warmup: int = 16            # onebit wire: fp32 rounds before 1-bit+EF
+    bucketed: Optional[bool] = None   # deprecated alias for comm_path=
     telemetry: bool = False     # round-health obs_* metrics (repro.obs);
                                 #   static flag — off costs nothing under jit
     log_jsonl: Optional[str] = None   # schema-versioned run log (repro.obs.
@@ -70,8 +73,9 @@ def build_hyper(tc: TrainerConfig) -> AlgoHyper:
     spec = QuantSpec(bits=tc.bits, stochastic=tc.bits > 1)
     return AlgoHyper(topo=topo, codec=MoniquaCodec(spec), theta=tc.theta,
                      gamma=tc.gamma, wire=tc.wire, backend=tc.backend,
-                     bucketed=tc.bucketed, warmup=tc.warmup,
-                     telemetry=tc.telemetry)
+                     path=tc.comm_path, chunks=tc.chunks, overlap=tc.overlap,
+                     warmup=tc.warmup, telemetry=tc.telemetry,
+                     bucketed=tc.bucketed)
 
 
 class Trainer:
@@ -92,13 +96,13 @@ class Trainer:
         self.pipeline = SyntheticLMPipeline(model, shape, tc.n_workers,
                                             seed=tc.seed)
         # warm the bucket-layout cache from the abstract state so the flat
-        # gossip buffer's static layout is built exactly once, outside jit;
-        # every traced round then hits the memoized BucketLayout
-        if tc.bucketed:
-            abstract = TS.abstract_state(model, self.algo, self.hp,
-                                         tc.n_workers)
-            self.hp.exact_engine().layout(abstract["params"])
-            self.hp.engine().layout(abstract["params"])
+        # gossip buffer's static layout (and the auto-path crossover) is
+        # built exactly once, outside jit; every traced round then hits the
+        # memoized BucketLayout
+        abstract = TS.abstract_state(model, self.algo, self.hp,
+                                     tc.n_workers)
+        self.hp.exact_engine().layout(abstract["params"])
+        self.hp.engine().layout(abstract["params"])
         self.step_fn = TS.make_train_step(model, self.hp, self.tcfg)
         self.mesh = mesh
         if mesh is not None:

@@ -76,7 +76,7 @@ def test_ef_qsgd_residual_is_wire_determined(bits, stochastic):
     layout = eng.layout(X)
     st = _seeded_state(eng, X)
     key = jax.random.PRNGKey(7)
-    _, st1 = eng.mix(X, key=key, state=st)
+    st1 = eng.mix(X, key=key, state=st).state
     # replay the wire from scratch: encode v = x + r, decode own payload
     v = layout.flatten(X).astype(jnp.float32) + st["residual"]
     spec = eng.codec.spec
@@ -99,7 +99,7 @@ def test_onebit_residual_is_wire_determined(stochastic):
     layout = eng.layout(X)
     st = _seeded_state(eng, X)
     key = jax.random.PRNGKey(9)
-    _, st1 = eng.mix(X, key=key, state=st)
+    st1 = eng.mix(X, key=key, state=st).state
     v = layout.flatten(X).astype(jnp.float32) + st["residual"]
     packed, lo, hi = onebit_encode_segmented(v, kops._key_to_seed(key),
                                              layout.segment_sizes, 0,
@@ -118,7 +118,8 @@ def test_onebit_warm_round_is_exact_gossip_and_keeps_residual():
     eng = _engine("onebit", warmup=16)
     X = _tree()
     st = _seeded_state(eng, X)
-    out, st1 = eng.mix(X, key=jax.random.PRNGKey(0), state=st)
+    res = eng.mix(X, key=jax.random.PRNGKey(0), state=st)
+    out, st1 = res.x, res.state
     ref = gossip.mix(X, ring(8))
     for k in X:
         np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(ref[k]))
@@ -133,7 +134,7 @@ def test_onebit_warm_round_is_exact_gossip_and_keeps_residual():
 
 def _iterate_residual(eng, X, rounds=100):
     st = eng.init_wire_state(X)
-    step = jax.jit(lambda s, k: eng.mix(X, key=k, state=s)[1])
+    step = jax.jit(lambda s, k: eng.mix(X, key=k, state=s).state)
     sups = []
     for k in range(rounds):
         st = step(st, jax.random.PRNGKey(1000 + k))
@@ -187,8 +188,10 @@ def test_onebit_warmup_switch_fires_at_warmup_and_replays_bitwise():
     for k in range(2 * W):
         key = jax.random.PRNGKey(500 + k)
         ref = gossip.mix(X1, ring(8))
-        X1, st1 = eng1.mix(X1, key=key, state=st1)
-        X2, st2 = eng2.mix(X2, key=key, state=st2)
+        r1 = eng1.mix(X1, key=key, state=st1)
+        r2 = eng2.mix(X2, key=key, state=st2)
+        X1, st1 = r1.x, r1.state
+        X2, st2 = r2.x, r2.state
         # two independent engines replay the schedule bit-identically
         for lk in X1:
             np.testing.assert_array_equal(np.asarray(X1[lk]),

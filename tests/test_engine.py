@@ -44,7 +44,7 @@ def _stacked(scale=0.3, n=8, d=300, seed=0):
 def test_full_precision_equals_gossip_mix(topo):
     X = {"w": _stacked(), "b": _stacked(d=17, seed=1)}
     eng = CommEngine(topo, FullPrecisionWire())
-    out = eng.mix(X)
+    out = eng.mix(X).x
     ref = gossip.mix(X, topo)
     for k in X:
         np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(ref[k]))
@@ -62,9 +62,9 @@ def test_moniqua_pallas_vs_jnp_bit_exact(bits, topo):
     X = _stacked()
     key = jax.random.PRNGKey(3)
     a = CommEngine(topo, MoniquaWire(spec), backend="jnp").mix(
-        X, theta=2.0, key=key)
+        X, theta=2.0, key=key).x
     b = CommEngine(topo, MoniquaWire(spec), backend="pallas").mix(
-        X, theta=2.0, key=key)
+        X, theta=2.0, key=key).x
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -74,9 +74,9 @@ def test_moniqua_parity_on_pytrees(bits):
     X = {"w": _stacked(), "b": _stacked(d=17, seed=7).reshape(8, 17)}
     key = jax.random.PRNGKey(1)
     a = CommEngine(ring(8), MoniquaWire(spec), backend="jnp").mix(
-        X, theta=2.0, key=key)
+        X, theta=2.0, key=key).x
     b = CommEngine(ring(8), MoniquaWire(spec), backend="pallas").mix(
-        X, theta=2.0, key=key)
+        X, theta=2.0, key=key).x
     for k in X:
         np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
 
@@ -88,8 +88,8 @@ def test_moniqua_parity_under_jit_close():
     key = jax.random.PRNGKey(3)
     ej = CommEngine(ring(8), MoniquaWire(spec), backend="jnp")
     b = CommEngine(ring(8), MoniquaWire(spec), backend="pallas").mix(
-        X, theta=2.0, key=key)
-    aj = jax.jit(lambda x, k: ej.mix(x, theta=2.0, key=k))(X, key)
+        X, theta=2.0, key=key).x
+    aj = jax.jit(lambda x, k: ej.mix(x, theta=2.0, key=k).x)(X, key)
     np.testing.assert_allclose(np.asarray(aj), np.asarray(b),
                                rtol=0, atol=1e-6)
 
@@ -108,7 +108,7 @@ def test_moniqua_engine_close_to_exact_mix(bits):
     X = base + jax.random.uniform(jax.random.PRNGKey(1), (8, 300),
                                   minval=-0.45, maxval=0.45) * theta
     out = CommEngine(topo, MoniquaWire(spec), backend="jnp").mix(
-        X, theta=theta, key=jax.random.PRNGKey(2))
+        X, theta=theta, key=jax.random.PRNGKey(2)).x
     exact = gossip.mix(X, topo)
     B = float(modulo.b_theta(theta, spec.delta))
     assert float(jnp.max(jnp.abs(out - exact))) <= 2.0 * spec.delta * B + 1e-4
@@ -118,7 +118,7 @@ def test_single_worker_is_identity():
     eng = CommEngine(ring(1), MoniquaWire(QuantSpec(bits=8)))
     X = jnp.ones((1, 16))
     np.testing.assert_array_equal(
-        np.asarray(eng.mix(X, theta=1.0, key=jax.random.PRNGKey(0))),
+        np.asarray(eng.mix(X, theta=1.0, key=jax.random.PRNGKey(0)).x),
         np.asarray(X))
 
 
@@ -188,9 +188,9 @@ def test_bucketed_matches_per_leaf_bit_exact(bits, backend):
     X = _mixed_tree()
     key = jax.random.PRNGKey(11)
     per_leaf = CommEngine(ring(8), MoniquaWire(spec), backend=backend,
-                          bucketed=False).mix(X, theta=2.0, key=key)
+                          bucketed=False).mix(X, theta=2.0, key=key).x
     bucketed = CommEngine(ring(8), MoniquaWire(spec), backend=backend,
-                          bucketed=True).mix(X, theta=2.0, key=key)
+                          bucketed=True).mix(X, theta=2.0, key=key).x
     for k in X:
         np.testing.assert_array_equal(np.asarray(per_leaf[k]),
                                       np.asarray(bucketed[k]))
@@ -223,7 +223,7 @@ def test_bucketed_stochastic_payload_bits_match_per_leaf(backend):
 
 def test_bucketed_full_precision_is_exact_mix():
     X = {"w": _stacked(), "b": _stacked(d=17, seed=1)}
-    out = CommEngine(ring(8), FullPrecisionWire(), bucketed=True).mix(X)
+    out = CommEngine(ring(8), FullPrecisionWire(), bucketed=True).mix(X).x
     ref = gossip.mix(X, ring(8))
     for k in X:
         np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(ref[k]))
@@ -235,7 +235,7 @@ def test_bucketed_full_precision_mixed_dtype_is_exact_mix():
     would accumulate bf16 rolls in f32 and drift from gossip.mix."""
     X = {"w": _stacked(), "c": _stacked(d=24, seed=5).astype(jnp.bfloat16)}
     eng = CommEngine(ring(8), FullPrecisionWire(), bucketed=True)
-    out = eng.mix(X)
+    out = eng.mix(X).x
     ref = gossip.mix(X, ring(8))
     for k in X:
         np.testing.assert_array_equal(np.asarray(out[k], np.float32),
@@ -249,7 +249,7 @@ def test_bucketed_full_precision_mixed_dtype_is_exact_mix():
 def test_bucketed_qsgd_close_to_exact():
     X = {"w": _stacked(scale=0.25), "b": _stacked(d=17, seed=1, scale=0.25)}
     out = CommEngine(ring(8), QSGDWire(QuantSpec(bits=8)), backend="jnp",
-                     bucketed=True).mix(X, key=jax.random.PRNGKey(2))
+                     bucketed=True).mix(X, key=jax.random.PRNGKey(2)).x
     ref = gossip.mix(X, ring(8))
     mx = max(float(jnp.max(jnp.abs(X[k]))) for k in X)
     tol = 2.0 * mx * (2.0 / 256.0) + 1e-4
@@ -263,8 +263,8 @@ def test_bucketed_mix_under_jit():
                      bucketed=True)
     X = _mixed_tree()
     key = jax.random.PRNGKey(0)
-    eager = eng.mix(X, theta=2.0, key=key)
-    jitted = jax.jit(lambda x, k: eng.mix(x, theta=2.0, key=k))(X, key)
+    eager = eng.mix(X, theta=2.0, key=key).x
+    jitted = jax.jit(lambda x, k: eng.mix(x, theta=2.0, key=k).x)(X, key)
     for k in X:
         np.testing.assert_allclose(
             np.asarray(eager[k], np.float32),
@@ -306,7 +306,7 @@ def test_bucketed_qsgd_keeps_per_tensor_scales():
          "b": jax.random.normal(k2, (8, 32)) * 0.01}
     eng = CommEngine(ring(8), QSGDWire(QuantSpec(bits=8)), backend="jnp",
                      bucketed=True)
-    out = eng.mix(X, key=jax.random.PRNGKey(3))
+    out = eng.mix(X, key=jax.random.PRNGKey(3)).x
     ref = gossip.mix(X, ring(8))
     # error on the small leaf is bounded by ITS scale, not the big one's
     err_b = float(jnp.max(jnp.abs(out["b"] - ref["b"])))
@@ -339,8 +339,8 @@ def test_deterministic_spec_key_none_is_explicit_constant():
     for bucketed in (False, True):
         eng = CommEngine(ring(8), MoniquaWire(spec), backend="jnp",
                          bucketed=bucketed)
-        a = eng.mix(X, theta=2.0, key=None)
-        b = eng.mix(X, theta=2.0, key=jax.random.PRNGKey(123))
+        a = eng.mix(X, theta=2.0, key=None).x
+        b = eng.mix(X, theta=2.0, key=jax.random.PRNGKey(123)).x
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -362,7 +362,7 @@ def test_qsgd_mix_close_to_exact():
     topo = ring(8)
     X = _stacked(scale=0.25)
     out = CommEngine(topo, QSGDWire(QuantSpec(bits=8)), backend="jnp").mix(
-        X, key=jax.random.PRNGKey(2))
+        X, key=jax.random.PRNGKey(2)).x
     exact = gossip.mix(X, topo)
     # per-worker scale <= max|x|; 8-bit lattice pitch = 2*scale/256
     tol = 2.0 * float(jnp.max(jnp.abs(X))) * (2.0 / 256.0) + 1e-4
@@ -373,7 +373,7 @@ def test_qsgd_preserves_mean_roughly():
     topo = ring(8)
     X = _stacked(scale=0.25)
     out = CommEngine(topo, QSGDWire(QuantSpec(bits=8)), backend="jnp").mix(
-        X, key=jax.random.PRNGKey(4))
+        X, key=jax.random.PRNGKey(4)).x
     drift = float(jnp.max(jnp.abs(out.mean(0) - X.mean(0))))
     assert drift <= 2.0 * float(jnp.max(jnp.abs(X))) * (2.0 / 256.0) + 1e-4
 
@@ -418,7 +418,8 @@ def test_qsgd_bytes_include_scale():
 def test_pair_average_full_is_exact_average():
     eng = CommEngine(ring(8), FullPrecisionWire())
     xi, xj = jnp.arange(4.0), jnp.arange(4.0) + 1.0
-    ni, nj = eng.pair_average(xi, xj)
+    res = eng.pair_average(xi, xj)
+    ni, nj = res.xi, res.xj
     np.testing.assert_allclose(np.asarray(ni), np.asarray(0.5 * (xi + xj)))
     np.testing.assert_allclose(np.asarray(ni), np.asarray(nj))
 
@@ -431,7 +432,8 @@ def test_pair_average_quantized_close(wire):
     xi = jax.random.normal(jax.random.PRNGKey(5), (64,)) * 0.2
     xj = xi + jax.random.uniform(jax.random.PRNGKey(6), (64,),
                                  minval=-0.4, maxval=0.4) * theta
-    ni, nj = eng.pair_average(xi, xj, theta=theta, key=jax.random.PRNGKey(7))
+    res = eng.pair_average(xi, xj, theta=theta, key=jax.random.PRNGKey(7))
+    ni, nj = res.xi, res.xj
     avg = 0.5 * (xi + xj)
     B = float(modulo.b_theta(theta, spec.delta))
     tol = (2.0 * spec.delta * B if wire == "moniqua"
@@ -487,8 +489,10 @@ def test_ef_bucketed_matches_per_leaf_bit_exact(wire, stochastic, backend):
     sa, sb = a.init_wire_state(Xa), b.init_wire_state(Xb)
     for k in range(4):
         key = jax.random.PRNGKey(90 + k)
-        Xa, sa = a.mix(Xa, key=key, state=sa)
-        Xb, sb = b.mix(Xb, key=key, state=sb)
+        ra = a.mix(Xa, key=key, state=sa)
+        rb = b.mix(Xb, key=key, state=sb)
+        Xa, sa = ra.x, ra.state
+        Xb, sb = rb.x, rb.state
         for lk in Xa:
             np.testing.assert_array_equal(
                 np.asarray(Xa[lk], np.float32),
@@ -596,8 +600,10 @@ def test_ef_mix_under_jit_close(wire, stochastic):
     X = _mixed_tree()
     st = eng.init_wire_state(X)
     key = jax.random.PRNGKey(4)
-    eo, es = eng.mix(X, key=key, state=st)
-    jo, js = jax.jit(lambda x, s, k: eng.mix(x, key=k, state=s))(X, st, key)
+    er = eng.mix(X, key=key, state=st)
+    jr = jax.jit(lambda x, s, k: eng.mix(x, key=k, state=s))(X, st, key)
+    eo, es = er.x, er.state
+    jo, js = jr.x, jr.state
     for k in X:
         np.testing.assert_allclose(np.asarray(eo[k], np.float32),
                                    np.asarray(jo[k], np.float32),
@@ -620,16 +626,18 @@ def test_ef_pair_average_stateful(wire):
     xj = xi + 0.3
     si, sj = eng.init_edge_state(xi), eng.init_edge_state(xj)
     gap0 = float(jnp.max(jnp.abs(xi - xj)))
-    ni, nj, si, sj = eng.pair_average(xi, xj, key=jax.random.PRNGKey(0),
-                                      state_i=si, state_j=sj)
+    res = eng.pair_average(xi, xj, key=jax.random.PRNGKey(0),
+                           state_i=si, state_j=sj)
+    ni, nj, si, sj = res.xi, res.xj, res.state_i, res.state_j
     avg = 0.5 * (xi + xj)
     if wire == "onebit":   # warm exchange: exactly the f32 average
         np.testing.assert_array_equal(np.asarray(ni), np.asarray(avg))
         np.testing.assert_array_equal(np.asarray(nj), np.asarray(avg))
     xi, xj = ni, nj
     for k in range(40):
-        xi, xj, si, sj = eng.pair_average(
+        r = eng.pair_average(
             xi, xj, key=jax.random.PRNGKey(10 + k), state_i=si, state_j=sj)
+        xi, xj, si, sj = r.xi, r.xj, r.state_i, r.state_j
     assert int(si["step"]) == int(sj["step"]) == 41
     assert float(jnp.max(jnp.abs(xi - xj))) < 0.1 * gap0
 

@@ -69,9 +69,9 @@ def test_stateless_mix_bit_exact_on_off(wire, bits, bucketed):
     X = _tree()
     key = jax.random.PRNGKey(3)
     kw = dict(theta=2.0, key=key) if wire != "full" else {}
-    off = _engine(wire, bits, bucketed=bucketed).mix(X, **kw)
-    on, health = _engine(wire, bits, bucketed=bucketed,
-                         telemetry=True).mix(X, **kw)
+    off = _engine(wire, bits, bucketed=bucketed).mix(X, **kw).x
+    r = _engine(wire, bits, bucketed=bucketed, telemetry=True).mix(X, **kw)
+    on, health = r.x, r.health
     for k in X:
         np.testing.assert_array_equal(np.asarray(off[k]), np.asarray(on[k]))
     assert set(health) == set(M.HEALTH_ROUND_KEYS)
@@ -89,8 +89,10 @@ def test_stateful_mix_bit_exact_on_off(wire, bucketed):
     sa, sb = a.init_wire_state(Xa), b.init_wire_state(Xb)
     for k in range(3):
         key = jax.random.PRNGKey(40 + k)
-        Xa, sa = a.mix(Xa, key=key, state=sa)
-        Xb, sb, health = b.mix(Xb, key=key, state=sb)
+        ra = a.mix(Xa, key=key, state=sa)
+        rb = b.mix(Xb, key=key, state=sb)
+        Xa, sa = ra.x, ra.state
+        Xb, sb, health = rb.x, rb.state, rb.health
         for lk in Xa:
             np.testing.assert_array_equal(np.asarray(Xa[lk]),
                                           np.asarray(Xb[lk]),
@@ -152,9 +154,9 @@ def test_health_invariant_across_paths_and_backends(bits):
     ref = None
     for backend in ("jnp", "pallas"):
         for bucketed in (True, False):
-            _, h = _engine("moniqua", bits, backend=backend,
-                           bucketed=bucketed, telemetry=True).mix(
-                               X, theta=2.0, key=key)
+            h = _engine("moniqua", bits, backend=backend,
+                        bucketed=bucketed, telemetry=True).mix(
+                            X, theta=2.0, key=key).health
             h = {k: np.asarray(v) for k, v in h.items()}
             if ref is None:
                 ref = h
@@ -173,8 +175,8 @@ def test_alias_zero_when_theta_bound_holds():
     zero for every width whose sentinel is live (delta < 1/4)."""
     X = _tree(scale=0.01)   # consensus_inf << theta - delta*B
     for bits in (4, 8):
-        _, h = _engine("moniqua", bits, telemetry=True).mix(
-            X, theta=2.0, key=jax.random.PRNGKey(0))
+        h = _engine("moniqua", bits, telemetry=True).mix(
+            X, theta=2.0, key=jax.random.PRNGKey(0)).health
         assert int(h["alias_count"]) == 0, bits
         assert float(h["headroom"]) < 0.5
 
@@ -185,8 +187,8 @@ def test_alias_pinned_to_zero_without_guard_band():
     gross violation — headroom is the live signal at these widths."""
     X = {"w": _stacked(scale=3.0, d=2048, seed=5)}
     for bits in (1, 2):
-        _, h = _engine("moniqua", bits, telemetry=True).mix(
-            X, theta=0.05, key=jax.random.PRNGKey(2))
+        h = _engine("moniqua", bits, telemetry=True).mix(
+            X, theta=0.05, key=jax.random.PRNGKey(2)).health
         assert int(h["alias_count"]) == 0, bits
         assert float(h["headroom"]) > 0.5   # ...but headroom screams
 
@@ -198,8 +200,8 @@ def test_alias_fires_when_theta_undersized(bits):
     per-element rate ~2*delta per neighbor (1/8 @4-bit, 1/128 @8-bit
     stochastic) — thousands of hits at 4 bits, dozens at 8, never zero."""
     X = {"w": _stacked(scale=3.0, d=4096, seed=5)}   # >> theta=0.05
-    _, h = _engine("moniqua", bits, telemetry=True).mix(
-        X, theta=0.05, key=jax.random.PRNGKey(2))
+    h = _engine("moniqua", bits, telemetry=True).mix(
+        X, theta=0.05, key=jax.random.PRNGKey(2)).health
     count = int(h["alias_count"])
     assert count > 0, f"undersized theta must trip the sentinel ({bits}b)"
     # calibration sanity: within a loose factor of the ~2*delta rate
@@ -456,8 +458,8 @@ if HAVE_HYPOTHESIS:
         the +-1-bounded rows under 0.8, and theta=1 leaves a 0.857
         guard-band threshold even at 4 bits."""
         x = jnp.tanh(_stacked(scale=1.0, d=128, seed=seed % 1000)) * scale
-        _, h = _engine("moniqua", bits, telemetry=True).mix(
-            {"w": x}, theta=1.0, key=jax.random.PRNGKey(seed % 65536))
+        h = _engine("moniqua", bits, telemetry=True).mix(
+            {"w": x}, theta=1.0, key=jax.random.PRNGKey(seed % 65536)).health
         assert float(h["consensus_inf"]) < 1.0
         assert int(h["alias_count"]) == 0
 else:

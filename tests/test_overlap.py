@@ -1,0 +1,301 @@
+"""Staged RoundPlan pipeline: chunked gossip == barrier round, bitwise.
+
+The tentpole contract of the chunk-pipelined round (comm/engine.py
+``RoundPlan``): splitting the flat bucket into K slot-aligned chunks and
+running encode(t) / permute(t-1) / decode-reduce(t-2) in the skewed
+software pipeline changes NOTHING observable —
+
+1. mixed outputs are bit-exact vs the barrier round (``chunks=1``) for
+   every wire, on both backend names;
+2. the concatenated per-chunk payload bytes ARE the whole-round payload
+   (global hash indices + segment-aligned chunk boundaries);
+3. the post-round ``WireState`` of the EF wires carries identically;
+4. the round-health telemetry is chunk-count invariant;
+5. ``BucketLayout.chunks(K)`` partitions are contiguous, slot-aligned,
+   and cover the padded buffer exactly;
+6. the one-round-stale trainer (``overlap="stale"``) is deterministic.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import bucket, gossip
+from repro.comm.engine import CommEngine, make_wire
+from repro.core.quantizers import QuantSpec
+from repro.core.topology import exponential, ring
+
+# (wire, bits): the full codec matrix the pipeline must preserve
+WIRES = [("full", 32), ("moniqua", 8), ("moniqua", 1), ("qsgd", 8),
+         ("ef_qsgd", 4), ("onebit", 1)]
+KS = [2, 5]
+
+
+def _stacked(scale=0.3, n=8, d=300, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, d)) * scale
+
+
+def _tree():
+    """Several leaves with unaligned last dims so K=5 splits mid-tree."""
+    return {
+        "w": _stacked(),                                   # (8, 300)
+        "b": _stacked(d=17, seed=7),                       # (8, 17)
+        "c": _stacked(d=21, seed=5).reshape(8, 3, 7),      # (8, 3, 7)
+        "d": _stacked(d=65, seed=9),                       # (8, 65)
+        "e": _stacked(d=129, seed=11),                     # (8, 129)
+    }
+
+
+def _engine(wire, bits, backend="jnp", chunks=1, telemetry=False,
+            topo=None):
+    spec = QuantSpec(bits=min(bits, 8), stochastic=1 < bits <= 8)
+    codec = (make_wire(wire, spec, warmup=2)
+             if wire in ("ef_qsgd", "onebit") else make_wire(wire, spec))
+    return CommEngine(topo or ring(8), codec, backend=backend,
+                      path="bucketed", chunks=chunks, telemetry=telemetry)
+
+
+def _mix_kw(wire, key):
+    if wire == "full":
+        return {}
+    if wire == "moniqua":
+        return dict(theta=2.0, key=key)
+    return dict(key=key)
+
+
+# ---------------------------------------------------------------------------
+# 1+3. pipelined mixed outputs and WireState == barrier, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K", KS)
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("wire,bits", WIRES,
+                         ids=[f"{w}{b}" for w, b in WIRES])
+def test_pipelined_matches_barrier_bit_exact(wire, bits, backend, K):
+    """3 iterated rounds (crossing the onebit warmup switch): outputs and
+    the carried WireState are bitwise identical whether the round runs as
+    one barrier chunk or K pipelined chunks."""
+    Xa = Xb = _tree()
+    a = _engine(wire, bits, backend, chunks=1)
+    b = _engine(wire, bits, backend, chunks=K)
+    sa = a.init_wire_state(Xa) if a.stateful else None
+    sb = sa
+    for k in range(3):
+        key = jax.random.PRNGKey(70 + k)
+        ra = a.mix(Xa, state=sa, **_mix_kw(wire, key))
+        rb = b.mix(Xb, state=sb, **_mix_kw(wire, key))
+        Xa, Xb = ra.x, rb.x
+        for lk in Xa:
+            np.testing.assert_array_equal(
+                np.asarray(Xa[lk], np.float32),
+                np.asarray(Xb[lk], np.float32),
+                err_msg=f"round {k} leaf {lk} K={K}")
+        if a.stateful:
+            sa, sb = ra.state, rb.state
+            np.testing.assert_array_equal(
+                np.asarray(sa["residual"]), np.asarray(sb["residual"]),
+                err_msg=f"round {k} residual K={K}")
+            assert int(sa["step"]) == int(sb["step"]) == k + 1
+
+
+@pytest.mark.parametrize("K", KS)
+def test_pipelined_matches_barrier_on_exponential_topology(K):
+    """Multi-offset reduction order survives chunking (4 neighbors)."""
+    X = _tree()
+    key = jax.random.PRNGKey(3)
+    topo = exponential(8)
+    a = _engine("moniqua", 4, topo=topo, chunks=1).mix(X, theta=2.0,
+                                                       key=key).x
+    b = _engine("moniqua", 4, topo=topo, chunks=K).mix(X, theta=2.0,
+                                                       key=key).x
+    for lk in X:
+        np.testing.assert_array_equal(np.asarray(a[lk]), np.asarray(b[lk]))
+
+
+@pytest.mark.parametrize("K", KS)
+def test_pipelined_under_jit_close(K):
+    """Re-jitting may legally FMA-contract: the documented ~1-ulp bound."""
+    eng = _engine("moniqua", 8, chunks=K)
+    ref = _engine("moniqua", 8, chunks=1)
+    X = _tree()
+    key = jax.random.PRNGKey(1)
+    jo = jax.jit(lambda x, k: eng.mix(x, theta=2.0, key=k).x)(X, key)
+    ro = jax.jit(lambda x, k: ref.mix(x, theta=2.0, key=k).x)(X, key)
+    for lk in X:
+        np.testing.assert_allclose(np.asarray(jo[lk]), np.asarray(ro[lk]),
+                                   rtol=0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# 2. payload bits: concatenated chunk payloads == the whole-round payload
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K", KS)
+@pytest.mark.parametrize("wire,bits", WIRES,
+                         ids=[f"{w}{b}" for w, b in WIRES])
+def test_chunk_payload_bits_match_whole_round(wire, bits, K):
+    """What rides the wire is identical: chunk c's payload is the
+    [offset, offset+size) window of the barrier payload, for every array
+    in the payload tuple (codes AND sideband scales/levels)."""
+    X = _tree()
+    eng = _engine(wire, bits)
+    key = jax.random.PRNGKey(13)
+    st = eng.init_wire_state(X) if eng.stateful else None
+    kw = _mix_kw(wire, key)
+    whole = eng.round_plan(X, state=st, chunks=1, **kw).encode_chunk(0)
+    plan = eng.round_plan(X, state=st, chunks=K, **kw)
+    assert plan.num_chunks == K
+    # EF wires append the local compensated value v — not a wire payload
+    n_payload = {"full": 1, "moniqua": 1, "qsgd": 2, "ef_qsgd": 2,
+                 "onebit": 3}[wire]
+    parts = [plan.encode_chunk(i) for i in range(K)]
+    for j in range(n_payload):
+        cat = jnp.concatenate([p[j].reshape(8, -1) for p in parts], axis=1)
+        np.testing.assert_array_equal(
+            np.asarray(whole[j].reshape(8, -1)), np.asarray(cat),
+            err_msg=f"payload array {j}")
+
+
+# ---------------------------------------------------------------------------
+# 4. telemetry is chunk-count invariant (canonical flat-buffer health)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K", KS)
+def test_health_invariant_across_chunk_counts(K):
+    from repro.obs import metrics as M
+    X = _tree()
+    key = jax.random.PRNGKey(17)
+    h1 = _engine("moniqua", 4, chunks=1, telemetry=True).mix(
+        X, theta=2.0, key=key).health
+    hk = _engine("moniqua", 4, chunks=K, telemetry=True).mix(
+        X, theta=2.0, key=key).health
+    for k in M.HEALTH_ROUND_KEYS:
+        np.testing.assert_array_equal(np.asarray(h1[k]), np.asarray(hk[k]),
+                                      err_msg=f"{k} @ K={K}")
+
+
+# ---------------------------------------------------------------------------
+# 5. BucketLayout.chunks(K): the alignment contracts
+# ---------------------------------------------------------------------------
+
+def _layout(vpb=2):
+    return bucket.layout_of(_tree(), vpb)
+
+
+@pytest.mark.parametrize("K", [1, 2, 3, 5, 100])
+def test_chunks_cover_contiguously_and_slot_aligned(K):
+    layout = _layout()
+    chunks = layout.chunks(K)
+    assert 1 <= len(chunks) <= min(max(K, 1), len(layout.slots))
+    # contiguous exact cover of the padded buffer
+    pos = 0
+    for i, c in enumerate(chunks):
+        assert c.index == i
+        assert c.offset == pos
+        assert c.size > 0
+        pos += c.size
+    assert pos == layout.padded_elems
+    # every chunk holds whole slots, in order — per-tensor scales and the
+    # vpb byte alignment can never straddle a chunk boundary
+    all_slots = [s for c in chunks for s in c.slots]
+    assert all_slots == list(layout.slots)
+    for c in chunks:
+        assert c.size == sum(s.padded_size for s in c.slots)
+        assert c.segment_sizes == tuple(s.padded_size for s in c.slots)
+        assert c.offset == c.slots[0].offset
+
+
+def test_chunks_clamp_to_slot_count():
+    layout = _layout()
+    n_slots = len(layout.slots)
+    assert len(layout.chunks(n_slots + 50)) == n_slots
+    assert len(layout.chunks(0)) == 1
+    assert len(layout.chunks(-3)) == 1
+
+
+def test_chunks_memoized():
+    layout = _layout()
+    assert layout.chunks(3) is layout.chunks(3)
+
+
+def test_chunk_offsets_stay_on_vpb_boundaries():
+    """Payload-byte windows: every chunk offset divides values-per-byte
+    for every packing width (slots are vpb-row aligned by construction)."""
+    for vpb in (2, 4, 8):
+        layout = bucket.layout_of(_tree(), vpb)
+        for c in layout.chunks(5):
+            assert c.offset % vpb == 0
+            assert c.size % vpb == 0
+
+
+# ---------------------------------------------------------------------------
+# 6. one-round-stale overlap: identity first round, deterministic trainer
+# ---------------------------------------------------------------------------
+
+def test_mix_stale_first_round_is_identity_then_moves():
+    eng = _engine("moniqua", 8)
+    X = _tree()
+    carry = eng.init_gossip_carry(X)
+    assert not bool(carry["valid"])
+    r1 = eng.mix_stale(X, carry, theta=2.0, key=jax.random.PRNGKey(0))
+    for lk in X:   # nothing to decode yet: the model is untouched
+        np.testing.assert_array_equal(np.asarray(r1.x[lk]),
+                                      np.asarray(X[lk]))
+    assert bool(r1.state["valid"])
+    r2 = eng.mix_stale(r1.x, r1.state, theta=2.0,
+                       key=jax.random.PRNGKey(1))
+    moved = max(float(jnp.max(jnp.abs(r2.x[lk] - r1.x[lk]))) for lk in X)
+    assert moved > 0.0
+
+
+def test_mix_stale_deterministic_replay():
+    eng = _engine("moniqua", 8)
+
+    def run():
+        X = _tree()
+        carry = eng.init_gossip_carry(X)
+        for k in range(4):
+            r = eng.mix_stale(X, carry, theta=2.0,
+                              key=jax.random.PRNGKey(200 + k))
+            X, carry = r.x, r.state
+        return X
+
+    Xa, Xb = run(), run()
+    for lk in Xa:
+        np.testing.assert_array_equal(np.asarray(Xa[lk]),
+                                      np.asarray(Xb[lk]))
+
+
+def test_stale_trainer_step_deterministic():
+    """TrainerConfig(overlap='stale', chunks=2) end-to-end: the gossip
+    carry rides extra['gossip'], training stays finite, and two identical
+    runs replay bit-identically."""
+    import dataclasses as dc
+
+    from repro.configs import get_config
+    from repro.configs.base import InputShape
+    from repro.models.model_factory import build_model
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = dc.replace(get_config("llama3.2-3b").reduced(), num_layers=1,
+                     d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+                     d_ff=128, vocab_size=64)
+    model = build_model(cfg)
+    shape = InputShape("tiny", seq_len=16, global_batch=8, kind="train")
+    tc = TrainerConfig(algo="moniqua", n_workers=4, bits=8, theta=2.0,
+                       lr=0.3, steps=6, log_every=2, momentum=0.0,
+                       weight_decay=0.0, overlap="stale", chunks=2)
+
+    def run():
+        out = Trainer(model, shape, tc).run()
+        assert "gossip" in out["state"]["extra"]
+        assert np.isfinite(out["history"][-1]["loss"])
+        return out
+
+    a, b = run(), run()
+    assert [h["loss"] for h in a["history"]] == \
+        [h["loss"] for h in b["history"]]
+    for la, lb in zip(jax.tree.leaves(a["state"]["params"]),
+                      jax.tree.leaves(b["state"]["params"])):
+        np.testing.assert_array_equal(np.asarray(la, np.float32),
+                                      np.asarray(lb, np.float32))

@@ -45,13 +45,25 @@ changed and the committed artifact must be regenerated deliberately.
 Memory checks run only when the memory smoke file exists (``--mem-smoke``);
 a smoke file without its reference is an error, not a skip.
 
+It also gates the chunk-pipelined round trajectory (``BENCH_overlap.json``,
+from ``benchmarks/bench_overlap.py``): every bit-exactness row (the five
+wires, pipelined-vs-barrier) must be ``true`` in BOTH files — the pipeline
+is a schedule change and any numeric drift is a hard failure — the
+committed reference must keep a measurable whole-step win (>= 1.10x) on
+at least two multi-chunk model configs, and the smoke run's speedup on
+reference-winning cells must not regress more than ``--tol`` below the
+(capped) committed win.  Overlap checks run only when the overlap smoke
+file exists (``--overlap-smoke``).
+
 Usage:  python tools/check_bench.py \\
             [--smoke BENCH_network_sim.smoke.json] \\
             [--ref BENCH_network_sim.json] \\
             [--fusion-smoke BENCH_comm_fusion.smoke.json] \\
             [--fusion-ref BENCH_comm_fusion.json] \\
             [--mem-smoke BENCH_memory_overhead.smoke.json] \\
-            [--mem-ref BENCH_memory_overhead.json] [--tol 0.25]
+            [--mem-ref BENCH_memory_overhead.json] \\
+            [--overlap-smoke BENCH_overlap.smoke.json] \\
+            [--overlap-ref BENCH_overlap.json] [--tol 0.25]
 """
 from __future__ import annotations
 
@@ -212,6 +224,67 @@ def check_memory(smoke: dict, ref: dict, errors: list) -> None:
                               "is deterministic; exact match required)")
 
 
+# the overlap gate: the committed reference must keep a measurable
+# pipelined whole-step win on at least this many multi-chunk configs
+OVERLAP_MIN_SPEEDUP, OVERLAP_MIN_WINNERS = 1.10, 2
+# smoke floors are capped here (host-profile-dependent magnitude, same
+# rationale as FUSION_MIN_SPEEDUP)
+OVERLAP_CAP = 1.25
+
+
+def check_overlap(smoke: dict, ref: dict, tol: float, errors: list) -> None:
+    """BENCH_overlap gate: pipelined == barrier bitwise (both files, all
+    wires), the committed reference keeps >= OVERLAP_MIN_WINNERS configs
+    at >= OVERLAP_MIN_SPEEDUP, and smoke speedups on reference-winning
+    cells stay within --tol of the (capped) committed win."""
+    for tag, d in (("ref", ref), ("smoke", smoke)):
+        bad = [r for r in d.get("bitexact", []) if not r["bitexact"]]
+        if not d.get("bitexact"):
+            errors.append(f"overlap {tag}: no bitexact rows")
+        for r in bad:
+            errors.append(f"overlap {tag}: {r['model']}/{r['wire']} "
+                          f"pipelined round is NOT bit-exact vs barrier")
+        if d.get("bitexact") and not bad:
+            wires = len({r["wire"] for r in d["bitexact"]})
+            print(f"overlap {tag}: {len(d['bitexact'])} bitexact rows "
+                  f"({wires} wires) all true [ok]")
+
+    def rows(d):
+        return {(r["model"], r["wire"]): r for r in d["table"]}
+
+    s_rows, r_rows = rows(smoke), rows(ref)
+    for key, s in sorted(s_rows.items()):
+        r = r_rows.get(key)
+        if r is None:
+            errors.append(f"overlap: smoke cell {key} missing from "
+                          "reference")
+            continue
+        if r["speedup_x"] < 1.0:
+            print(f"overlap: {key[0]}/{key[1]} smoke="
+                  f"{s['speedup_x']:.2f}x ref={r['speedup_x']:.2f}x "
+                  "[info: barrier regime, not gated]")
+            continue
+        floor = (1.0 - tol) * min(r["speedup_x"], OVERLAP_CAP)
+        status = "FAIL" if s["speedup_x"] < floor else "ok"
+        print(f"overlap: {key[0]}/{key[1]} smoke={s['speedup_x']:.2f}x "
+              f"ref={r['speedup_x']:.2f}x floor={floor:.2f}x [{status}]")
+        if s["speedup_x"] < floor:
+            errors.append(f"overlap: {key} pipelined speedup regressed "
+                          f"{s['speedup_x']:.2f}x < {floor:.2f}x "
+                          f"(ref {r['speedup_x']:.2f}x - {tol:.0%})")
+    winners = [r for r in r_rows.values()
+               if r["chunks"] > 1 and r["speedup_x"] >= OVERLAP_MIN_SPEEDUP]
+    if len(winners) < OVERLAP_MIN_WINNERS:
+        errors.append(
+            f"overlap reference: only {len(winners)} multi-chunk configs "
+            f"at >= {OVERLAP_MIN_SPEEDUP}x (need {OVERLAP_MIN_WINNERS})")
+    else:
+        best = max(winners, key=lambda r: r["speedup_x"])
+        print(f"overlap headline: {best['model']}/{best['wire']} "
+              f"{best['speedup_x']:.2f}x over {len(winners)} winning "
+              "configs [ok]")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke",
@@ -228,6 +301,10 @@ def main(argv=None) -> int:
                                          "BENCH_memory_overhead.smoke.json"))
     ap.add_argument("--mem-ref",
                     default=os.path.join(REPO, "BENCH_memory_overhead.json"))
+    ap.add_argument("--overlap-smoke",
+                    default=os.path.join(REPO, "BENCH_overlap.smoke.json"))
+    ap.add_argument("--overlap-ref",
+                    default=os.path.join(REPO, "BENCH_overlap.json"))
     ap.add_argument("--tol", type=float, default=0.25,
                     help="max relative drift of per-scenario wire slope "
                          "and of per-model bucketed speedup")
@@ -314,11 +391,25 @@ def main(argv=None) -> int:
             check_memory(mem_smoke, mem_ref, errors)
             n_mem = len(mem_smoke["table"])
 
+    n_overlap = 0
+    if os.path.exists(args.overlap_smoke):
+        with open(args.overlap_smoke) as f:
+            overlap_smoke = json.load(f)
+        if not os.path.exists(args.overlap_ref):
+            errors.append(f"overlap smoke exists but reference "
+                          f"{args.overlap_ref} is missing")
+        else:
+            with open(args.overlap_ref) as f:
+                overlap_ref = json.load(f)
+            check_overlap(overlap_smoke, overlap_ref, args.tol, errors)
+            n_overlap = len(overlap_smoke["table"])
+
     for e in errors:
         print(f"ERROR: {e}", file=sys.stderr)
     if not errors:
         print(f"bench check OK ({len(smoke_scenarios)} scenarios, "
-              f"{n_fusion} fusion models, {n_mem} memory rows compared)")
+              f"{n_fusion} fusion models, {n_mem} memory rows, "
+              f"{n_overlap} overlap cells compared)")
     return 1 if errors else 0
 
 

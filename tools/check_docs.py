@@ -47,6 +47,7 @@ REQUIRED_ARTIFACTS = (
     "BENCH_network_sim.json",
     "BENCH_comm_fusion.json",
     "BENCH_memory_overhead.json",
+    "BENCH_overlap.json",
     "RUNLOG_sample.jsonl",
 )
 
