@@ -162,8 +162,8 @@ def run(quick: bool = False) -> dict:
         for label, wire, bits in CODECS:
             spec = QuantSpec(bits=min(bits, 8), stochastic=1 < bits <= 8)
             codec = make_wire(wire, spec)
-            eng_l = CommEngine(topo, codec, backend="jnp", bucketed=False)
-            eng_b = CommEngine(topo, codec, backend="jnp", bucketed=True)
+            eng_l = CommEngine(topo, codec, backend="jnp", path="per_leaf")
+            eng_b = CommEngine(topo, codec, backend="jnp", path="bucketed")
             needs_theta = wire == "moniqua"
             t_leaf, t_bucket = _time_pair(eng_l, eng_b, X, needs_theta,
                                           reps)

@@ -174,12 +174,12 @@ ENGINE_CODECS = [
 
 
 def build_engine(wire: str, bits: int, n: int = 8, backend: str = "jnp",
-                 bucketed: bool = True):
+                 path: str = "bucketed", topo=None):
     """One-liner CommEngine factory for benchmark sweeps."""
     from repro.comm.engine import CommEngine, make_wire
     spec = QuantSpec(bits=min(bits, 8), stochastic=1 < bits <= 8)
-    return CommEngine(ring(n), make_wire(wire, spec), backend,
-                      bucketed=bucketed)
+    return CommEngine(ring(n) if topo is None else topo,
+                      make_wire(wire, spec), backend, path=path)
 
 
 # ---------------------------------------------------------------------------

@@ -90,6 +90,17 @@ class BucketChunk:
         ``BucketLayout.segment_sizes``, restricted to the window)."""
         return tuple(s.padded_size for s in self.slots)
 
+    def chunks(self, k: int) -> Tuple["BucketChunk", ...]:
+        """Sub-partition this window into (at most) ``k`` slot-aligned
+        chunks — the same greedy sweep :meth:`BucketLayout.chunks` uses, so
+        a shard window composes with the staged round's ``chunks=K``
+        pipelining.  Offsets stay *global* buffer offsets (they are the
+        encode kernels' ``idx_base``).  An empty window yields no chunks.
+        """
+        if not self.slots:
+            return ()
+        return _partition_slots(self.slots, max(int(k), 1))
+
 
 @dataclasses.dataclass(frozen=True)
 class BucketLayout:
@@ -150,6 +161,28 @@ class BucketLayout:
         """
         return _chunks_of(self, max(int(k), 1))
 
+    def shard(self, axis_size: int, axis_index: int) -> BucketChunk:
+        """The slot-aligned shard window worker ``axis_index`` of an
+        ``axis_size``-way intra axis *owns* in the flat buffer.
+
+        Shards partition ``[0, padded_elems)`` exactly, in order, on slot
+        boundaries (per-tensor codec statistics never straddle a shard) and
+        balanced by padded element count — the same greedy sweep as
+        :meth:`chunks`, but with a fixed shard count: when the tree has
+        fewer slots than ``axis_size``, trailing shards are *empty*
+        (zero-size windows at the buffer end) rather than the count being
+        clamped, so every worker of the intra axis has a well-defined
+        (possibly trivial) window.  ``shard(1, 0)`` is the whole buffer —
+        the single-tier reference window.
+        """
+        if axis_size < 1:
+            raise ValueError(f"axis_size must be >= 1, got {axis_size}")
+        if not 0 <= axis_index < axis_size:
+            raise ValueError(
+                f"axis_index {axis_index} out of range for "
+                f"axis_size {axis_size}")
+        return _shards_of(self, int(axis_size))[axis_index]
+
     # -- the two jit-safe data movers --------------------------------------
     def flatten(self, X: PyTree) -> jax.Array:
         """Stacked pytree -> one ``[n, padded_elems]`` staging buffer.
@@ -190,14 +223,17 @@ class BucketLayout:
 
 
 @functools.lru_cache(maxsize=1024)
-def _chunks_of(layout: "BucketLayout", k: int) -> Tuple[BucketChunk, ...]:
-    """Greedy slot-aligned partition (memoized: layouts are frozen/hashable,
-    so a jitted round re-tracing with the same (layout, k) reuses the same
-    static chunk descriptors)."""
-    slots = layout.slots
+def _partition_slots(slots: Tuple[LeafSlot, ...],
+                     k: int) -> Tuple[BucketChunk, ...]:
+    """Greedy slot-aligned partition of a contiguous slot window into
+    ``min(k, len(slots))`` balanced chunks (memoized: slots are frozen/
+    hashable, so a jitted round re-tracing with the same window reuses the
+    same static chunk descriptors).  Shared by whole-layout chunking
+    (``BucketLayout.chunks``), shard windows (``BucketLayout.shard``), and
+    shard sub-chunking (``BucketChunk.chunks``)."""
     k = min(k, len(slots))
     chunks, start = [], 0
-    remaining = layout.padded_elems
+    remaining = sum(s.padded_size for s in slots)
     for i in range(k):
         target = remaining / (k - i)
         end, acc = start, 0
@@ -221,6 +257,28 @@ def _chunks_of(layout: "BucketLayout", k: int) -> Tuple[BucketChunk, ...]:
         remaining -= chunks[-1].size
         start = end
     return tuple(chunks)
+
+
+def _chunks_of(layout: "BucketLayout", k: int) -> Tuple[BucketChunk, ...]:
+    return _partition_slots(layout.slots, k)
+
+
+@functools.lru_cache(maxsize=1024)
+def _shards_of(layout: "BucketLayout",
+               axis_size: int) -> Tuple[BucketChunk, ...]:
+    """Exactly ``axis_size`` shard windows covering the buffer in order.
+
+    The first ``min(axis_size, num_leaves)`` are the greedy balanced
+    partition; any remainder (more workers than slots) are empty windows
+    pinned to the buffer end so indexing stays total.
+    """
+    real = _partition_slots(layout.slots, axis_size)
+    if len(real) == axis_size:
+        return real
+    end = layout.padded_elems
+    empties = tuple(BucketChunk(index=i, offset=end, size=0, slots=())
+                    for i in range(len(real), axis_size))
+    return real + empties
 
 
 def _common_stage_dtype(dtypes) -> Any:

@@ -110,7 +110,7 @@ from repro.core.quantizers import (QuantSpec, ef_qsgd_encode_segmented,
                                    qsgd_decode, qsgd_decode_segmented,
                                    qsgd_encode, qsgd_encode_segmented,
                                    qsgd_payload_bytes)
-from repro.core.topology import Topology
+from repro.core.topology import HierarchicalTopology, Topology
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.kernels.moniqua_encode import (DEFAULT_BLOCK_COLS,
@@ -318,14 +318,23 @@ def _crossover_table() -> Dict[str, float]:
         return dict(_FALLBACK_CROSSOVER)
 
 
-@functools.lru_cache(maxsize=1024)
-def _auto_bucketed(layout: bucket.BucketLayout, codec_name: str) -> bool:
-    """``path="auto"`` decision for one (layout, stateless codec): bucket
-    exactly when this tree's per-leaf pad amplification clears the measured
-    crossover for the wire."""
-    per_leaf = sum(_tile_padded(s.padded_size) for s in layout.slots)
-    ratio = per_leaf / max(_tile_padded(layout.padded_elems), 1)
+@functools.lru_cache(maxsize=4096)
+def _auto_bucketed_slots(slots: Tuple[bucket.LeafSlot, ...],
+                         padded_elems: int, codec_name: str) -> bool:
+    """``path="auto"`` decision for one contiguous slot window: bucket
+    exactly when the window's per-leaf pad amplification clears the
+    measured crossover for the wire.  Operates on a slot census (not a
+    whole layout) so a *shard* of the buffer resolves on its own leaves —
+    a shard holding two fused embedding slabs should not inherit the
+    bucketing verdict of the whole model's bias census."""
+    per_leaf = sum(_tile_padded(s.padded_size) for s in slots)
+    ratio = per_leaf / max(_tile_padded(padded_elems), 1)
     return ratio >= _crossover_table().get(codec_name, float("inf"))
+
+
+def _auto_bucketed(layout: bucket.BucketLayout, codec_name: str) -> bool:
+    return _auto_bucketed_slots(layout.slots, layout.padded_elems,
+                                codec_name)
 
 
 # ---------------------------------------------------------------------------
@@ -336,6 +345,11 @@ def _leaf_seed(base_seed: jax.Array, leaf_idx: int) -> jax.Array:
     """Distinct deterministic hash seed per pytree leaf (both backends)."""
     return jnp.asarray(base_seed, jnp.uint32) ^ jnp.uint32(
         (leaf_idx * 0x9E3779B1) & 0xFFFFFFFF)
+
+
+def _neighbor_weights_of(topo: Topology) -> Tuple[float, ...]:
+    return tuple(w for o, w in zip(topo.offsets, topo.weights)
+                 if o % topo.n != 0)
 
 
 @dataclasses.dataclass
@@ -375,13 +389,26 @@ class RoundPlan:
     seed: Optional[jax.Array] = None
     residual: Optional[jax.Array] = None
     step: Optional[jax.Array] = None
+    # shard plans (TieredPlan stage B): ``flat`` is the owned-shard window
+    # of the buffer starting at element ``base``, and the gossip runs on
+    # ``topo`` (the inter tier) instead of the engine's topology.  Chunk
+    # offsets stay *global* — they are the encode kernels' idx_base — so
+    # windows are sliced at ``c.offset - base``.  Defaults reproduce the
+    # single-tier whole-buffer round exactly.
+    base: int = 0
+    topo: Optional[Topology] = None
+
+    def __post_init__(self):
+        if self.topo is None:
+            self.topo = self.engine.gossip_topo
 
     @property
     def num_chunks(self) -> int:
         return len(self.chunks)
 
     def _win(self, arr: jax.Array, c: bucket.BucketChunk) -> jax.Array:
-        return jax.lax.slice_in_dim(arr, c.offset, c.offset + c.size, axis=1)
+        off = c.offset - self.base
+        return jax.lax.slice_in_dim(arr, off, off + c.size, axis=1)
 
     # -- phase 1: encode one chunk -----------------------------------------
     def encode_chunk(self, i: int) -> Tuple[jax.Array, ...]:
@@ -396,8 +423,9 @@ class RoundPlan:
                 return (self._win(self.flat, c),)
             if name == "moniqua":
                 return (kops.moniqua_encode_chunk(
-                    self.flat, c.offset, c.size, self.B, eng.codec.spec,
-                    self.seed, backend=self.backend),)
+                    self.flat, c.offset - self.base, c.size, self.B,
+                    eng.codec.spec, self.seed, backend=self.backend,
+                    idx_base=c.offset),)
             if name == "qsgd":
                 packed, scales = qsgd_encode_segmented(
                     self._win(self.flat, c), eng.codec.spec, self.seed,
@@ -427,8 +455,8 @@ class RoundPlan:
                 # the raw wire reduces over ALL offsets (self included, where
                 # _roll no-ops) — exactly gossip.mix's circulant
                 return tuple(gossip._roll(enc[0], o)
-                             for o in eng.topo.offsets)
-            offsets = eng.topo.neighbor_offsets()
+                             for o in self.topo.offsets)
+            offsets = self.topo.neighbor_offsets()
             if name == "moniqua":
                 return jnp.stack([gossip._roll(enc[0], o) for o in offsets])
             n_payload = 2 if name in ("qsgd", "ef_qsgd") else 3
@@ -449,15 +477,15 @@ class RoundPlan:
         with obs_trace.chunk_phase("comm.decode_reduce", i, self.num_chunks):
             if name == "full":
                 out = None
-                for w, r in zip(eng.topo.weights, nbrs):
+                for w, r in zip(self.topo.weights, nbrs):
                     t = r * w
                     out = t if out is None else out + t
                 return out.astype(enc[0].dtype)
-            weights = eng._neighbor_weights()
+            weights = _neighbor_weights_of(self.topo)
             if name == "moniqua":
                 return kops.moniqua_decode_reduce_chunk(
-                    enc[0], nbrs, self.flat, c.offset, c.size, self.B,
-                    weights, spec, backend=self.backend)
+                    enc[0], nbrs, self.flat, c.offset - self.base, c.size,
+                    self.B, weights, spec, backend=self.backend)
             if name == "qsgd":
                 win = self._win(self.flat, c)
                 packed, scales = enc
@@ -487,7 +515,7 @@ class RoundPlan:
             rwin = self._win(self.residual, c)
             packed, lo, hi, v = enc
             warm_p = self.step < eng.codec.warmup
-            out_warm = gossip.mix(win, eng.topo)
+            out_warm = gossip.mix(win, self.topo)
             d_self = onebit_decode_segmented(packed, lo, hi, seg)
             acc = None
             for (p_o, lo_o, hi_o), w in zip(nbrs, weights):
@@ -529,6 +557,139 @@ class RoundPlan:
         return out
 
 
+@dataclasses.dataclass
+class TieredPlan:
+    """One two-tier gossip round on the flat bucket (hierarchical engines).
+
+    Three stages on the ``[n, D]`` staging buffer viewed as
+    ``[n_inter, n_intra, D]`` (worker ``w = g * n_intra + j``):
+
+    1. **Intra reduce** (fast axis, full precision): the intra tier's
+       circulant mix along the node axis — with the default fully-connected
+       intra tier this is exactly the node mean, i.e. the reduce phase of a
+       reduce-scatter.  Skipped at the *Python* level when ``n_intra == 1``
+       (no multiply-by-1.0 rides into the graph), which is the whole
+       trivial-tier bit-exactness argument.
+    2. **Inter shard gossip** (slow axis, quantized): worker ``j`` owns the
+       slot-aligned shard window ``layout.shard(n_intra, j)`` and gossips
+       *only that window* across nodes on the inter topology — one
+       :class:`RoundPlan` per shard with ``base`` = the shard offset and
+       ``topo`` = the inter tier, so the encode hashes global element
+       indices and every RoundPlan guarantee (chunk pipelining, per-tensor
+       scales, WireState math) carries over unchanged.  Each shard plan
+       sub-chunks its own slots (``BucketChunk.chunks``): ``chunks=K``
+       pipelining composes per shard, and a shard whose *own* leaf census
+       resolves ``path="auto"`` to per-leaf degenerates to slot-granular
+       chunks (per-leaf on a flat window == one chunk per slot).
+    3. **All-gather** (fast axis): the mixed shards concatenate back to the
+       full buffer and broadcast across the intra axis — every worker in a
+       node leaves the round with the same model, like D-PSGD after an
+       exact node-local average.
+
+    With ``n_intra == 1`` stages 1 and 3 are identity reshapes and stage 2
+    is one whole-buffer RoundPlan on the inter topology — byte- and
+    bit-identical to the single-tier staged round (``tests/
+    test_hierarchical.py`` pins this for all five wires, both backends,
+    WireState carries included).
+
+    Stateful (EF) wires keep their residual in the *owned-shard domain*:
+    one ``[n_inter, padded_elems]`` f32 buffer — row ``g``, window ``j``
+    is worker ``(g, j)``'s residual for the shard it encodes — i.e.
+    ``n_intra``-fold smaller than the single-tier ``[n, padded_elems]``
+    state, which is the memory half of the hierarchy headline.
+    """
+    engine: "CommEngine"
+    layout: bucket.BucketLayout
+    flat: jax.Array                    # [n, D] staging buffer
+    backend: str
+    chunks: int = 1                    # per-shard sub-chunk count K
+    theta: Any = None
+    B: Any = None
+    seed: Optional[jax.Array] = None
+    residual: Optional[jax.Array] = None   # [n_inter, D] owned-shard EF state
+    step: Optional[jax.Array] = None
+
+    @property
+    def topo(self) -> HierarchicalTopology:
+        return self.engine.topo
+
+    def intra_reduce(self) -> jax.Array:
+        """Stage 1: the intra tier's circulant mix along the node axis;
+        returns ``[n_inter, n_intra, D]``.  Pure reshape when trivial."""
+        intra = self.topo.intra
+        g, k = self.topo.n_inter, self.topo.n_intra
+        stage = self.flat.reshape(g, k, self.flat.shape[-1])
+        if k == 1:
+            return stage
+        with obs_trace.named_phase("comm.intra_reduce"):
+            out = None
+            for o, w in zip(intra.offsets, intra.weights):
+                t = (jnp.roll(stage, -o, axis=1) if o % k else stage) * w
+                out = t if out is None else out + t
+            return out.astype(stage.dtype)
+
+    def shard_plan(self, j: int, z: jax.Array) -> RoundPlan:
+        """Stage 2 for shard ``j``: the owner rows' window as a RoundPlan
+        over ``n_inter`` node-workers on the inter topology."""
+        shard = self.layout.shard(self.topo.n_intra, j)
+        k = self.chunks
+        if not self.engine._shard_bucketed(shard):
+            # this shard's own census says per-leaf: slot-granular chunks
+            k = max(k, len(shard.slots))
+        zj = jax.lax.slice_in_dim(z[:, j, :], shard.offset,
+                                  shard.offset + shard.size, axis=1)
+        res = None
+        if self.residual is not None:
+            res = jax.lax.slice_in_dim(self.residual, shard.offset,
+                                       shard.offset + shard.size, axis=1)
+        return RoundPlan(engine=self.engine, layout=self.layout,
+                         chunks=shard.chunks(k), flat=zj,
+                         backend=self.backend, theta=self.theta, B=self.B,
+                         seed=self.seed, residual=res, step=self.step,
+                         base=shard.offset, topo=self.topo.inter)
+
+    def run(self):
+        """Execute the tiered round.  Returns the mixed ``[n, D]`` buffer
+        (stateless wires) or ``(mixed buffer, new [n_inter, D] residual)``
+        (stateful wires)."""
+        eng = self.engine
+        g, k = self.topo.n_inter, self.topo.n_intra
+        stateful = eng.stateful
+        z = self.intra_reduce()
+        if not self.topo.inter.neighbor_offsets():
+            # single node: the round is the intra average alone
+            out = z
+            res = self.residual
+        else:
+            outs, ress = [], []
+            for j in range(k):
+                if self.layout.shard(k, j).size == 0:
+                    continue        # more workers than slots: empty window
+                plan = self.shard_plan(j, z)
+                r = plan.run()
+                if stateful:
+                    outs.append(r[0])
+                    ress.append(r[1])
+                else:
+                    outs.append(r)
+            # stage 3a: concatenate the mixed shards (they cover [0, D)
+            # slot-aligned, in order) back into the full node buffer
+            full = outs[0] if len(outs) == 1 else jnp.concatenate(outs,
+                                                                  axis=1)
+            out = full[:, None, :]
+            res = None
+            if stateful:
+                res = (ress[0] if len(ress) == 1
+                       else jnp.concatenate(ress, axis=1))
+        # stage 3b: all-gather — broadcast each node's mixed model across
+        # the intra axis (identity reshape when n_intra == 1)
+        D = self.flat.shape[-1]
+        out = jnp.broadcast_to(out, (g, k, D)).reshape(g * k, D)
+        if stateful:
+            return out, res
+        return out
+
+
 @dataclasses.dataclass(frozen=True)
 class CommEngine:
     """One gossip round, end-to-end: codec x topology x backend + accounting.
@@ -542,10 +703,19 @@ class CommEngine:
     per offset, one fused decode-reduce), ``"per_leaf"`` gossips leaf by
     leaf (the parity reference), and ``"auto"`` (default) picks per
     (layout, codec) from the measured crossover table (module docstring).
-    The legacy ``bucketed=`` boolean is accepted as a deprecated alias.
     Both paths draw the same stochastic-rounding uniforms per element
     (global counter indices), so they are bit-exact against each other for
     the Moniqua wire.
+
+    ``topo`` may be a :class:`~repro.core.topology.HierarchicalTopology`,
+    which turns every ``mix`` into a two-tier round (:class:`TieredPlan`):
+    full-precision reduce-scatter/all-gather on the fast intra-node axis,
+    quantized gossip of each worker's owned shard on the slow inter-node
+    axis.  Tiered rounds always run in the staged flat-bucket domain
+    (``path`` then governs per-*shard* launch granularity via the shard's
+    own leaf census), and with a trivial intra tier (``n_intra == 1``)
+    they are bit-exact against the single-tier bucketed round on the
+    inter topology — payloads, outputs, and WireState.
 
     ``chunks`` sets the default chunk count for the staged round
     (``round_plan``): the bucketed flat buffer is split into that many
@@ -566,23 +736,30 @@ class CommEngine:
     flag is a Python-level branch: the telemetry graph is never traced,
     hence dead-code-free under jit.
     """
-    topo: Topology
+    topo: Any                     # Topology | HierarchicalTopology
     codec: Any = dataclasses.field(default_factory=MoniquaWire)
     backend: str = "auto"
     path: str = "auto"
     chunks: int = 1
     telemetry: bool = False
-    # deprecated alias for path= ("bucketed"/"per_leaf"); None = use path
-    bucketed: dataclasses.InitVar[Optional[bool]] = None
 
-    def __post_init__(self, bucketed: Optional[bool]) -> None:
-        if bucketed is not None:
-            object.__setattr__(self, "path",
-                               "bucketed" if bucketed else "per_leaf")
+    def __post_init__(self) -> None:
         if self.path not in PATHS:
             raise ValueError(f"unknown path {self.path!r}; one of {PATHS}")
         if int(self.chunks) < 1:
             raise ValueError(f"chunks must be >= 1, got {self.chunks}")
+
+    # -- hierarchy plumbing ------------------------------------------------
+    @property
+    def tiered(self) -> bool:
+        """True when the topology is two-tier (every mix is a TieredPlan)."""
+        return isinstance(self.topo, HierarchicalTopology)
+
+    @property
+    def gossip_topo(self) -> Topology:
+        """The tier whose edges carry *quantized* payloads: the inter tier
+        of a hierarchy, or the whole (flat) topology."""
+        return self.topo.inter if self.tiered else self.topo
 
     # -- persistent per-worker codec state (WireState) ---------------------
     @property
@@ -603,37 +780,66 @@ class CommEngine:
         (one f32 per row-aligned element): both the bucketed and the
         per-leaf gossip paths read and write the same canonical buffer,
         which is what lets them produce bit-identical post-round state.
+
+        Tiered engines shard the residual into the owned-shard domain:
+        one ``[n_inter, padded_elems]`` buffer where row ``g``, window
+        ``j`` is worker ``(g, j)``'s residual for the shard it encodes —
+        ``n_intra``-fold smaller than the single-tier state (and identical
+        to it when the intra tier is trivial).
         """
         if not self.stateful:
             return {}
         layout = self.layout(X)
-        return {"residual": jnp.zeros((layout.n_workers,
-                                       layout.padded_elems), jnp.float32),
+        rows = (self.topo.n_inter if self.tiered else layout.n_workers)
+        return {"residual": jnp.zeros((rows, layout.padded_elems),
+                                      jnp.float32),
                 "step": jnp.zeros((), jnp.int32)}
 
     def wire_state_bytes(self, X: PyTree) -> int:
         """Per-worker bytes of persistent codec state (Tables 1-2 memory
-        column): 0 for full/moniqua/qsgd, residual + counter for EF wires."""
+        column): 0 for full/moniqua/qsgd, residual + counter for EF wires.
+        Tiered engines only persist each worker's owned shard, so the
+        per-worker residual shrinks ``n_intra``-fold (reported as the
+        exact per-worker average; shard windows are slot-aligned)."""
         if not self.stateful or not jax.tree.leaves(X):
             return 0
-        return self.layout(X).padded_elems * 4 + 4
+        elems = self.layout(X).padded_elems
+        if self.tiered:
+            elems = -(-elems // self.topo.n_intra)
+        return elems * 4 + 4
 
     # -- gossip path resolution --------------------------------------------
-    def resolved_path(self, X: PyTree) -> str:
+    def resolved_path(self, X: PyTree,
+                      shard: Optional[bucket.BucketChunk] = None) -> str:
         """The concrete path (``"bucketed"``/``"per_leaf"``) this engine
         takes for ``X``: the configured one, or — under ``"auto"`` — the
         measured per-(layout, codec) crossover.  Stateful wires always
-        bucket (their canonical residual lives in the flat domain)."""
+        bucket (their canonical residual lives in the flat domain).
+
+        With ``shard`` (a :meth:`~repro.comm.bucket.BucketLayout.shard`
+        window), ``"auto"`` resolves on the *shard's own leaf census*, not
+        the whole model's: a tiered round only encodes the window a worker
+        owns, so the pad-amplification that decides bucketing must be the
+        window's.  On a tiered engine ``"per_leaf"`` means slot-granular
+        launches over the shard window (one chunk per slot).
+        """
         if self.path != "auto":
             return self.path
         if self.stateful:
             return "bucketed"
+        if shard is not None:
+            return ("bucketed" if _auto_bucketed_slots(
+                shard.slots, max(shard.size, 1), self.codec.name)
+                else "per_leaf")
         layout = self.layout(X)
         return ("bucketed" if _auto_bucketed(layout, self.codec.name)
                 else "per_leaf")
 
     def _use_bucketed(self, X: PyTree) -> bool:
         return self.resolved_path(X) == "bucketed"
+
+    def _shard_bucketed(self, shard: bucket.BucketChunk) -> bool:
+        return self.resolved_path(None, shard=shard) == "bucketed"
 
     # -- the staged round --------------------------------------------------
     def round_plan(self, X: PyTree, theta=None,
@@ -649,7 +855,14 @@ class CommEngine:
         tree on the raw wire has no bucketed round (f32 staging would
         change the mixing arithmetic) and raises here — ``mix`` handles
         that case by falling back to the per-leaf circulant.
+
+        Tiered engines stage per owned shard instead (one RoundPlan per
+        shard inside :class:`TieredPlan`); use :meth:`tiered_plan` / ``mix``.
         """
+        if self.tiered:
+            raise ValueError(
+                "a tiered engine stages per owned shard; use "
+                "tiered_plan()/mix() instead of round_plan()")
         layout = self.layout(X)
         if self.codec.name == "full" and not layout.uniform_dtype:
             raise ValueError(
@@ -679,6 +892,46 @@ class CommEngine:
                          flat=flat, backend=backend, theta=theta, B=B,
                          seed=seed, residual=residual, step=step)
 
+    def tiered_plan(self, X: PyTree, theta=None,
+                    key: Optional[jax.Array] = None,
+                    state: Optional[dict] = None,
+                    chunks: Optional[int] = None) -> TieredPlan:
+        """Stage one two-tier round (hierarchical engines): intra reduce,
+        per-shard inter gossip, all-gather.  ``chunks`` is the per-shard
+        sub-chunk count K (pipelined inside each shard's RoundPlan).
+        """
+        if not self.tiered:
+            raise ValueError("tiered_plan needs a HierarchicalTopology "
+                             "engine; use round_plan() on flat topologies")
+        layout = self.layout(X)
+        if self.codec.name == "full" and not layout.uniform_dtype:
+            raise ValueError(
+                "no tiered round for a mixed-dtype tree on the full wire "
+                "(f32 staging would change the mixing arithmetic); stage "
+                "the tree in one dtype or use a flat topology")
+        if self.stateful:
+            self._check_wire_state(state)
+        k = self.chunks if chunks is None else int(chunks)
+        backend = resolve_backend(self.backend)
+        flat = layout.flatten(X)
+        B = None
+        seed = None
+        residual = None
+        step = None
+        if self.codec.name != "full":
+            self._require_key(key)
+            seed = kops._key_to_seed(key)
+        if self.codec.name == "moniqua":
+            if theta is None:
+                raise ValueError("MoniquaWire needs the a-priori bound theta")
+            B = modulo.b_theta(theta, self.codec.spec.delta)
+        if self.stateful:
+            flat = flat.astype(jnp.float32)
+            residual, step = state["residual"], state["step"]
+        return TieredPlan(engine=self, layout=layout, flat=flat,
+                          backend=backend, chunks=max(k, 1), theta=theta,
+                          B=B, seed=seed, residual=residual, step=step)
+
     # -- the tentpole primitive --------------------------------------------
     def mix(self, X: PyTree, theta=None, key: Optional[jax.Array] = None,
             ledger: Optional[BytesLedger] = None,
@@ -696,6 +949,8 @@ class CommEngine:
         """
         if self.stateful:
             self._check_wire_state(state)
+        if self.tiered:
+            return self._mix_tiered(X, theta, key, ledger, state)
         offsets = self.topo.neighbor_offsets()
         if not offsets or not jax.tree.leaves(X):
             # single worker or empty pytree: nothing on the wire
@@ -738,6 +993,36 @@ class CommEngine:
                   if self.telemetry else None)
         return MixResult(Xm, {}, health)
 
+    def _mix_tiered(self, X: PyTree, theta, key: Optional[jax.Array],
+                    ledger: Optional[BytesLedger],
+                    state: Optional[dict]) -> MixResult:
+        """Tiered engines' round: stage and run a :class:`TieredPlan`.
+
+        Tiered rounds always stage through the flat bucket — the intra
+        reduce-scatter/all-gather is a whole-buffer operation, so there is
+        no per-leaf variant to resolve to (``path`` only affects how stage
+        2 sub-chunks each shard).
+        """
+        if not jax.tree.leaves(X) or self.topo.n == 1:
+            return self._empty_round(X, state)
+        if self.codec.name == "moniqua" and theta is None:
+            raise ValueError("MoniquaWire needs the a-priori bound theta")
+        if ledger is not None:
+            self._record(X, ledger)
+        plan = self.tiered_plan(X, theta=theta, key=key, state=state)
+        layout = plan.layout
+        if self.stateful:
+            out, res = plan.run()
+            new_state = {"residual": res, "step": state["step"] + 1}
+            Xm = layout.unflatten(out.astype(layout.stage_dtype))
+            health = (self._round_health(X, theta, key, new_state)
+                      if self.telemetry else None)
+            return MixResult(Xm, new_state, health)
+        Xm = layout.unflatten(plan.run())
+        health = (self._round_health(X, theta, key, None)
+                  if self.telemetry else None)
+        return MixResult(Xm, {}, health)
+
     def _empty_round(self, X: PyTree, state: Optional[dict]) -> MixResult:
         """Degenerate round (single worker / empty pytree): same MixResult
         shape as the main path, nothing on the wire."""
@@ -765,6 +1050,10 @@ class CommEngine:
             raise ValueError(
                 "one-round-stale overlap needs the stateless moniqua wire "
                 f"(got {self.codec.name!r})")
+        if self.tiered:
+            raise ValueError(
+                "one-round-stale overlap is single-tier only: a tiered "
+                "round's payloads are per owned shard, not whole-buffer")
         layout = self.layout(X)
         vpb = self.codec.spec.values_per_byte
         return {"packed": jnp.zeros((layout.n_workers,
@@ -793,6 +1082,10 @@ class CommEngine:
             raise ValueError(
                 "mix_stale needs the stateless moniqua wire "
                 f"(got {self.codec.name!r})")
+        if self.tiered:
+            raise ValueError(
+                "mix_stale is single-tier only: a tiered round's payloads "
+                "are per owned shard, not whole-buffer")
         if not isinstance(carry, dict) or "packed" not in carry:
             raise ValueError(
                 "pass carry=engine.init_gossip_carry(X) and thread the "
@@ -857,12 +1150,20 @@ class CommEngine:
             h["bits_per_param"] = jnp.float32(
                 8.0 * self.payload_bytes_per_broadcast(X)
                 / max(layout.total_elems, 1))
+            m = len(self.gossip_topo.neighbor_offsets())
+            h["bytes_slow"] = jnp.float32(
+                self.payload_bytes_per_broadcast(X) * m)
+            h["bytes_fast"] = jnp.float32(self.fast_bytes_per_round(X))
             if self.codec.name == "moniqua" and theta is not None:
                 spec = self.codec.spec
                 theta = jnp.asarray(theta, jnp.float32)
                 B = modulo.b_theta(theta, spec.delta)
                 h["headroom"] = h["consensus_inf"] / B
-                if spec.delta < 0.25:    # sentinel pinned to 0 otherwise
+                # tiered rounds encode per owned shard, so a whole-buffer
+                # re-encode would not be bit-identical to the payloads the
+                # round actually shipped: pin the sentinel to 0 instead of
+                # reporting a number that doesn't describe the wire.
+                if spec.delta < 0.25 and not self.tiered:
                     seed = kops._key_to_seed(key)
                     packed = kops.moniqua_encode_stacked(flat, B, spec,
                                                          seed, backend="jnp")
@@ -1025,8 +1326,7 @@ class CommEngine:
         return bucket.layout_of(X, self._align())
 
     def _neighbor_weights(self) -> Tuple[float, ...]:
-        return tuple(w for o, w in zip(self.topo.offsets, self.topo.weights)
-                     if o % self.topo.n != 0)
+        return _neighbor_weights_of(self.gossip_topo)
 
     def _require_key(self, key) -> None:
         """Stochastic rounding without a key would silently reuse seed 0
@@ -1183,10 +1483,21 @@ class CommEngine:
 
     # -- gossip building blocks shared by the algorithm zoo ----------------
     def neighbor_sum(self, X: PyTree, transform) -> PyTree:
-        """``sum_{o != 0} w_o * transform(roll(X, -o), o)`` leaf-wise."""
+        """``sum_{o != 0} w_o * transform(roll(X, -o), o)`` leaf-wise.
+
+        Flat-topology primitive (replica-mixing baselines); tiered
+        engines have no single circulant to roll on."""
+        if self.tiered:
+            raise ValueError(
+                "neighbor_sum needs a flat circulant topology; the "
+                "replica-mixing baselines do not support tiers")
         return gossip.neighbor_sum(X, self.topo, transform)
 
     def self_weight(self) -> float:
+        if self.tiered:
+            raise ValueError(
+                "self_weight needs a flat circulant topology; the "
+                "replica-mixing baselines do not support tiers")
         return gossip.self_weight(self.topo)
 
     # -- accounting --------------------------------------------------------
@@ -1203,44 +1514,83 @@ class CommEngine:
         staging would change the arithmetic), so its bytes are the
         per-leaf sum as well.  Because the paths agree byte for byte,
         ``path="auto"`` resolution never changes this number.
+
+        Tiered engines: each worker broadcasts only its *owned shard* on
+        the slow axis.  The per-shard payloads sum to the whole-buffer
+        staged payload exactly (``padded_elems // vpb`` and ``num_leaves``
+        both distribute over slot-aligned shards), so one shard is a
+        ceil'd ``n_intra``-th of the single-tier number — the ~n_intra-fold
+        slow-axis reduction the hierarchy headline claims.
         """
         if not jax.tree.leaves(X):
             return 0
+        if self.tiered:
+            return -(-self._staged_payload_bytes(self.layout(X))
+                     // self.topo.n_intra)
         if self.stateful:
             # EF wires gossip packed flat segments on BOTH paths (the
             # per-leaf round slices the same canonical bucket buffer), so
-            # the accounting is layout-based either way: packed codes plus
-            # per-segment scale words (one f32 for ef_qsgd, a lo/hi level
-            # pair for onebit).  onebit warmup rounds ship f32
-            # (``warmup_payload_bytes``); steady state is what's reported.
-            layout = self.layout(X)
-            nbytes = layout.padded_elems // self.codec.spec.values_per_byte
-            nbytes += (4 if self.codec.name == "ef_qsgd"
-                       else 8) * layout.num_leaves
-            return nbytes
+            # the accounting is layout-based either way.  onebit warmup
+            # rounds ship f32 (``warmup_payload_bytes``); steady state is
+            # what's reported.
+            return self._staged_payload_bytes(self.layout(X))
         if self._use_bucketed(X):
             layout = self.layout(X)
-            if self.codec.name == "full":
-                if not layout.uniform_dtype:   # per-leaf fallback path
-                    return sum(self.codec.payload_bytes(
-                        leaf.shape[1:], leaf.dtype.itemsize)
-                        for leaf in jax.tree.leaves(X))
-                return layout.total_elems * jnp.dtype(
-                    layout.stage_dtype).itemsize
-            spec = self.codec.spec
-            nbytes = layout.padded_elems // spec.values_per_byte
-            if self.codec.name == "qsgd":
-                nbytes += 4 * layout.num_leaves
-            return nbytes
+            if self.codec.name == "full" and not layout.uniform_dtype:
+                # per-leaf fallback path
+                return sum(self.codec.payload_bytes(
+                    leaf.shape[1:], leaf.dtype.itemsize)
+                    for leaf in jax.tree.leaves(X))
+            return self._staged_payload_bytes(layout)
         return sum(self.codec.payload_bytes(leaf.shape[1:],
                                             leaf.dtype.itemsize)
                    for leaf in jax.tree.leaves(X))
 
+    def _staged_payload_bytes(self, layout: bucket.BucketLayout) -> int:
+        """Whole-buffer payload on the staged (bucketed) path: packed codes
+        plus per-segment scale words (one f32 for qsgd/ef_qsgd, a lo/hi
+        level pair for onebit)."""
+        if self.codec.name == "full":
+            return layout.total_elems * jnp.dtype(
+                layout.stage_dtype).itemsize
+        spec = self.codec.spec
+        nbytes = layout.padded_elems // spec.values_per_byte
+        if self.codec.name in ("qsgd", "ef_qsgd"):
+            nbytes += 4 * layout.num_leaves
+        elif self.codec.name == "onebit":
+            nbytes += 8 * layout.num_leaves
+        return nbytes
+
+    def fast_bytes_per_round(self, X: PyTree) -> int:
+        """Fast-axis (intra) bytes one worker sends per tiered round:
+        reduce-scatter plus all-gather of the staging buffer, i.e.
+        ``2 * (n_intra - 1) / n_intra`` of it in the staging dtype (f32
+        for EF wires, which stage in f32).  0 for single-tier engines
+        and for a trivial intra tier.
+        """
+        if not self.tiered or not jax.tree.leaves(X):
+            return 0
+        k = self.topo.n_intra
+        if k == 1:
+            return 0
+        layout = self.layout(X)
+        itemsize = (4 if self.stateful
+                    else jnp.dtype(layout.stage_dtype).itemsize)
+        return 2 * itemsize * layout.padded_elems * (k - 1) // k
+
     def bytes_per_round(self, X: PyTree) -> int:
-        """Payload bytes *sent* per worker per gossip round (all leaves)."""
-        m = len(self.topo.neighbor_offsets())
-        return self.payload_bytes_per_broadcast(X) * m
+        """Payload bytes *sent* per worker per gossip round (all leaves).
+
+        Tiered engines: the fast-axis reduce-scatter/all-gather bytes plus
+        one owned-shard broadcast per *inter* neighbor on the slow axis.
+        """
+        m = len(self.gossip_topo.neighbor_offsets())
+        return (self.fast_bytes_per_round(X)
+                + self.payload_bytes_per_broadcast(X) * m)
 
     def _record(self, X: PyTree, ledger: BytesLedger) -> None:
         ledger.add(self.payload_bytes_per_broadcast(X),
-                   len(self.topo.neighbor_offsets()))
+                   len(self.gossip_topo.neighbor_offsets()), tier="slow")
+        fast = self.fast_bytes_per_round(X)
+        if fast:
+            ledger.add(fast, 1, tier="fast")

@@ -39,11 +39,27 @@ PyTree = Any
 
 @dataclasses.dataclass
 class BytesLedger:
-    """Bytes sent per worker per gossip round (payload only, excl. headers)."""
-    bytes_per_worker: int = 0
+    """Bytes sent per worker per gossip round (payload only, excl. headers).
 
-    def add(self, nbytes: int, n_sends: int) -> None:
-        self.bytes_per_worker += nbytes * n_sends
+    Split per tier: ``bytes_slow`` is the gossip-link traffic (the only
+    tier a single-tier round has — quantization's target), ``bytes_fast``
+    the intra-node reduce-scatter/all-gather traffic of tiered rounds.
+    ``bytes_per_worker`` stays the total, so single-tier callers that
+    only read the scalar see the same number as before.
+    """
+    bytes_per_worker: int = 0
+    bytes_fast: int = 0
+    bytes_slow: int = 0
+
+    def add(self, nbytes: int, n_sends: int, tier: str = "slow") -> None:
+        if tier not in ("fast", "slow"):
+            raise ValueError(f"unknown tier {tier!r}")
+        total = nbytes * n_sends
+        self.bytes_per_worker += total
+        if tier == "fast":
+            self.bytes_fast += total
+        else:
+            self.bytes_slow += total
 
 
 def _roll(leaf: jax.Array, offset: int) -> jax.Array:

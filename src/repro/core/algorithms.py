@@ -37,6 +37,7 @@ import numpy as np
 from repro.comm.engine import CommEngine, FullPrecisionWire, make_wire
 from repro.core.moniqua import MoniquaCodec
 from repro.core.quantizers import QuantSpec
+from repro.core import topology
 from repro.core.topology import Topology
 from repro.obs import metrics as obs_metrics
 
@@ -72,22 +73,43 @@ class AlgoHyper:
     overlap: str = "none"         # step-level overlap: none | stale (Moniqua)
     warmup: int = 16              # onebit wire: fp32 rounds before 1-bit+EF
     telemetry: bool = False       # round-health observability (repro.obs)
-    bucketed: Optional[bool] = None   # deprecated alias for path=
+    tiers: int = 1                # 1 = flat gossip; k>1 = two-tier, nodes of k
+
+    def comm_topo(self):
+        """The topology the engines gossip on: ``topo`` itself for flat
+        (``tiers=1``) runs, or the two-tier hierarchy with ``topo`` as the
+        *inter* graph over ``n // tiers`` nodes and a fully-connected intra
+        tier of ``tiers`` workers.  A ``HierarchicalTopology`` passed
+        directly as ``topo`` wins over ``tiers``.
+        """
+        if isinstance(self.topo, topology.HierarchicalTopology):
+            return self.topo
+        if self.tiers <= 1:
+            return self.topo
+        # rebuild from the base family, replaying any slack factors the
+        # flat name carries ("ring-slack0.9") onto the inter tier — the
+        # only quantized tier, hence the only one Theorem 3 damps
+        parts = self.topo.name.split("-slack")
+        hier = topology.two_tier(self.topo.n, self.tiers,
+                                 inter_name=parts[0])
+        for g in parts[1:]:
+            hier = hier.slack(float(g))
+        return hier
 
     def engine(self) -> CommEngine:
-        return CommEngine(self.topo,
+        return CommEngine(self.comm_topo(),
                           make_wire(self.wire, self.codec.spec,
                                     warmup=self.warmup),
                           self.backend, path=self.path, chunks=self.chunks,
-                          telemetry=self.telemetry, bucketed=self.bucketed)
+                          telemetry=self.telemetry)
 
     def exact_engine(self, telemetry: bool = False) -> CommEngine:
         """Full-precision engine.  ``telemetry`` is opt-in per call site:
         the instrumented baselines (DPSGD, D2) pass ``self.telemetry``;
         internal replica/estimator mixing (Choco, DCD, ...) leaves it off."""
-        return CommEngine(self.topo, FullPrecisionWire(), self.backend,
-                          path=self.path, chunks=self.chunks,
-                          telemetry=telemetry, bucketed=self.bucketed)
+        return CommEngine(self.comm_topo(), FullPrecisionWire(),
+                          self.backend, path=self.path, chunks=self.chunks,
+                          telemetry=telemetry)
 
 
 # ---------------------------------------------------------------------------

@@ -143,6 +143,121 @@ def fully_connected(n: int) -> Topology:
     return Topology("complete", n, offs, tuple([1.0 / n] * n))
 
 
+@dataclasses.dataclass(frozen=True)
+class HierarchicalTopology:
+    """Two-tier gossip topology: an intra-tier graph inside each node times
+    an inter-tier graph across nodes.
+
+    Worker ``w = g * intra.n + j`` is member ``j`` of node ``g`` (the intra
+    index varies fastest, matching a ``reshape(n_inter, n_intra)`` of the
+    stacked worker axis).  One hierarchical round composes as
+
+        W_hier = kron(W_inter, W_intra)
+
+    so the spectral-gap math stays honest: the eigenvalues of the Kronecker
+    product are the pairwise products of the tier eigenvalues, hence
+    ``rho = max(intra.rho, inter.rho)`` for doubly-stochastic tiers (both
+    factors keep the eigenvalue 1).  With ``intra = fully_connected(k)``
+    the product ``kron(W_inter, J_k/k)`` is *exactly* what the executed
+    two-tier round computes (intra reduce-scatter -> inter shard gossip ->
+    intra all-gather, ``CommEngine`` TieredPlan); for other intra graphs
+    the matrix is the analysis object (rho regressions), while the engine
+    still runs reduce-scatter semantics on the intra axis.
+
+    Theta bounds per tier: only the *inter* tier's gossip is modulo
+    quantized, so Lemma 1's a-priori bound theta constrains consensus
+    across node means — the intra tier is full precision and never
+    aliases.  ``slack`` therefore applies to the inter tier only.
+    """
+    intra: Topology
+    inter: Topology
+
+    @property
+    def name(self) -> str:
+        return (f"{self.inter.name}{self.inter.n}"
+                f"x{self.intra.name}{self.intra.n}")
+
+    @property
+    def n(self) -> int:
+        return self.intra.n * self.inter.n
+
+    @property
+    def n_intra(self) -> int:
+        return self.intra.n
+
+    @property
+    def n_inter(self) -> int:
+        return self.inter.n
+
+    @property
+    def matrix(self) -> np.ndarray:
+        """``kron(W_inter, W_intra)`` on the flat worker index
+        ``w = g * n_intra + j``."""
+        return np.kron(self.inter.matrix, self.intra.matrix)
+
+    @property
+    def rho(self) -> float:
+        """Second-largest absolute eigenvalue of the composed W (A2).
+
+        Equals ``max(intra.rho, inter.rho)`` for symmetric doubly-
+        stochastic tiers; computed from the kron so the identity is
+        checked, not assumed.
+        """
+        ev = np.sort(np.abs(np.linalg.eigvalsh(self.matrix)))[::-1]
+        return float(ev[1]) if self.n > 1 else 0.0
+
+    @property
+    def phi(self) -> float:
+        W = self.matrix
+        nz = W[W > 1e-12]
+        return float(nz.min()) if nz.size else 0.0
+
+    @property
+    def t_mix_bound(self) -> float:
+        gap = 1.0 - self.rho
+        if gap <= 0:
+            return float("inf")
+        return float(np.log(4 * self.n) / gap)
+
+    def neighbor_offsets(self) -> Tuple[int, ...]:
+        """Nonzero *inter*-tier offsets — the slow-axis gossip edges.
+
+        On the flat worker index an inter offset ``o`` is the stride
+        ``o * n_intra`` (node g's member j talks to node g+o's member j).
+        """
+        return tuple(o * self.intra.n
+                     for o in self.inter.neighbor_offsets())
+
+    def slack(self, gamma: float) -> "HierarchicalTopology":
+        """Slack on the quantized (inter) tier only: the intra tier is
+        full precision, so Theorem 3's consensus-step damping applies to
+        the slow-axis gossip."""
+        return HierarchicalTopology(intra=self.intra,
+                                    inter=self.inter.slack(gamma))
+
+
+def two_tier(n: int, n_intra: int, inter_name: str = "ring",
+             intra: Topology | None = None, **kw) -> HierarchicalTopology:
+    """Two-tier hierarchy over ``n`` workers in nodes of ``n_intra``.
+
+    The inter tier gets the named topology over ``n // n_intra`` nodes;
+    the intra tier defaults to fully connected (every node averages its
+    members exactly — the reduce-scatter/all-gather the engine executes).
+    ``n_intra = 1`` degenerates to the flat single-tier graph semantics
+    (the engine's bit-exactness reference).
+    """
+    if n_intra < 1 or n % n_intra:
+        raise ValueError(
+            f"n_intra must divide n: got n={n}, n_intra={n_intra}")
+    if intra is None:
+        intra = fully_connected(n_intra)
+    elif intra.n != n_intra:
+        raise ValueError(f"intra topology has n={intra.n}, want {n_intra}")
+    return HierarchicalTopology(intra=intra,
+                                inter=get_topology(inter_name,
+                                                   n // n_intra, **kw))
+
+
 def get_topology(name: str, n: int, **kw) -> Topology:
     if name == "ring":
         return ring(n, **kw)

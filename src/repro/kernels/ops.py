@@ -258,12 +258,20 @@ def moniqua_decode_reduce_stacked(p_self: jax.Array, p_nbrs: jax.Array,
 
 def moniqua_encode_chunk(flat: jax.Array, offset: int, size: int, B,
                          spec: QuantSpec, seed: jax.Array, *,
-                         backend: str) -> jax.Array:
+                         backend: str, idx_base: Optional[int] = None
+                         ) -> jax.Array:
     """Encode the window ``flat[:, offset:offset+size]`` of a stacked flat
-    buffer, with globally-indexed rounding uniforms (``idx_base=offset``)."""
+    buffer, with globally-indexed rounding uniforms (``idx_base=offset``).
+
+    ``idx_base`` overrides the counter base when ``flat`` is itself a
+    window of a larger buffer (a shard plan slices at shard-local offsets
+    but must hash *global* element indices to stay bit-exact against the
+    whole-buffer encode).
+    """
     win = jax.lax.slice_in_dim(flat, offset, offset + size, axis=1)
     return moniqua_encode_stacked(win, B, spec, seed, backend=backend,
-                                  idx_base=offset)
+                                  idx_base=offset if idx_base is None
+                                  else idx_base)
 
 
 def moniqua_decode_reduce_chunk(p_self: jax.Array, p_nbrs: jax.Array,

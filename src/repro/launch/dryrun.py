@@ -92,7 +92,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                mesh=None, algo: str = "moniqua", bits: int = 8,
                wire: str = "moniqua", comm_backend: str = "auto",
                comm_path: str = "auto", chunks: int = 1,
-               bucketed: Optional[bool] = None, telemetry: bool = False,
+               tiers: int = 1, telemetry: bool = False,
                scenario: Optional[str] = None,
                verbose: bool = True, override: Optional[dict] = None,
                rec=None) -> DryrunResult:
@@ -135,7 +135,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                     lowered = _lower_train(model, shape, mesh, ms, rules,
                                            n_workers, algo, bits, wire,
                                            comm_backend, comm_path, chunks,
-                                           bucketed, telemetry)
+                                           tiers, telemetry)
                 elif shape.kind == "prefill":
                     lowered = _lower_prefill(model, shape, mesh, ms, rules)
                 else:
@@ -155,7 +155,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         sim_pred: Dict[str, Any] = {}
         if scenario and shape.kind == "train":
             hp = _hyper(cfg, n_workers, algo, bits, wire, comm_backend,
-                        comm_path, chunks, bucketed, telemetry)
+                        comm_path, chunks, tiers, telemetry)
             with span("dryrun.sim"):
                 sim_pred = _sim_predict(scenario, model, hp, n_workers,
                                         roof)
@@ -213,12 +213,12 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 
 def _hyper(cfg, n_workers, algo, bits, wire="moniqua", comm_backend="auto",
-           comm_path="auto", chunks=1, bucketed=None, telemetry=False):
+           comm_path="auto", chunks=1, tiers=1, telemetry=False):
     topo = ring(n_workers)
     spec = QuantSpec(bits=bits, stochastic=bits > 1)
     return AlgoHyper(topo=topo, codec=MoniquaCodec(spec), theta=2.0,
                      wire=wire, backend=comm_backend, path=comm_path,
-                     chunks=chunks, bucketed=bucketed, telemetry=telemetry)
+                     chunks=chunks, tiers=tiers, telemetry=telemetry)
 
 
 def _sim_predict(scenario_name: str, model, hp, n_workers: int, roof):
@@ -238,10 +238,10 @@ def _sim_predict(scenario_name: str, model, hp, n_workers: int, roof):
         params)
     eng = hp.engine()
     bytes_round = eng.bytes_per_round(X_ab)
-    m = max(len(hp.topo.neighbor_offsets()), 1)
     compute_s = max(roof.bound_s, 1e-9)
     sc = SC.get_scenario(scenario_name, n=n_workers, compute_s=compute_s)
-    trace = SE.simulate_sync_rounds(sc, bytes_round // m, num_rounds=25)
+    trace = SE.simulate_sync_rounds(sc, eng.payload_bytes_per_broadcast(X_ab),
+                                    num_rounds=25)
     return {
         "scenario": sc.name,
         "bytes_per_round": bytes_round,
@@ -253,10 +253,10 @@ def _sim_predict(scenario_name: str, model, hp, n_workers: int, roof):
 
 def _lower_train(model, shape, mesh, ms, rules, n_workers, algo_name, bits,
                  wire="moniqua", comm_backend="auto", comm_path="auto",
-                 chunks=1, bucketed=None, telemetry=False):
+                 chunks=1, tiers=1, telemetry=False):
     algo = get_algorithm(algo_name)
     hp = _hyper(model.cfg, n_workers, algo_name, bits, wire, comm_backend,
-                comm_path, chunks, bucketed, telemetry)
+                comm_path, chunks, tiers, telemetry)
     tcfg = TS.TrainStepConfig(algo=algo_name, sgd=SGDConfig(), lr=0.1,
                               theta=ThetaSchedule(mode="constant", value=2.0))
     step = TS.make_train_step(model, hp, tcfg)
@@ -324,8 +324,11 @@ def main(argv=None) -> int:
     ap.add_argument("--chunks", type=int, default=1,
                     help="staged-round chunk count for the pipelined "
                          "gossip round (1 = barrier round)")
-    ap.add_argument("--per-leaf-comm", action="store_true",
-                    help="deprecated alias for --comm-path per_leaf")
+    ap.add_argument("--tiers", type=int, default=1,
+                    help="two-tier hierarchical gossip: workers per node "
+                         "(1 = flat single-tier; k>1 puts the named "
+                         "topology across n/k nodes with a full-precision "
+                         "reduce inside each)")
     ap.add_argument("--scenario", default=None,
                     help="repro.sim scenario name (incl. contended fabrics "
                          "like oversubscribed-tor / shared-uplink-ring and "
@@ -391,10 +394,8 @@ def main(argv=None) -> int:
                                      algo=args.algo, bits=args.bits,
                                      wire=args.wire,
                                      comm_backend=args.comm_backend,
-                                     comm_path=("per_leaf"
-                                                if args.per_leaf_comm
-                                                else args.comm_path),
-                                     chunks=args.chunks,
+                                     comm_path=args.comm_path,
+                                     chunks=args.chunks, tiers=args.tiers,
                                      telemetry=args.telemetry,
                                      scenario=args.scenario,
                                      override=override, rec=rec)

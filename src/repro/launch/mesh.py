@@ -49,6 +49,19 @@ def make_production_mesh(*, multi_pod: bool = False):
     return _make_mesh(shape, axes)
 
 
+def make_two_tier_mesh(inter: int = 8, intra: int = 4, model: int = 8):
+    """Two-tier gossip fleet: the decentralized worker dimension split into
+    a fast ``intra`` axis (ICI inside a node) and a slow ``inter`` axis
+    (the oversubscribed cross-node fabric).  Worker ``w = g * intra + j``
+    — the intra index varies fastest, matching ``HierarchicalTopology``'s
+    flat worker ordering and the engine's ``reshape(n_inter, n_intra)``
+    staging view, so the TieredPlan's intra reduce lowers to collectives
+    on the ``intra`` axis and the shard gossip to collective-permutes on
+    ``inter``.
+    """
+    return _make_mesh((inter, intra, model), ("inter", "intra", "model"))
+
+
 def make_host_mesh(data: int = 4, model: int = 2, pod: int = 0):
     """Small mesh for subprocess tests (requires forced host devices)."""
     if pod:

@@ -31,11 +31,21 @@ MeshAxes = Tuple[str, ...]
 class ShardingRules:
     mode: str                       # "decentralized" | "hierarchical"
     multi_pod: bool = False
+    tiers: int = 1                  # >1: worker dim spans (inter, intra)
+    intra_axis: str = "intra"       # fast tier (make_two_tier_mesh)
+    inter_axis: str = "inter"       # slow tier
 
     @property
     def worker_axes(self) -> Tuple[str, ...]:
-        """Mesh axes forming the decentralized-worker dimension."""
+        """Mesh axes forming the decentralized-worker dimension.
+
+        Two-tier runs (``tiers > 1``) split it into ``(inter, intra)`` —
+        inter major, intra minor, matching ``HierarchicalTopology``'s
+        flat worker index ``w = g * n_intra + j``.
+        """
         if self.mode == "decentralized":
+            if self.tiers > 1:
+                return (self.inter_axis, self.intra_axis)
             return ("pod", "data") if self.multi_pod else ("data",)
         # hierarchical: workers are pods (leading replica dim only multi-pod)
         return ("pod",) if self.multi_pod else ()
@@ -51,7 +61,10 @@ class ShardingRules:
             # inner (per-worker) batch dim of a stacked training batch
             "batch": ("data",) if self.mode == "hierarchical" else None,
             # leading batch dim of an (unstacked) serving workload
-            "global_batch": ("pod", "data") if self.multi_pod else ("data",),
+            "global_batch": ((self.worker_axes or ("data",))
+                             if self.tiers > 1
+                             else (("pod", "data") if self.multi_pod
+                                   else ("data",))),
             "embed": fsdp,           # residual / d_model dim
             "heads": "model",        # nh * hd flattened or nh
             "kv": "model",           # kv heads (safe_pspec guards divisibility)

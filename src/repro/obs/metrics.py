@@ -46,7 +46,14 @@ The health dict (``round_health_zero`` fixes the pytree structure):
     1.0 while the onebit wire is inside its fp32 warmup phase.
 ``bits_per_param``
     payload bits per model parameter actually shipped per neighbor
-    (trace-time constant from the engine's bytes accounting).
+    (trace-time constant from the engine's bytes accounting).  For tiered
+    engines this is the *slow-axis* (gossip-link) number — the quantity
+    quantization targets.
+``bytes_fast`` / ``bytes_slow``
+    per-tier bytes one worker sends per round (trace-time constants):
+    ``bytes_slow`` the gossip-link payloads (all a single-tier round
+    has), ``bytes_fast`` the intra-node reduce-scatter/all-gather of
+    tiered rounds (0 single-tier).  Mirrors ``BytesLedger``'s split.
 """
 from __future__ import annotations
 
@@ -60,7 +67,8 @@ from repro.core import modulo
 from repro.core.quantizers import QuantSpec
 
 HEALTH_ROUND_KEYS = ("consensus_inf", "headroom", "alias_count",
-                     "ef_residual_l2", "warm", "bits_per_param")
+                     "ef_residual_l2", "warm", "bits_per_param",
+                     "bytes_fast", "bytes_slow")
 HEALTH_KEYS = HEALTH_ROUND_KEYS + ("alias_total",)
 
 
@@ -73,7 +81,8 @@ def round_health_zero() -> Dict[str, jax.Array]:
     z = jnp.zeros((), jnp.float32)
     return {"consensus_inf": z, "headroom": z,
             "alias_count": jnp.zeros((), jnp.int32),
-            "ef_residual_l2": z, "warm": z, "bits_per_param": z}
+            "ef_residual_l2": z, "warm": z, "bits_per_param": z,
+            "bytes_fast": z, "bytes_slow": z}
 
 
 def init_health() -> Dict[str, jax.Array]:

@@ -36,6 +36,15 @@ claims span:
     All workers behind one half-duplex 300 Mbit/s shared medium: the
     maximally contended regime (every transfer, both directions, one
     resource).
+``two-tier-tor``
+    The hierarchical-gossip fabric: nodes of 4 workers on ICI-fast 40
+    Gbit/s NICs, contiguous placement (intra-node traffic never leaves
+    the rack), each node behind a 200 Mbit/s oversubscribed uplink.  The
+    scenario topology is the *slow phase* of a two-tier round: lane
+    offsets ``±n_intra`` — worker ``(g, j)`` ships its owned shard to
+    ``(g±1, j)`` — so every simulated flow crosses a node boundary and
+    contends on the uplinks, while the full-precision intra phase is
+    priced analytically on the NIC term (``bench_hierarchical``).
 ``calibrated-from-bench``
     Links are not datasheet constants but an alpha-beta fit
     (``sim/calibrate.py``) on measured probe times — by default synthetic
@@ -216,6 +225,43 @@ def shared_uplink_ring(n: int = 8, compute_s: float = DEFAULT_COMPUTE_S,
                     "a single resource")
 
 
+def two_tier_tor(n: int = 32, compute_s: float = DEFAULT_COMPUTE_S,
+                 seed: int = 0, n_intra: int = 4) -> Scenario:
+    """Two-tier hierarchy fabric: ICI-fast nodes, oversubscribed uplinks.
+
+    ``n`` workers in contiguous nodes of ``n_intra`` (worker ``w = g *
+    n_intra + j``, matching ``HierarchicalTopology``'s flat index), 40
+    Gbit/s NICs inside a node, one 200 Mbit/s ToR uplink per node.  The
+    scenario's topology is the slow-axis *lane* graph of a tiered round:
+    offsets ``±n_intra``, i.e. member ``j`` of node ``g`` exchanges with
+    member ``j`` of nodes ``g±1`` — every flow crosses a node boundary,
+    so a round's ``2 * n`` shard transfers contend on the ``n/n_intra``
+    uplinks (water-filling).  Single-tier baselines on the same fabric
+    reuse it with a flat ring topology (contiguous placement is the
+    *favorable* placement for them: only seam edges cross).
+    """
+    if n % n_intra:
+        raise ValueError(f"n_intra must divide n: {n} % {n_intra}")
+    nic = gbit(40.0)
+    lanes = Topology("node-lanes", n, (-n_intra, 0, n_intra),
+                     (1 / 3, 1 / 3, 1 / 3))
+    return Scenario(
+        name="two-tier-tor",
+        topo=lanes,
+        network=NetworkModel.homogeneous(alpha_s=10e-6, beta_Bps=nic,
+                                         jitter_s=5e-6),
+        compute=homogeneous(compute_s),
+        seed=seed,
+        fabric=oversubscribed_fabric(n, nic_Bps=nic, uplink_Bps=mbit(200.0),
+                                     num_groups=n // n_intra,
+                                     interleave=False,
+                                     alpha_s=10e-6, jitter_s=5e-6),
+        description="nodes of 4 on 40 Gbit/s ICI behind 200 Mbit/s ToR "
+                    "uplinks, contiguous placement; topology = the "
+                    "slow-axis shard lanes (offsets +/- n_intra) of a "
+                    "two-tier gossip round")
+
+
 # synthetic calibration probes: Fig. 1's worst network (100 Mbit/s, 5 ms)
 # measured at the wire sizes the codec sweep actually ships
 _CAL_TRUE_ALPHA_S = 2 * 5e-3            # two messages' latency per round
@@ -271,6 +317,7 @@ _REGISTRY: Dict[str, Callable[..., Scenario]] = {
     "bandwidth-starved": bandwidth_starved,
     "lan-1gbe-ring": lan_1gbe_ring,
     "oversubscribed-tor": oversubscribed_tor,
+    "two-tier-tor": two_tier_tor,
     "shared-uplink-ring": shared_uplink_ring,
     "calibrated-from-bench": calibrated_from_bench,
 }

@@ -56,7 +56,9 @@ class TrainerConfig:
     chunks: int = 1             # staged-round chunk count (1 = barrier)
     overlap: str = "none"       # step-level overlap: none | stale (moniqua)
     warmup: int = 16            # onebit wire: fp32 rounds before 1-bit+EF
-    bucketed: Optional[bool] = None   # deprecated alias for comm_path=
+    tiers: int = 1              # 1 = flat gossip; k>1 = two-tier hierarchy
+                                #   (nodes of k workers, tc.topology across
+                                #   nodes, full-precision reduce inside)
     telemetry: bool = False     # round-health obs_* metrics (repro.obs);
                                 #   static flag — off costs nothing under jit
     log_jsonl: Optional[str] = None   # schema-versioned run log (repro.obs.
@@ -75,7 +77,7 @@ def build_hyper(tc: TrainerConfig) -> AlgoHyper:
                      gamma=tc.gamma, wire=tc.wire, backend=tc.backend,
                      path=tc.comm_path, chunks=tc.chunks, overlap=tc.overlap,
                      warmup=tc.warmup, telemetry=tc.telemetry,
-                     bucketed=tc.bucketed)
+                     tiers=tc.tiers)
 
 
 class Trainer:
@@ -92,7 +94,8 @@ class Trainer:
             sgd=SGDConfig(momentum=tc.momentum, weight_decay=tc.weight_decay),
             lr=tc.lr,
             theta=ThetaSchedule(mode="constant", value=tc.theta,
-                                n=tc.n_workers, rho=self.hp.topo.rho))
+                                n=tc.n_workers,
+                                rho=self.hp.comm_topo().rho))
         self.pipeline = SyntheticLMPipeline(model, shape, tc.n_workers,
                                             seed=tc.seed)
         # warm the bucket-layout cache from the abstract state so the flat

@@ -103,3 +103,45 @@ def test_rejects_mismatched_worker_axes_and_empty_trees():
         bucket.layout_of({"a": jnp.zeros((8, 3)), "b": jnp.zeros((4, 3))}, 1)
     with pytest.raises(ValueError):
         bucket.layout_of({}, 1)
+
+
+# -- shard windows (two-tier owned shards) ----------------------------------
+
+def test_shards_partition_buffer_in_order_and_slot_aligned():
+    X = _tree()
+    layout = bucket.layout_of(X, 4)
+    whole = layout.shard(1, 0)
+    assert (whole.offset, whole.size) == (0, layout.padded_elems)
+    assert whole.slots == layout.slots
+    for k in (2, 3, 4):
+        shards = [layout.shard(k, i) for i in range(k)]
+        off = 0
+        for s in shards:
+            assert s.offset == off
+            assert s.size == sum(sl.padded_size for sl in s.slots)
+            off += s.size
+        assert off == layout.padded_elems
+        # slot-aligned: shard slots concatenate back to the layout's
+        assert tuple(sl for s in shards for sl in s.slots) == layout.slots
+
+
+def test_shards_pad_with_empty_windows_beyond_leaf_count():
+    X = _tree()   # 4 leaves
+    layout = bucket.layout_of(X, 1)
+    shards = [layout.shard(6, i) for i in range(6)]
+    assert sum(s.size for s in shards) == layout.padded_elems
+    for s in shards[4:]:
+        assert (s.size, s.slots) == (0, ())
+        assert s.offset == layout.padded_elems
+
+
+def test_shard_memoized_and_validated():
+    X = _tree()
+    layout = bucket.layout_of(X, 1)
+    assert layout.shard(2, 1) is layout.shard(2, 1)
+    with pytest.raises(ValueError):
+        layout.shard(0, 0)
+    with pytest.raises(ValueError):
+        layout.shard(2, 2)
+    with pytest.raises(ValueError):
+        layout.shard(2, -1)

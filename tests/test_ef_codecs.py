@@ -49,12 +49,12 @@ def _tree(n=8, seed=0, scale=0.3):
             "b": jax.random.normal(k2, (n, 5)) * scale}
 
 
-def _engine(wire, bits=4, stochastic=False, warmup=16, bucketed=True):
+def _engine(wire, bits=4, stochastic=False, warmup=16, path="bucketed"):
     return CommEngine(ring(8),
                       make_wire(wire, QuantSpec(bits=bits,
                                                 stochastic=stochastic),
                                 warmup=warmup),
-                      backend="jnp", bucketed=bucketed)
+                      backend="jnp", path=path)
 
 
 def _seeded_state(eng, X, seed=42, scale=0.1):

@@ -10,8 +10,8 @@ The four contracts from the engine design (docs/architecture.md):
    path is compared as written, i.e. eagerly; under re-jit XLA may legally
    FMA-contract and drift by 1 ulp, checked separately with a tight bound).
 3. BytesLedger: 1-bit Moniqua payloads are exactly 1/32 of f32 bytes.
-4. ``CommEngine(bucketed=True)`` (the default flat-buffer round,
-   comm/bucket.py) is **bit-exact** with ``bucketed=False`` for the
+4. ``CommEngine(path="bucketed")`` (the default flat-buffer round,
+   comm/bucket.py) is **bit-exact** with ``path="per_leaf"`` for the
    Moniqua wire — same payload bits, same mixed output — on both
    backends, and its bytes accounting (bytes_per_round == ledger == the
    bytes the simulator prices) matches the per-leaf sum.
@@ -188,9 +188,9 @@ def test_bucketed_matches_per_leaf_bit_exact(bits, backend):
     X = _mixed_tree()
     key = jax.random.PRNGKey(11)
     per_leaf = CommEngine(ring(8), MoniquaWire(spec), backend=backend,
-                          bucketed=False).mix(X, theta=2.0, key=key).x
+                          path="per_leaf").mix(X, theta=2.0, key=key).x
     bucketed = CommEngine(ring(8), MoniquaWire(spec), backend=backend,
-                          bucketed=True).mix(X, theta=2.0, key=key).x
+                          path="bucketed").mix(X, theta=2.0, key=key).x
     for k in X:
         np.testing.assert_array_equal(np.asarray(per_leaf[k]),
                                       np.asarray(bucketed[k]))
@@ -223,7 +223,7 @@ def test_bucketed_stochastic_payload_bits_match_per_leaf(backend):
 
 def test_bucketed_full_precision_is_exact_mix():
     X = {"w": _stacked(), "b": _stacked(d=17, seed=1)}
-    out = CommEngine(ring(8), FullPrecisionWire(), bucketed=True).mix(X).x
+    out = CommEngine(ring(8), FullPrecisionWire(), path="bucketed").mix(X).x
     ref = gossip.mix(X, ring(8))
     for k in X:
         np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(ref[k]))
@@ -234,14 +234,14 @@ def test_bucketed_full_precision_mixed_dtype_is_exact_mix():
     falls back to the per-leaf circulant mix there, because f32 staging
     would accumulate bf16 rolls in f32 and drift from gossip.mix."""
     X = {"w": _stacked(), "c": _stacked(d=24, seed=5).astype(jnp.bfloat16)}
-    eng = CommEngine(ring(8), FullPrecisionWire(), bucketed=True)
+    eng = CommEngine(ring(8), FullPrecisionWire(), path="bucketed")
     out = eng.mix(X).x
     ref = gossip.mix(X, ring(8))
     for k in X:
         np.testing.assert_array_equal(np.asarray(out[k], np.float32),
                                       np.asarray(ref[k], np.float32))
     # and the bytes account the per-leaf payloads (bf16 ships 2 bytes)
-    per_leaf = CommEngine(ring(8), FullPrecisionWire(), bucketed=False)
+    per_leaf = CommEngine(ring(8), FullPrecisionWire(), path="per_leaf")
     assert eng.bytes_per_round(X) == per_leaf.bytes_per_round(X)
     assert eng.bytes_per_round(X) == (300 * 4 + 24 * 2) * 2
 
@@ -249,7 +249,7 @@ def test_bucketed_full_precision_mixed_dtype_is_exact_mix():
 def test_bucketed_qsgd_close_to_exact():
     X = {"w": _stacked(scale=0.25), "b": _stacked(d=17, seed=1, scale=0.25)}
     out = CommEngine(ring(8), QSGDWire(QuantSpec(bits=8)), backend="jnp",
-                     bucketed=True).mix(X, key=jax.random.PRNGKey(2)).x
+                     path="bucketed").mix(X, key=jax.random.PRNGKey(2)).x
     ref = gossip.mix(X, ring(8))
     mx = max(float(jnp.max(jnp.abs(X[k]))) for k in X)
     tol = 2.0 * mx * (2.0 / 256.0) + 1e-4
@@ -260,7 +260,7 @@ def test_bucketed_qsgd_close_to_exact():
 def test_bucketed_mix_under_jit():
     spec = QuantSpec(bits=4)
     eng = CommEngine(ring(8), MoniquaWire(spec), backend="jnp",
-                     bucketed=True)
+                     path="bucketed")
     X = _mixed_tree()
     key = jax.random.PRNGKey(0)
     eager = eng.mix(X, theta=2.0, key=key).x
@@ -280,7 +280,7 @@ def test_bucketed_bytes_ledger_and_sim_agree():
     topo = ring(8)
     X = {"a": jnp.zeros((8, 100)), "b": jnp.zeros((8, 3, 7))}
     eng = CommEngine(topo, MoniquaWire(QuantSpec(bits=2)), backend="jnp",
-                     bucketed=True)
+                     path="bucketed")
     led = gossip.BytesLedger()
     eng.mix(X, theta=2.0, key=jax.random.PRNGKey(0), ledger=led)
     m = len(topo.neighbor_offsets())
@@ -288,7 +288,7 @@ def test_bucketed_bytes_ledger_and_sim_agree():
     # identical to the per-leaf accounting: (25 + 6) bytes x 2 neighbors
     assert eng.bytes_per_round(X) == (25 + 6) * 2
     per_leaf = CommEngine(topo, MoniquaWire(QuantSpec(bits=2)),
-                          backend="jnp", bucketed=False)
+                          backend="jnp", path="per_leaf")
     assert eng.bytes_per_round(X) == per_leaf.bytes_per_round(X)
     sc = SC.get_scenario("lan-10gbe-ring", n=8)
     trace = SE.simulate_sync_rounds(sc, eng.bytes_per_round(X) // m,
@@ -305,14 +305,14 @@ def test_bucketed_qsgd_keeps_per_tensor_scales():
     X = {"w": jax.random.normal(k1, (8, 100)) * 100.0,
          "b": jax.random.normal(k2, (8, 32)) * 0.01}
     eng = CommEngine(ring(8), QSGDWire(QuantSpec(bits=8)), backend="jnp",
-                     bucketed=True)
+                     path="bucketed")
     out = eng.mix(X, key=jax.random.PRNGKey(3)).x
     ref = gossip.mix(X, ring(8))
     # error on the small leaf is bounded by ITS scale, not the big one's
     err_b = float(jnp.max(jnp.abs(out["b"] - ref["b"])))
     assert err_b <= 2.0 * 0.01 * 8.0 * (2.0 / 256.0) + 1e-5
     per_leaf = CommEngine(ring(8), QSGDWire(QuantSpec(bits=8)),
-                          backend="jnp", bucketed=False)
+                          backend="jnp", path="per_leaf")
     assert eng.bytes_per_round(X) == per_leaf.bytes_per_round(X)
     assert eng.bytes_per_round(X) == (100 + 4 + 32 + 4) * 2
 
@@ -336,20 +336,20 @@ def test_deterministic_spec_key_none_is_explicit_constant():
     assert int(kops._key_to_seed(None)) == kops.NO_KEY_SEED
     spec = QuantSpec(bits=4, stochastic=False)
     X = _stacked()
-    for bucketed in (False, True):
+    for path in ("per_leaf", "bucketed"):
         eng = CommEngine(ring(8), MoniquaWire(spec), backend="jnp",
-                         bucketed=bucketed)
+                         path=path)
         a = eng.mix(X, theta=2.0, key=None).x
         b = eng.mix(X, theta=2.0, key=jax.random.PRNGKey(123)).x
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
-@pytest.mark.parametrize("bucketed", [False, True])
+@pytest.mark.parametrize("path", ["per_leaf", "bucketed"])
 @pytest.mark.parametrize("wire", ["moniqua", "qsgd"])
-def test_stochastic_spec_key_none_raises(bucketed, wire):
+def test_stochastic_spec_key_none_raises(path, wire):
     eng = CommEngine(ring(8), make_wire(wire, QuantSpec(bits=4,
                                                         stochastic=True)),
-                     backend="jnp", bucketed=bucketed)
+                     backend="jnp", path=path)
     with pytest.raises(ValueError, match="PRNG key"):
         eng.mix(_stacked(), theta=2.0, key=None)
 
@@ -468,11 +468,11 @@ EF_CASES = [("ef_qsgd", False), ("ef_qsgd", True),
             ("onebit", False), ("onebit", True)]
 
 
-def _ef_engine(wire, stochastic, backend="jnp", bucketed=True, warmup=2):
+def _ef_engine(wire, stochastic, backend="jnp", path="bucketed", warmup=2):
     spec = QuantSpec(bits=4 if wire == "ef_qsgd" else 1,
                      stochastic=stochastic)
     return CommEngine(ring(8), make_wire(wire, spec, warmup=warmup),
-                      backend=backend, bucketed=bucketed)
+                      backend=backend, path=path)
 
 
 @pytest.mark.parametrize("wire,stochastic", EF_CASES)
@@ -484,8 +484,8 @@ def test_ef_bucketed_matches_per_leaf_bit_exact(wire, stochastic, backend):
     exercises rounds on both sides of the onebit switch).  The residual
     living in the canonical flat bucket domain is what makes this hold."""
     Xa = Xb = _mixed_tree()
-    a = _ef_engine(wire, stochastic, backend, bucketed=True)
-    b = _ef_engine(wire, stochastic, backend, bucketed=False)
+    a = _ef_engine(wire, stochastic, backend, path="bucketed")
+    b = _ef_engine(wire, stochastic, backend, path="per_leaf")
     sa, sb = a.init_wire_state(Xa), b.init_wire_state(Xb)
     for k in range(4):
         key = jax.random.PRNGKey(90 + k)
@@ -551,7 +551,7 @@ def test_ef_bytes_ledger_and_sim_agree(wire, nbytes):
     X = {"a": jnp.zeros((8, 100)), "b": jnp.zeros((8, 3, 7))}
     bits = 4 if wire == "ef_qsgd" else 1
     eng = CommEngine(topo, make_wire(wire, QuantSpec(bits=bits)),
-                     backend="jnp", bucketed=True)
+                     backend="jnp", path="bucketed")
     led = gossip.BytesLedger()
     st = eng.init_wire_state(X)
     eng.mix(X, key=jax.random.PRNGKey(0), ledger=led, state=st)
@@ -559,7 +559,7 @@ def test_ef_bytes_ledger_and_sim_agree(wire, nbytes):
     assert eng.payload_bytes_per_broadcast(X) == nbytes
     assert led.bytes_per_worker == eng.bytes_per_round(X) == nbytes * m
     per_leaf = CommEngine(topo, make_wire(wire, QuantSpec(bits=bits)),
-                          backend="jnp", bucketed=False)
+                          backend="jnp", path="per_leaf")
     assert per_leaf.bytes_per_round(X) == eng.bytes_per_round(X)
     sc = SC.get_scenario("lan-10gbe-ring", n=8)
     trace = SE.simulate_sync_rounds(sc, eng.bytes_per_round(X) // m,
@@ -574,10 +574,10 @@ def test_onebit_warmup_payload_is_f32():
 
 
 @pytest.mark.parametrize("wire", ["ef_qsgd", "onebit"])
-@pytest.mark.parametrize("bucketed", [False, True])
-def test_stateful_mix_without_state_raises(wire, bucketed):
+@pytest.mark.parametrize("path", ["per_leaf", "bucketed"])
+def test_stateful_mix_without_state_raises(wire, path):
     eng = CommEngine(ring(8), make_wire(wire, QuantSpec(bits=4)),
-                     backend="jnp", bucketed=bucketed)
+                     backend="jnp", path=path)
     with pytest.raises(ValueError, match="stateful"):
         eng.mix(_stacked(), key=jax.random.PRNGKey(0))
     with pytest.raises(ValueError, match="stateful"):

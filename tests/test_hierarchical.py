@@ -1,0 +1,200 @@
+"""Two-tier hierarchical gossip: the TieredPlan round contract.
+
+The load-bearing invariant is *trivial-tier bit-exactness*: with an intra
+tier of size 1 the tiered round (intra reduce -> owned-shard gossip ->
+all-gather) must be bitwise identical to the single-tier bucketed round on
+the inter topology — outputs AND WireState carries, every wire, both
+backends.  That equality is what lets the tiered engine inherit the
+single-tier theory (theta bounds, EF residual analysis) unchanged.
+
+Also covered: the executed nontrivial round equals the composed
+``kron(W_inter, J_k/k)`` matrix, owned-shard byte accounting (slow-axis
+payloads shrink ``n_intra``-fold, the ledger splits tiers), ``path="auto"``
+resolving on the *shard's* leaf census, ``AlgoHyper.tiers`` plumbing, and
+the guards on single-tier-only entry points.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm.engine import CommEngine, make_wire
+from repro.comm.gossip import BytesLedger
+from repro.core.quantizers import QuantSpec
+from repro.core.topology import fully_connected, ring, two_tier
+from repro.core.algorithms import AlgoHyper
+from repro.core.moniqua import MoniquaCodec
+
+THETA = 2.0
+WIRES = [("full", 32), ("moniqua", 2), ("qsgd", 4), ("ef_qsgd", 4),
+         ("onebit", 1)]
+BACKENDS = ("jnp", "pallas")
+
+
+def _wire(name, bits):
+    return make_wire(name, QuantSpec(bits=min(bits, 8),
+                                     stochastic=1 < bits <= 8))
+
+
+def _tree(n=8, scale=0.5):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    return {
+        "a": scale * jax.random.normal(ks[0], (n, 37), jnp.float32),
+        "b": scale * jax.random.normal(ks[1], (n, 5, 11), jnp.float32),
+        "c": scale * jax.random.normal(ks[2], (n, 3), jnp.float32),
+    }
+
+
+def _assert_trees_equal(x, y):
+    for a, b in zip(jax.tree.leaves(x), jax.tree.leaves(y)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("wire_name,bits", WIRES,
+                         ids=[f"{w}-{b}b" for w, b in WIRES])
+def test_trivial_tier_bitexact_vs_single_tier(wire_name, bits, backend):
+    """two_tier(n, 1) rounds == single-tier bucketed rounds, bitwise,
+    iterated so WireState carries propagate through the comparison."""
+    n, rounds = 8, 3
+    X0 = _tree(n)
+    single = CommEngine(ring(n), _wire(wire_name, bits), backend,
+                        path="bucketed")
+    tiered = CommEngine(two_tier(n, 1), _wire(wire_name, bits), backend)
+    assert tiered.tiered and not single.tiered
+    Xs = Xt = X0
+    ss = single.init_wire_state(X0) if single.stateful else None
+    st = tiered.init_wire_state(X0) if tiered.stateful else None
+    keys = jax.random.split(jax.random.PRNGKey(11), rounds)
+    for t in range(rounds):
+        rs = single.mix(Xs, theta=THETA, key=keys[t], state=ss)
+        rt = tiered.mix(Xt, theta=THETA, key=keys[t], state=st)
+        _assert_trees_equal(rs.x, rt.x)
+        if single.stateful:
+            _assert_trees_equal(rs.state, rt.state)
+        Xs, Xt, ss, st = rs.x, rt.x, rs.state, rt.state
+
+
+@pytest.mark.parametrize("n,n_intra", [(8, 2), (8, 4), (12, 3)])
+def test_full_wire_round_equals_kron_matrix(n, n_intra):
+    """The executed round (intra mean -> shard gossip -> all-gather) with
+    the full-precision wire IS multiplication by kron(W_inter, J_k/k)."""
+    hier = two_tier(n, n_intra)
+    eng = CommEngine(hier, _wire("full", 32), "jnp")
+    X = _tree(n)
+    out = eng.mix(X, key=jax.random.PRNGKey(0)).x
+    W = hier.matrix
+    for k in X:
+        flat = np.asarray(X[k], np.float64).reshape(n, -1)
+        want = (W @ flat).reshape(X[k].shape)
+        np.testing.assert_allclose(np.asarray(out[k], np.float64), want,
+                                   atol=1e-5)
+
+
+def test_tiered_slow_axis_bytes_shrink_n_intra_fold():
+    X = _tree(32)
+    wire = _wire("moniqua", 1)
+    single = CommEngine(ring(32), wire, "jnp", path="bucketed")
+    tiered = CommEngine(two_tier(32, 4), wire, "jnp")
+    ps = single.payload_bytes_per_broadcast(X)
+    pt = tiered.payload_bytes_per_broadcast(X)
+    assert pt == -(-ps // 4)
+    # abstract trees must give identical accounting (dryrun/bench contract)
+    Xa = jax.eval_shape(lambda: X)
+    assert tiered.payload_bytes_per_broadcast(Xa) == pt
+    assert tiered.fast_bytes_per_round(Xa) == tiered.fast_bytes_per_round(X)
+    # fast phase ships 2*(k-1)/k of the staging buffer at stage dtype
+    padded = tiered.layout(X).padded_elems
+    assert tiered.fast_bytes_per_round(X) == 2 * 4 * padded * 3 // 4
+    assert single.fast_bytes_per_round(X) == 0
+
+
+def test_ledger_splits_fast_and_slow_tiers():
+    X = _tree(8)
+    tiered = CommEngine(two_tier(8, 2), _wire("moniqua", 2), "jnp")
+    led = BytesLedger()
+    tiered.mix(X, theta=THETA, key=jax.random.PRNGKey(0), ledger=led)
+    m = len(tiered.gossip_topo.neighbor_offsets())
+    assert led.bytes_slow == tiered.payload_bytes_per_broadcast(X) * m
+    assert led.bytes_fast == tiered.fast_bytes_per_round(X)
+    assert led.bytes_per_worker == led.bytes_slow + led.bytes_fast
+    # single-tier rounds account everything as slow-axis (totals unchanged)
+    led1 = BytesLedger()
+    single = CommEngine(ring(8), _wire("moniqua", 2), "jnp", path="bucketed")
+    single.mix(X, theta=THETA, key=jax.random.PRNGKey(0), ledger=led1)
+    assert led1.bytes_fast == 0 and led1.bytes_slow == led1.bytes_per_worker
+
+
+def test_tiered_wire_state_is_owned_shard_sized():
+    X = _tree(8)
+    single = CommEngine(ring(8), _wire("onebit", 1), "jnp", path="bucketed")
+    tiered = CommEngine(two_tier(8, 2), _wire("onebit", 1), "jnp")
+    assert tiered.wire_state_bytes(X) < single.wire_state_bytes(X)
+    padded = tiered.layout(X).padded_elems
+    assert tiered.wire_state_bytes(X) == -(-padded // 2) * 4 + 4
+
+
+def test_auto_path_resolves_on_shard_census():
+    """``path="auto"`` with a shard window must resolve on the shard's own
+    leaf census — bitwise the same verdict as a standalone model holding
+    exactly those leaves — not inherit the whole model's."""
+    n = 8
+    X = {
+        "big": jnp.zeros((n, 4096), jnp.float32),
+        **{f"t{i}": jnp.zeros((n, 3), jnp.float32) for i in range(12)},
+    }
+    wire = _wire("moniqua", 2)
+    eng = CommEngine(two_tier(n, 2), wire, "jnp", path="auto")
+    layout = eng.layout(X)
+    flat_eng = CommEngine(ring(n), wire, "jnp", path="auto")
+    for i in range(2):
+        sh = layout.shard(2, i)
+        sub = {f"l{j}": jnp.zeros((n,) + s.shape, s.dtype)
+               for j, s in enumerate(sh.slots)}
+        want = flat_eng.resolved_path(sub)
+        assert eng.resolved_path(None, shard=sh) == want
+    # whole-buffer shard == whole-model resolution (the degenerate window)
+    whole = layout.shard(1, 0)
+    assert eng.resolved_path(None, shard=whole) == flat_eng.resolved_path(X)
+
+
+def test_single_tier_only_entry_points_raise():
+    X = _tree(8)
+    eng = CommEngine(two_tier(8, 2), _wire("moniqua", 2), "jnp")
+    with pytest.raises(ValueError):
+        eng.round_plan(X, theta=THETA, key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        eng.init_gossip_carry(X)
+    with pytest.raises(ValueError):
+        eng.neighbor_sum(X, lambda x: x)
+    with pytest.raises(ValueError):
+        eng.self_weight()
+    with pytest.raises(ValueError):   # moniqua tiered round needs theta
+        eng.mix(X, key=jax.random.PRNGKey(0))
+
+
+def test_slack_applies_to_inter_tier_only():
+    hier = two_tier(8, 2)
+    slacked = hier.slack(0.5)
+    np.testing.assert_allclose(slacked.intra.matrix, hier.intra.matrix)
+    np.testing.assert_allclose(
+        slacked.inter.matrix,
+        0.5 * hier.inter.matrix + 0.5 * np.eye(4), atol=1e-12)
+    # neighbor offsets stride by n_intra on the flat index
+    assert two_tier(32, 4).neighbor_offsets() == (-4, 4)
+
+
+def test_algo_hyper_tiers_builds_hierarchy():
+    hp = AlgoHyper(topo=ring(8), codec=MoniquaCodec(QuantSpec(bits=2)),
+                   theta=THETA, tiers=4)
+    hier = hp.comm_topo()
+    assert hier.n == 8 and hier.n_intra == 4
+    assert hier.inter.name == "ring" and hier.inter.n == 2
+    assert hier.intra.matrix == pytest.approx(fully_connected(4).matrix)
+    # tiers=1 stays flat; slack on the flat topo is replayed on the inter
+    assert AlgoHyper(topo=ring(8), codec=MoniquaCodec(QuantSpec(bits=2)),
+                     theta=THETA).comm_topo() is not None
+    hp_s = dataclasses.replace(hp, topo=ring(8).slack(0.5))
+    assert hp_s.comm_topo().inter.name.endswith("slack0.5")

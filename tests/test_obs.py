@@ -48,13 +48,13 @@ def _tree(scale=0.02):
                                                       seed=1)}
 
 
-def _engine(wire="moniqua", bits=8, backend="jnp", bucketed=True,
+def _engine(wire="moniqua", bits=8, backend="jnp", path="bucketed",
             telemetry=False, warmup=2, n=8):
     spec = QuantSpec(bits=bits, stochastic=bits > 1)
     return CommEngine(ring(n), make_wire(wire, spec, warmup=warmup)
                       if wire in ("ef_qsgd", "onebit")
                       else make_wire(wire, spec),
-                      backend=backend, bucketed=bucketed,
+                      backend=backend, path=path,
                       telemetry=telemetry)
 
 
@@ -62,15 +62,15 @@ def _engine(wire="moniqua", bits=8, backend="jnp", bucketed=True,
 # 1. observational purity: outputs bit-exact with telemetry on/off
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("bucketed", [True, False])
+@pytest.mark.parametrize("path", ["bucketed", "per_leaf"])
 @pytest.mark.parametrize("wire,bits", [("full", 32), ("moniqua", 8),
                                        ("moniqua", 1), ("qsgd", 4)])
-def test_stateless_mix_bit_exact_on_off(wire, bits, bucketed):
+def test_stateless_mix_bit_exact_on_off(wire, bits, path):
     X = _tree()
     key = jax.random.PRNGKey(3)
     kw = dict(theta=2.0, key=key) if wire != "full" else {}
-    off = _engine(wire, bits, bucketed=bucketed).mix(X, **kw).x
-    r = _engine(wire, bits, bucketed=bucketed, telemetry=True).mix(X, **kw)
+    off = _engine(wire, bits, path=path).mix(X, **kw).x
+    r = _engine(wire, bits, path=path, telemetry=True).mix(X, **kw)
     on, health = r.x, r.health
     for k in X:
         np.testing.assert_array_equal(np.asarray(off[k]), np.asarray(on[k]))
@@ -78,14 +78,14 @@ def test_stateless_mix_bit_exact_on_off(wire, bits, bucketed):
     assert health["alias_count"].dtype == jnp.int32
 
 
-@pytest.mark.parametrize("bucketed", [True, False])
+@pytest.mark.parametrize("path", ["bucketed", "per_leaf"])
 @pytest.mark.parametrize("wire", ["ef_qsgd", "onebit"])
-def test_stateful_mix_bit_exact_on_off(wire, bucketed):
+def test_stateful_mix_bit_exact_on_off(wire, path):
     """3 iterated rounds (crossing the onebit warmup switch): outputs AND
     the carried WireState are untouched by the telemetry flag."""
     Xa = Xb = _tree()
-    a = _engine(wire, 4, bucketed=bucketed)
-    b = _engine(wire, 4, bucketed=bucketed, telemetry=True)
+    a = _engine(wire, 4, path=path)
+    b = _engine(wire, 4, path=path, telemetry=True)
     sa, sb = a.init_wire_state(Xa), b.init_wire_state(Xb)
     for k in range(3):
         key = jax.random.PRNGKey(40 + k)
@@ -153,9 +153,9 @@ def test_health_invariant_across_paths_and_backends(bits):
     key = jax.random.PRNGKey(11)
     ref = None
     for backend in ("jnp", "pallas"):
-        for bucketed in (True, False):
+        for path in ("bucketed", "per_leaf"):
             h = _engine("moniqua", bits, backend=backend,
-                        bucketed=bucketed, telemetry=True).mix(
+                        path=path, telemetry=True).mix(
                             X, theta=2.0, key=key).health
             h = {k: np.asarray(v) for k, v in h.items()}
             if ref is None:
@@ -163,7 +163,7 @@ def test_health_invariant_across_paths_and_backends(bits):
                 continue
             for k in M.HEALTH_ROUND_KEYS:
                 np.testing.assert_array_equal(
-                    h[k], ref[k], err_msg=f"{k} @ {backend}/{bucketed}")
+                    h[k], ref[k], err_msg=f"{k} @ {backend}/{path}")
 
 
 # ---------------------------------------------------------------------------

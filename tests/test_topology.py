@@ -104,3 +104,36 @@ def test_get_topology_dispatch():
         get_topology("nope", 4)
     with pytest.raises(ValueError):
         get_topology("torus", 15)
+
+
+# -- two-tier hierarchy (kron composition) ----------------------------------
+
+def test_two_tier_kron_doubly_stochastic_and_rho_identity():
+    """kron(W_inter, W_intra) stays doubly stochastic and its rho is the
+    max of the tier rhos (eigenvalues of a kron are pairwise products)."""
+    from repro.core.topology import two_tier
+    hier = two_tier(32, 4)
+    W = hier.matrix
+    np.testing.assert_allclose(W.sum(axis=0), 1.0, atol=1e-9)
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-9)
+    np.testing.assert_allclose(W, W.T, atol=1e-12)
+    assert hier.rho == pytest.approx(
+        max(hier.intra.rho, hier.inter.rho), abs=1e-9)
+
+
+@pytest.mark.parametrize("n_inter,n_intra,expected", [
+    # ring-of-rings: rho = max(rho(ring(n_inter)), rho(ring(n_intra)))
+    (4, 2, 1.0 / 3.0),
+    (4, 4, 1.0 / 3.0),
+    (8, 4, 1.0 / 3.0 + (2.0 / 3.0) * np.cos(np.pi / 4.0)),
+], ids=["4x2", "4x4", "8x4"])
+def test_two_tier_ring_of_rings_rho_regression(n_inter, n_intra, expected):
+    """Closed-form ring eigenvalues 1/3 + (2/3) cos(2 pi k / n) pin the
+    numerically computed kron rho — a regression against the spectral-gap
+    math the theta schedule and t_mix bounds consume."""
+    from repro.core.topology import ring, two_tier
+    hier = two_tier(n_inter * n_intra, n_intra, intra=ring(n_intra))
+    assert hier.name == f"ring{n_inter}xring{n_intra}"
+    assert hier.rho == pytest.approx(expected, abs=1e-9)
+    assert hier.t_mix_bound == pytest.approx(
+        np.log(4 * n_inter * n_intra) / (1.0 - expected), rel=1e-9)

@@ -55,6 +55,18 @@ reference-winning cells must not regress more than ``--tol`` below the
 (capped) committed win.  Overlap checks run only when the overlap smoke
 file exists (``--overlap-smoke``).
 
+It also gates the two-tier hierarchy trajectory (``BENCH_hierarchical.json``,
+from ``benchmarks/bench_hierarchical.py``): every trivial-tier bit-exactness
+row (five wires x both backends, WireState carries included) must be ``true``
+in BOTH files — the tiered round is a schedule/placement change and any
+numeric drift against the single-tier reference is a hard failure — every
+accounting row must show slow-axis bytes <= (1/n_intra + eps) of the
+single-tier bytes (the owned-shard contract; ratios are shape math, so they
+hold in smoke and full alike), and the committed reference must carry a
+>= 70B-param headline whose two-tier wall-clock-to-target beats single-tier
+1-bit on the same oversubscribed fabric.  Hierarchy checks run only when the
+hierarchy smoke file exists (``--hier-smoke``).
+
 Usage:  python tools/check_bench.py \\
             [--smoke BENCH_network_sim.smoke.json] \\
             [--ref BENCH_network_sim.json] \\
@@ -63,7 +75,9 @@ Usage:  python tools/check_bench.py \\
             [--mem-smoke BENCH_memory_overhead.smoke.json] \\
             [--mem-ref BENCH_memory_overhead.json] \\
             [--overlap-smoke BENCH_overlap.smoke.json] \\
-            [--overlap-ref BENCH_overlap.json] [--tol 0.25]
+            [--overlap-ref BENCH_overlap.json] \\
+            [--hier-smoke BENCH_hierarchical.smoke.json] \\
+            [--hier-ref BENCH_hierarchical.json] [--tol 0.25]
 """
 from __future__ import annotations
 
@@ -285,6 +299,64 @@ def check_overlap(smoke: dict, ref: dict, tol: float, errors: list) -> None:
               "configs [ok]")
 
 
+# the hierarchy gate: owned-shard slow-axis contract + >= 70B headline
+HIER_RATIO_EPS = 1e-3
+HIER_MIN_PARAMS = 70e9
+# five wires x two backends: a shrinking bit-exactness matrix must fail
+HIER_MIN_BITEXACT_ROWS = 10
+
+
+def check_hierarchical(smoke: dict, ref: dict, tol: float,
+                       errors: list) -> None:
+    """BENCH_hierarchical gate: trivial-tier rounds bitwise == single-tier
+    (both files, all wires/backends incl. WireState), slow-axis bytes
+    <= (1/n_intra + eps) of single-tier in every accounting row, and the
+    committed reference keeps a >= 70B headline with a two-tier
+    wall-clock-to-target win on the contended fabric."""
+    for tag, d in (("ref", ref), ("smoke", smoke)):
+        rows = d.get("bitexact", [])
+        if len(rows) < HIER_MIN_BITEXACT_ROWS:
+            errors.append(f"hierarchy {tag}: only {len(rows)} bitexact rows "
+                          f"(need >= {HIER_MIN_BITEXACT_ROWS}: five wires "
+                          "x two backends)")
+        bad = [r for r in rows if not r["bitexact"]]
+        for r in bad:
+            errors.append(f"hierarchy {tag}: {r['wire']}/{r['backend']} "
+                          "trivial-tier round is NOT bit-exact vs "
+                          "single-tier")
+        if rows and not bad:
+            wires = len({r["wire"] for r in rows})
+            print(f"hierarchy {tag}: {len(rows)} bitexact rows "
+                  f"({wires} wires) all true [ok]")
+        for r in d.get("table", []):
+            cap = 1.0 / r["n_intra"] + HIER_RATIO_EPS
+            status = "FAIL" if r["slow_bytes_ratio"] > cap else "ok"
+            print(f"hierarchy {tag}: {r['config']} slow-bytes ratio "
+                  f"{r['slow_bytes_ratio']:.4f} cap {cap:.4f} [{status}]")
+            if r["slow_bytes_ratio"] > cap:
+                errors.append(f"hierarchy {tag}: {r['config']} slow-axis "
+                              f"bytes ratio {r['slow_bytes_ratio']:.4f} "
+                              f"exceeds 1/n_intra + eps = {cap:.4f} — the "
+                              "owned-shard contract is broken")
+
+    head = ref.get("headline") or {}
+    if not head:
+        errors.append("hierarchy reference has no headline row")
+        return
+    if head.get("params", 0) < HIER_MIN_PARAMS:
+        errors.append(f"hierarchy reference headline is {head.get('params')} "
+                      f"params — need >= {HIER_MIN_PARAMS:.0e} (the 70B "
+                      "config the README row cites)")
+    if not head.get("speedup_x") or head["speedup_x"] <= 1.0:
+        errors.append("hierarchy reference headline: two-tier wall-clock-"
+                      "to-target does not beat single-tier "
+                      f"(speedup_x={head.get('speedup_x')})")
+    else:
+        print(f"hierarchy headline: {head['config']} "
+              f"{head['slow_reduction_x']:.1f}x fewer slow-axis bytes, "
+              f"{head['speedup_x']:.2f}x wall-clock-to-target [ok]")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke",
@@ -305,6 +377,11 @@ def main(argv=None) -> int:
                     default=os.path.join(REPO, "BENCH_overlap.smoke.json"))
     ap.add_argument("--overlap-ref",
                     default=os.path.join(REPO, "BENCH_overlap.json"))
+    ap.add_argument("--hier-smoke",
+                    default=os.path.join(REPO,
+                                         "BENCH_hierarchical.smoke.json"))
+    ap.add_argument("--hier-ref",
+                    default=os.path.join(REPO, "BENCH_hierarchical.json"))
     ap.add_argument("--tol", type=float, default=0.25,
                     help="max relative drift of per-scenario wire slope "
                          "and of per-model bucketed speedup")
@@ -404,12 +481,26 @@ def main(argv=None) -> int:
             check_overlap(overlap_smoke, overlap_ref, args.tol, errors)
             n_overlap = len(overlap_smoke["table"])
 
+    n_hier = 0
+    if os.path.exists(args.hier_smoke):
+        with open(args.hier_smoke) as f:
+            hier_smoke = json.load(f)
+        if not os.path.exists(args.hier_ref):
+            errors.append(f"hierarchy smoke exists but reference "
+                          f"{args.hier_ref} is missing")
+        else:
+            with open(args.hier_ref) as f:
+                hier_ref = json.load(f)
+            check_hierarchical(hier_smoke, hier_ref, args.tol, errors)
+            n_hier = len(hier_smoke.get("bitexact", []))
+
     for e in errors:
         print(f"ERROR: {e}", file=sys.stderr)
     if not errors:
         print(f"bench check OK ({len(smoke_scenarios)} scenarios, "
               f"{n_fusion} fusion models, {n_mem} memory rows, "
-              f"{n_overlap} overlap cells compared)")
+              f"{n_overlap} overlap cells, {n_hier} hierarchy rows "
+              "compared)")
     return 1 if errors else 0
 
 

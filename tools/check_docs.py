@@ -48,6 +48,7 @@ REQUIRED_ARTIFACTS = (
     "BENCH_comm_fusion.json",
     "BENCH_memory_overhead.json",
     "BENCH_overlap.json",
+    "BENCH_hierarchical.json",
     "RUNLOG_sample.jsonl",
 )
 

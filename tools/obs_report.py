@@ -84,6 +84,15 @@ def report_runlog(path: str) -> int:
         bpp = _metric_series(steps, "obs_bits_per_param")
         if bpp:
             print(f"  payload bits/param: {bpp[-1]:.4g}")
+        b_slow = _metric_series(steps, "obs_bytes_slow")
+        b_fast = _metric_series(steps, "obs_bytes_fast")
+        if b_slow and any(v > 0 for v in b_slow):
+            line = f"  bytes/round slow axis: {b_slow[-1]:.4g}"
+            if b_fast and any(v > 0 for v in b_fast):
+                line += (f"  fast axis: {b_fast[-1]:.4g}  "
+                         f"(two-tier round: quantized owned-shard gossip "
+                         f"vs intra reduce-scatter/all-gather)")
+            print(line)
         ef = _metric_series(steps, "obs_ef_residual_l2")
         if ef and any(v > 0 for v in ef):
             print(f"  EF residual l2: first={ef[0]:.4g} last={ef[-1]:.4g} "
