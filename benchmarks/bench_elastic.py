@@ -1,0 +1,327 @@
+"""Elastic gossip: deadline rounds, partial participation, fault injection.
+
+Three claims, each a gated artifact section (``tools/check_bench.py``):
+
+1. ``bitexact`` — ``mix(presence=all-ones)`` must be *bitwise* identical
+   to plain ``mix()`` for every wire x backend x gossip path, and for the
+   two-tier engine, over iterated rounds *including* the EF WireState
+   carries: the elastic code path costs exactly nothing when nobody is
+   absent.
+2. ``deadline`` — on ``straggler-longtail`` and on ``churn-ring`` with a
+   heavy-tail compute term composed in, deadline-dropping reaches the
+   same loss target in strictly less wall clock than waiting for
+   stragglers.  The event sim prices the rounds (barrier vs deadline)
+   and records the realized per-round participation masks; the *real*
+   CommEngine then replays those masks (``mix(presence=...)``) on a
+   decentralized quadratic, so rounds-to-target reflects exactly the
+   mixing the elastic run would have done.  "Matched loss" means both
+   runs hit the *same* absolute target (5% of the shared initial loss).
+3. ``sweep`` — tiny-LM loss vs dropout rate p for moniqua-1bit vs fp32
+   through the full trainer (``AlgoHyper.presence``): the paper's 1-bit
+   wire must degrade gracefully alongside the fp32 baseline as workers
+   drop out (the robustness margin).
+
+Outputs ``BENCH_elastic.json`` (committed, full run) and
+``BENCH_elastic.smoke.json`` (CI smoke; never clobbers the committed
+artifact).
+"""
+from __future__ import annotations
+
+import dataclasses as dc
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.comm.engine import CommEngine, make_wire
+from repro.core.quantizers import QuantSpec
+from repro.core.topology import ring, two_tier
+from repro.sim import events as SE
+from repro.sim.network import STREAM_OUTAGE, sim_uniform
+from repro.sim.scenarios import get_scenario
+
+# every codec the engine can put on the wire; bits picks the QuantSpec
+WIRES = [("full", 32), ("moniqua", 2), ("qsgd", 4),
+         ("ef_qsgd", 4), ("onebit", 1)]
+BACKENDS = ("jnp", "pallas")
+PATHS = ("bucketed", "per_leaf")
+N = 8
+THETA = 4.0          # bitexact trees are O(0.1): ample Lemma-1 headroom
+ROUNDS_ITER = 3      # iterated rounds so WireState carries are exercised
+
+TARGET_FRAC = 0.05   # "matched loss" target: 5% of the shared initial loss
+REPLAY_D = 16
+REPLAY_LR = 0.2
+REPLAY_THETA = 16.0  # replay iterates start ~N(0,1)-spread: theta >> diam
+
+
+def _engine(wname: str, bits: int, backend: str = "jnp",
+            path: str = "bucketed", topo=None) -> CommEngine:
+    spec = QuantSpec(bits=min(bits, 8), stochastic=1 < bits <= 8)
+    # warmup=1: round 1 is the fp32 warmup, rounds 2..k hit the real
+    # 1-bit + error-feedback path (the state we must compare)
+    return CommEngine(topo if topo is not None else ring(N),
+                      make_wire(wname, spec, warmup=1), backend, path=path)
+
+
+def _tree(n: int, key) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w": 0.1 * jax.random.normal(k1, (n, 4, 3)),
+            "b": 0.1 * jax.random.normal(k2, (n, 5)),
+            "s": {"m": 0.1 * jax.random.normal(k3, (n, 2, 2, 2))}}
+
+
+def _trees_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+def _iterated(eng: CommEngine, X0, presence):
+    X = X0
+    state = eng.init_wire_state(X0) if eng.stateful else None
+    for r in range(ROUNDS_ITER):
+        res = eng.mix(X, theta=THETA, key=jax.random.PRNGKey(100 + r),
+                      state=state, presence=presence)
+        X = res.x
+        if eng.stateful:
+            state = res.state
+    return X, (state if state is not None else {})
+
+
+def bitexact_rows() -> list:
+    """presence=all-ones vs plain mix, bitwise, for every engine build."""
+    X0 = _tree(N, jax.random.PRNGKey(7))
+    rows = []
+    for wname, bits in WIRES:
+        for backend in BACKENDS:
+            for path in PATHS:
+                eng = _engine(wname, bits, backend, path)
+                xa, sa = _iterated(eng, X0, None)
+                xb, sb = _iterated(eng, X0, (1,) * N)
+                rows.append({
+                    "wire": wname, "backend": backend, "path": path,
+                    "bitexact": bool(_trees_equal(xa, xb)
+                                     and _trees_equal(sa, sb))})
+        # two-tier engine: presence is a per-NODE mask (n_inter entries)
+        eng = _engine(wname, bits, "jnp", "bucketed", topo=two_tier(N, 2))
+        xa, sa = _iterated(eng, X0, None)
+        xb, sb = _iterated(eng, X0, (1,) * (N // 2))
+        rows.append({"wire": wname, "backend": "jnp", "path": "tiered",
+                     "bitexact": bool(_trees_equal(xa, xb)
+                                      and _trees_equal(sa, sb))})
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Part 2: deadline-dropping vs wait-for-stragglers, wall clock to target.
+# ---------------------------------------------------------------------------
+
+def _quadratic_replay(masks, rounds: int, *, seed: int,
+                      wire: str = "moniqua", bits: int = 8) -> list:
+    """Decentralized quadratic driven through the real engine.
+
+    Worker i descends 0.5||x_i - c_i||^2 then gossips; ``masks`` are the
+    sim's realized per-round participation masks (empty/None entries mean
+    everyone up).  Returns ``losses`` with ``losses[0]`` the pre-round
+    loss and ``losses[k+1]`` the mean distance-to-global-optimum after
+    round k.
+    """
+    n, d = N, REPLAY_D
+    eng = C.build_engine(wire, bits, n=n)
+    key = jax.random.PRNGKey(seed)
+    kc, kx = jax.random.split(key)
+    c = jax.random.normal(kc, (n, d))
+    X = {"x": c + 1.5 * jax.random.normal(kx, (n, d))}
+    cbar = jnp.mean(c, axis=0)
+    state = eng.init_wire_state(X) if eng.stateful else None
+
+    def loss_of(Xd) -> float:
+        return float(0.5 * jnp.mean(jnp.sum((Xd["x"] - cbar) ** 2, -1)))
+
+    losses = [loss_of(X)]
+    for k in range(rounds):
+        X = {"x": X["x"] - REPLAY_LR * (X["x"] - c)}
+        pres = tuple(masks[k]) if masks and k < len(masks) else None
+        res = eng.mix(X, theta=REPLAY_THETA, key=jax.random.fold_in(key, k),
+                      state=state, presence=pres)
+        X = res.x
+        if eng.stateful:
+            state = res.state
+        losses.append(loss_of(X))
+    return losses
+
+
+def _wall_to_target(losses, round_seconds, target):
+    for k in range(len(round_seconds)):
+        if losses[k + 1] <= target:
+            return sum(round_seconds[:k + 1]), k + 1
+    return None, None
+
+
+def _deadline_row(sc, deadline_s: float, rounds: int, seed: int) -> dict:
+    payload = 4 * REPLAY_D  # fp32 replay vector per neighbor message
+    tw = SE.simulate_sync_rounds(sc, payload, rounds)
+    td = SE.simulate_sync_rounds(sc.with_deadline(deadline_s), payload,
+                                 rounds)
+    lw = _quadratic_replay(tw.presence, rounds, seed=seed)
+    ld = _quadratic_replay(td.presence, rounds, seed=seed)
+    target = TARGET_FRAC * lw[0]
+    ww, rw = _wall_to_target(lw, tw.round_seconds, target)
+    wd, rd = _wall_to_target(ld, td.round_seconds, target)
+    return {
+        "scenario": sc.name, "deadline_s": deadline_s, "rounds": rounds,
+        "participation_wait": tw.participation_mean,
+        "participation_deadline": td.participation_mean,
+        "target_loss": target,
+        "rounds_to_target_wait": rw, "rounds_to_target_deadline": rd,
+        "wall_to_target_wait_s": ww, "wall_to_target_deadline_s": wd,
+        "loss_final_wait": lw[-1], "loss_final_deadline": ld[-1],
+        "matched": bool(rw is not None and rd is not None),
+        "speedup_x": (ww / wd) if (ww and wd) else 0.0,
+        "fingerprint_deadline": td.fingerprint(),
+    }
+
+
+def deadline_rows(rounds: int) -> list:
+    # one chronically-slow heavy-tail worker: the paper's straggler regime
+    strag = get_scenario("straggler-longtail", n=N, seed=1)
+    # deadline admits worker 0's 4x base (0.2s) only when its Pareto term
+    # is quiet — it still mixes occasionally, so no consensus floor
+    row_a = _deadline_row(strag, 5.0 * strag.compute.base_s, rounds, seed=2)
+    # churn + a heavy tail on EVERY worker: crash-restart decides presence,
+    # the deadline decides who of the survivors makes the barrier
+    churn = get_scenario("churn-ring", n=N, seed=11)
+    churn = dc.replace(churn, compute=dc.replace(
+        churn.compute, tail="pareto", tail_scale=1.0, pareto_shape=1.5))
+    row_b = _deadline_row(churn, 2.4 * churn.compute.base_s, rounds, seed=3)
+    return [row_a, row_b]
+
+
+# ---------------------------------------------------------------------------
+# Part 3: robustness margin — tiny-LM loss vs dropout rate p.
+# ---------------------------------------------------------------------------
+
+def _dropout_mask(n: int, p: float, seed: int = 0):
+    """Deterministic worker mask with ~p*n absent (counter-hash draws)."""
+    k = int(round(p * n))
+    if k == 0:
+        return None
+    order = sorted(range(n),
+                   key=lambda i: sim_uniform(seed, STREAM_OUTAGE, 0x5EEB, i))
+    absent = set(order[:k])
+    return tuple(0 if i in absent else 1 for i in range(n))
+
+
+def sweep_rows(steps: int) -> list:
+    model = C.tiny_lm()
+    rows = []
+    for p in (0.0, 0.125, 0.25, 0.375):
+        presence = _dropout_mask(N, p, seed=17)
+        for label, kw in (
+                ("fp32", dict(algo="dpsgd", wire="full", bits=8)),
+                ("moniqua-1bit", dict(algo="moniqua", wire="moniqua",
+                                      bits=1, theta=0.25, slack=0.2))):
+            r = C.train_run(steps=steps, model=model, n_workers=N,
+                            presence=presence, lr=0.3, seed=0, **kw)
+            rows.append({
+                "p": p, "codec": label,
+                "absent_workers": (0 if presence is None
+                                   else N - sum(presence)),
+                "loss_first": r["loss_first"], "loss_last": r["loss_last"],
+            })
+    # robustness margin: degradation vs the same codec's p=0 run
+    base = {r["codec"]: r["loss_last"] for r in rows if r["p"] == 0.0}
+    for r in rows:
+        r["degradation"] = r["loss_last"] - base[r["codec"]]
+    return rows
+
+
+# ---------------------------------------------------------------------------
+
+
+def _assert_invariants(result: dict, smoke: bool) -> None:
+    bad = [r for r in result["bitexact"] if not r["bitexact"]]
+    assert not bad, f"presence=all-ones not bit-exact: {bad}"
+    for r in result["deadline"]:
+        assert r["matched"], (
+            f"{r['scenario']}: a run missed the matched-loss target "
+            f"{r['target_loss']:.4g} (wait={r['loss_final_wait']:.4g}, "
+            f"deadline={r['loss_final_deadline']:.4g})")
+        assert r["speedup_x"] > 1.0, (
+            f"{r['scenario']}: deadline-dropping did not beat "
+            f"wait-for-stragglers ({r['speedup_x']:.3g}x)")
+    for r in result["sweep"]:
+        assert r["loss_last"] < r["loss_first"], (
+            f"sweep run diverged: {r}")
+
+
+def run(quick: bool = False, smoke: bool = False) -> dict:
+    quick = quick or smoke
+    sim_rounds = 90 if quick else 240
+    lm_steps = 16 if quick else 40
+    result = {
+        "bitexact": bitexact_rows(),
+        "deadline": deadline_rows(sim_rounds),
+        "sweep": sweep_rows(lm_steps),
+        "headline": None,
+        "notes": (
+            "Elastic gossip: (1) presence=all-ones is bitwise identical "
+            "to plain mix for every wire/backend/path incl. two-tier and "
+            "EF WireState carries; (2) deadline-dropped rounds replayed "
+            "through the real engine with the sim's realized presence "
+            "masks reach the same loss target in less wall clock than "
+            "waiting for stragglers; (3) moniqua-1bit degrades gracefully "
+            "with dropout rate p alongside fp32 (full trainer runs)."),
+    }
+    result["headline"] = {
+        "scenario": result["deadline"][0]["scenario"],
+        "speedup_x": result["deadline"][0]["speedup_x"],
+        "participation_deadline":
+            result["deadline"][0]["participation_deadline"],
+        "bitexact_rows": len(result["bitexact"]),
+    }
+    _assert_invariants(result, smoke)
+    return result
+
+
+def main(argv=None) -> int:
+    import argparse
+    import json
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced rounds/steps; writes the .smoke artifact")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    out = args.out or os.path.join(
+        _ROOT, "BENCH_elastic.smoke.json" if args.smoke
+        else "BENCH_elastic.json")
+    result = run(quick=args.quick, smoke=args.smoke)
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2, default=float)
+        f.write("\n")
+    print(f"wrote {out}")
+    print(C.markdown_table(result["deadline"],
+                           cols=["scenario", "deadline_s",
+                                 "participation_deadline",
+                                 "wall_to_target_wait_s",
+                                 "wall_to_target_deadline_s", "speedup_x"]))
+    print(C.markdown_table(result["sweep"],
+                           cols=["p", "codec", "loss_last", "degradation"]))
+    n_ok = sum(1 for r in result["bitexact"] if r["bitexact"])
+    print(f"bitexact: {n_ok}/{len(result['bitexact'])} rows identical")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -90,7 +90,7 @@ def train_run(algo: str, *, bits=8, theta=2.0, slack=1.0, gamma=1.0,
               steps=60, lr=0.3, n_workers=8, seed=0, model=None,
               shape=TINY_SHAPE, wire="moniqua", topology="ring",
               warmup=16, log_every=None, telemetry=False,
-              log_jsonl=None) -> Dict[str, Any]:
+              log_jsonl=None, presence=None) -> Dict[str, Any]:
     model = model or tiny_lm()
     tc = TrainerConfig(algo=algo, topology=topology, n_workers=n_workers,
                        bits=bits, theta=theta,
@@ -98,7 +98,7 @@ def train_run(algo: str, *, bits=8, theta=2.0, slack=1.0, gamma=1.0,
                        log_every=log_every or max(steps // 10, 1),
                        momentum=0.0, weight_decay=0.0, seed=seed, wire=wire,
                        warmup=warmup, telemetry=telemetry,
-                       log_jsonl=log_jsonl)
+                       log_jsonl=log_jsonl, presence=presence)
     t0 = time.time()
     out = Trainer(model, shape, tc).run()
     hp = out["state"], out["history"]

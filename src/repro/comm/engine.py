@@ -83,6 +83,21 @@ same (seed, element) pairs — stochastic rounding uses Supp.-C shared
 randomness exactly: identical models encode to identical payloads on
 every worker.
 
+Elastic rounds (``presence=``): ``mix``/``mix_stale``/``pair_average``
+accept a per-worker presence mask.  A dead edge (either endpoint absent)
+contributes *identity* — the receiving worker keeps its own value in that
+edge's weight, which is exactly the renormalized doubly-stochastic
+``Topology.with_presence`` matrix applied in the quantized-difference
+domain — and an absent worker's model AND its EF ``WireState`` residual
+pass through a missed round untouched.  The mask is normalized host-side:
+``presence=None`` or all-ones takes *literally today's code path*, so the
+full-presence round is bit-exact by construction for every wire, backend,
+path, and tier (``tests/test_elastic.py``); each distinct partial mask is
+a separate trace (documented recompile — elastic benches run eager).
+Tiered engines take a per-NODE mask (length ``n_inter``): an absent node
+keeps its intra-tier average but drops out of the inter-shard gossip — the
+"uplink partition" failure mode.  See ``docs/elasticity.md``.
+
 Wall-clock prediction: the byte counts this engine produces feed the
 event-driven simulator (``repro.sim``), which prices them under explicit
 link/compute models per named scenario — see ``docs/simulator.md``.
@@ -110,7 +125,8 @@ from repro.core.quantizers import (QuantSpec, ef_qsgd_encode_segmented,
                                    qsgd_decode, qsgd_decode_segmented,
                                    qsgd_encode, qsgd_encode_segmented,
                                    qsgd_payload_bytes)
-from repro.core.topology import HierarchicalTopology, Topology
+from repro.core.topology import (HierarchicalTopology, Topology,
+                                 normalize_mask)
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.kernels.moniqua_encode import (DEFAULT_BLOCK_COLS,
@@ -352,6 +368,66 @@ def _neighbor_weights_of(topo: Topology) -> Tuple[float, ...]:
                  if o % topo.n != 0)
 
 
+# ---------------------------------------------------------------------------
+# Elastic rounds: presence masks.
+# ---------------------------------------------------------------------------
+
+def _normalize_presence(presence, n: int) -> Optional[Tuple[int, ...]]:
+    """Host-side presence normalization: ``None`` or all-ones collapses to
+    ``None`` — the caller then takes literally today's (unmasked) code
+    path, which is the whole full-presence bit-exactness argument.  A
+    partial mask comes back as a static 0/1 tuple (it compiles into the
+    trace; distinct masks retrace)."""
+    if presence is None:
+        return None
+    vals = normalize_mask(presence, n)
+    if all(vals):
+        return None
+    return vals
+
+
+def _alive_cols(presence: Tuple[int, ...], offset: int,
+                ndim: int = 2) -> jax.Array:
+    """Bool ``[n, 1, ..]`` mask: worker ``i`` True iff both endpoints of
+    its edge to ``i + offset`` showed up (``_roll`` indexing: row ``i``
+    of ``_roll(x, o)`` is ``x[i + o]``)."""
+    pb = jnp.asarray(presence, jnp.bool_)
+    pb = pb.reshape((-1,) + (1,) * (ndim - 1))
+    return jnp.logical_and(pb, gossip._roll(pb, offset))
+
+
+def _present_cols(presence: Tuple[int, ...], ndim: int = 2) -> jax.Array:
+    pb = jnp.asarray(presence, jnp.bool_)
+    return pb.reshape((-1,) + (1,) * (ndim - 1))
+
+
+def _masked_circulant(x: jax.Array, topo: Topology,
+                      presence: Tuple[int, ...]) -> jax.Array:
+    """Full-precision elastic mix on one stacked leaf: identity plus the
+    weighted diffs of the edges that survived the mask — the
+    ``with_presence`` matrix applied without materializing it."""
+    f = x.astype(jnp.float32)
+    acc = None
+    for o, w in zip(topo.offsets, topo.weights):
+        if o % topo.n == 0:
+            continue
+        alive = _alive_cols(presence, o, x.ndim)
+        t = jnp.where(alive, gossip._roll(f, o) - f, 0.0) * w
+        acc = t if acc is None else acc + t
+    if acc is None:
+        return x
+    return (f + acc).astype(x.dtype)
+
+
+def _dropped_edge_count(presence: Tuple[int, ...], topo: Topology) -> int:
+    """Directed gossip edges the mask killed (health counter; static)."""
+    n = topo.n
+    return sum(1
+               for o in topo.neighbor_offsets()
+               for i in range(n)
+               if not (presence[i] and presence[(i + o) % n]))
+
+
 @dataclasses.dataclass
 class RoundPlan:
     """One gossip round, staged: per-chunk encode / permute / decode-reduce.
@@ -397,6 +473,12 @@ class RoundPlan:
     # single-tier whole-buffer round exactly.
     base: int = 0
     topo: Optional[Topology] = None
+    # elastic rounds: normalized partial presence mask over the plan's
+    # worker axis (None = everyone present = exactly the unmasked math).
+    # Encode and permute are unchanged — presence only gates which decoded
+    # neighbor diffs enter the reduction (a dead edge contributes identity)
+    # and, for EF wires, which rows update their residual.
+    presence: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
         if self.topo is None:
@@ -474,26 +556,63 @@ class RoundPlan:
         name = eng.codec.name
         spec = getattr(eng.codec, "spec", None)
         seg = c.segment_sizes
+        p = self.presence
+
+        def gate(o, t):
+            # elastic: a dead edge's decoded diff never enters the
+            # reduction — the receiver keeps its own value in that weight
+            return t if p is None else jnp.where(_alive_cols(p, o), t, 0.0)
+
         with obs_trace.chunk_phase("comm.decode_reduce", i, self.num_chunks):
             if name == "full":
-                out = None
-                for w, r in zip(self.topo.weights, nbrs):
-                    t = r * w
-                    out = t if out is None else out + t
-                return out.astype(enc[0].dtype)
+                if p is None:
+                    out = None
+                    for w, r in zip(self.topo.weights, nbrs):
+                        t = r * w
+                        out = t if out is None else out + t
+                    return out.astype(enc[0].dtype)
+                # masked raw wire: identity plus the gated neighbor diffs
+                # (NOT a re-weighted sum of windows — summing w_o-scaled
+                # copies of the local window would put an absent row one
+                # ulp off identity)
+                win = enc[0]
+                f = win.astype(jnp.float32)
+                out = f
+                for o, w, r in zip(self.topo.offsets, self.topo.weights,
+                                   nbrs):
+                    if o % self.topo.n == 0:
+                        continue
+                    out = out + jnp.where(_alive_cols(p, o),
+                                          r.astype(jnp.float32) - f,
+                                          0.0) * w
+                return out.astype(win.dtype)
+            offsets = self.topo.neighbor_offsets()
             weights = _neighbor_weights_of(self.topo)
             if name == "moniqua":
-                return kops.moniqua_decode_reduce_chunk(
-                    enc[0], nbrs, self.flat, c.offset - self.base, c.size,
-                    self.B, weights, spec, backend=self.backend)
+                if p is None:
+                    return kops.moniqua_decode_reduce_chunk(
+                        enc[0], nbrs, self.flat, c.offset - self.base,
+                        c.size, self.B, weights, spec,
+                        backend=self.backend)
+                # masked: one fused decode-reduce per surviving offset
+                # (single weight), recombined as win + sum of gated diffs
+                win = self._win(self.flat, c).astype(jnp.float32)
+                out = win
+                for k, (o, w) in enumerate(zip(offsets, weights)):
+                    mixed_o = kops.moniqua_decode_reduce_chunk(
+                        enc[0], nbrs[k:k + 1], self.flat,
+                        c.offset - self.base, c.size, self.B, (w,), spec,
+                        backend=self.backend)
+                    out = out + gate(o, mixed_o.astype(jnp.float32) - win)
+                return out.astype(self._win(self.flat, c).dtype)
             if name == "qsgd":
                 win = self._win(self.flat, c)
                 packed, scales = enc
                 d_self = qsgd_decode_segmented(packed, scales, spec, seg)
                 acc = None
-                for (p_o, s_o), w in zip(nbrs, weights):
-                    t = (qsgd_decode_segmented(p_o, s_o, spec, seg)
-                         - d_self) * w
+                for (p_o, s_o), o, w in zip(nbrs, offsets, weights):
+                    t = gate(o, qsgd_decode_segmented(p_o, s_o, spec, seg)
+                             - d_self) * w
                     acc = t if acc is None else acc + t
                 return (win.astype(jnp.float32) + acc).astype(win.dtype)
             if name == "ef_qsgd":
@@ -501,11 +620,19 @@ class RoundPlan:
                 packed, scales, v = enc
                 d_self = qsgd_decode_segmented(packed, scales, spec, seg)
                 acc = None
-                for (p_o, s_o), w in zip(nbrs, weights):
-                    t = (qsgd_decode_segmented(p_o, s_o, spec, seg)
-                         - d_self) * w
+                for (p_o, s_o), o, w in zip(nbrs, offsets, weights):
+                    t = gate(o, qsgd_decode_segmented(p_o, s_o, spec, seg)
+                             - d_self) * w
                     acc = t if acc is None else acc + t
-                return win + acc, v - d_self
+                out, res = win + acc, v - d_self
+                if p is not None:
+                    # an absent worker's model and EF residual pass
+                    # through the missed round untouched
+                    here = _present_cols(p)
+                    rwin = self._win(self.residual, c)
+                    out = jnp.where(here, out, win)
+                    res = jnp.where(here, res, rwin)
+                return out, res
             # onebit: fp32 gossip during warmup, sign codes + EF after; the
             # warm/quantized switch is a jnp.where select, NOT lax.cond —
             # cond bodies compile as separate XLA computations whose fusion
@@ -515,15 +642,21 @@ class RoundPlan:
             rwin = self._win(self.residual, c)
             packed, lo, hi, v = enc
             warm_p = self.step < eng.codec.warmup
-            out_warm = gossip.mix(win, self.topo)
+            out_warm = (gossip.mix(win, self.topo) if p is None
+                        else _masked_circulant(win, self.topo, p))
             d_self = onebit_decode_segmented(packed, lo, hi, seg)
             acc = None
-            for (p_o, lo_o, hi_o), w in zip(nbrs, weights):
-                t = (onebit_decode_segmented(p_o, lo_o, hi_o, seg)
-                     - d_self) * w
+            for (p_o, lo_o, hi_o), o, w in zip(nbrs, offsets, weights):
+                t = gate(o, onebit_decode_segmented(p_o, lo_o, hi_o, seg)
+                         - d_self) * w
                 acc = t if acc is None else acc + t
-            return (jnp.where(warm_p, out_warm, win + acc),
-                    jnp.where(warm_p, rwin, v - d_self))
+            out = jnp.where(warm_p, out_warm, win + acc)
+            res = jnp.where(warm_p, rwin, v - d_self)
+            if p is not None:
+                here = _present_cols(p)
+                out = jnp.where(here, out, win)
+                res = jnp.where(here, res, rwin)
+            return out, res
 
     # -- the software pipeline ---------------------------------------------
     def run(self):
@@ -608,6 +741,11 @@ class TieredPlan:
     seed: Optional[jax.Array] = None
     residual: Optional[jax.Array] = None   # [n_inter, D] owned-shard EF state
     step: Optional[jax.Array] = None
+    # elastic rounds: per-NODE presence over the inter tier (length
+    # n_inter).  An absent node keeps its intra average but drops out of
+    # the inter shard gossip — the "uplink partition" failure mode; its
+    # owned-shard residual rows pass through untouched.
+    presence: Optional[Tuple[int, ...]] = None
 
     @property
     def topo(self) -> HierarchicalTopology:
@@ -646,7 +784,8 @@ class TieredPlan:
                          chunks=shard.chunks(k), flat=zj,
                          backend=self.backend, theta=self.theta, B=self.B,
                          seed=self.seed, residual=res, step=self.step,
-                         base=shard.offset, topo=self.topo.inter)
+                         base=shard.offset, topo=self.topo.inter,
+                         presence=self.presence)
 
     def run(self):
         """Execute the tiered round.  Returns the mixed ``[n, D]`` buffer
@@ -845,7 +984,8 @@ class CommEngine:
     def round_plan(self, X: PyTree, theta=None,
                    key: Optional[jax.Array] = None,
                    state: Optional[dict] = None,
-                   chunks: Optional[int] = None) -> RoundPlan:
+                   chunks: Optional[int] = None,
+                   presence=None) -> RoundPlan:
         """Stage one gossip round on the flat bucket: returns a
         :class:`RoundPlan` whose ``encode_chunk``/``permute``/
         ``decode_reduce`` phases the caller can interleave (or just
@@ -890,12 +1030,15 @@ class CommEngine:
             residual, step = state["residual"], state["step"]
         return RoundPlan(engine=self, layout=layout, chunks=layout.chunks(k),
                          flat=flat, backend=backend, theta=theta, B=B,
-                         seed=seed, residual=residual, step=step)
+                         seed=seed, residual=residual, step=step,
+                         presence=_normalize_presence(presence,
+                                                      self.gossip_topo.n))
 
     def tiered_plan(self, X: PyTree, theta=None,
                     key: Optional[jax.Array] = None,
                     state: Optional[dict] = None,
-                    chunks: Optional[int] = None) -> TieredPlan:
+                    chunks: Optional[int] = None,
+                    presence=None) -> TieredPlan:
         """Stage one two-tier round (hierarchical engines): intra reduce,
         per-shard inter gossip, all-gather.  ``chunks`` is the per-shard
         sub-chunk count K (pipelined inside each shard's RoundPlan).
@@ -930,12 +1073,14 @@ class CommEngine:
             residual, step = state["residual"], state["step"]
         return TieredPlan(engine=self, layout=layout, flat=flat,
                           backend=backend, chunks=max(k, 1), theta=theta,
-                          B=B, seed=seed, residual=residual, step=step)
+                          B=B, seed=seed, residual=residual, step=step,
+                          presence=_normalize_presence(presence,
+                                                       self.topo.n_inter))
 
     # -- the tentpole primitive --------------------------------------------
     def mix(self, X: PyTree, theta=None, key: Optional[jax.Array] = None,
             ledger: Optional[BytesLedger] = None,
-            state: Optional[dict] = None) -> MixResult:
+            state: Optional[dict] = None, presence=None) -> MixResult:
         """One gossip round on stacked models (leaves ``[n, ...]``).
 
         Returns a :class:`MixResult`: ``.x`` is ``X_{k+1/2}`` (with the
@@ -946,11 +1091,17 @@ class CommEngine:
         the next round), ``.health`` the round-health dict when the engine
         has ``telemetry=True`` (else ``None``).  ``ledger`` (if given) is
         credited at trace time with payload-bytes * n_neighbors per round.
+
+        ``presence`` (elastic rounds): per-worker 0/1 mask — per NODE
+        (length ``n_inter``) on tiered engines.  Dead edges contribute
+        identity (module docstring); ``None``/all-ones is bit-exact
+        today's round.
         """
         if self.stateful:
             self._check_wire_state(state)
         if self.tiered:
-            return self._mix_tiered(X, theta, key, ledger, state)
+            return self._mix_tiered(X, theta, key, ledger, state, presence)
+        presence = _normalize_presence(presence, self.topo.n)
         offsets = self.topo.neighbor_offsets()
         if not offsets or not jax.tree.leaves(X):
             # single worker or empty pytree: nothing on the wire
@@ -960,8 +1111,8 @@ class CommEngine:
         if self.codec.name == "moniqua" and theta is None:
             raise ValueError("MoniquaWire needs the a-priori bound theta")
         if self.stateful:
-            Xm, new_state = self._mix_stateful(X, state, key)
-            health = (self._round_health(X, theta, key, new_state)
+            Xm, new_state = self._mix_stateful(X, state, key, presence)
+            health = (self._round_health(X, theta, key, new_state, presence)
                       if self.telemetry else None)
             return MixResult(Xm, new_state, health)
         layout = self.layout(X)
@@ -969,9 +1120,14 @@ class CommEngine:
                             and not layout.uniform_dtype)
         if self._use_bucketed(X) and not full_mixed_dtype:
             Xm = layout.unflatten(
-                self.round_plan(X, theta=theta, key=key).run())
+                self.round_plan(X, theta=theta, key=key,
+                                presence=presence).run())
         elif self.codec.name == "full":
-            Xm = gossip.mix(X, self.topo)
+            if presence is None:
+                Xm = gossip.mix(X, self.topo)
+            else:
+                Xm = jax.tree.map(
+                    lambda l: _masked_circulant(l, self.topo, presence), X)
         else:
             backend = resolve_backend(self.backend)
             self._require_key(key)
@@ -982,20 +1138,21 @@ class CommEngine:
                 # (seed, layout.offset_i + e), the SAME pairs the bucketed
                 # one-shot encode hashes — the bucketed-vs-per-leaf parity
                 out = [self._mix_leaf(l, theta, base_seed, backend,
-                                      idx_base=layout.offsets[i])
+                                      idx_base=layout.offsets[i],
+                                      presence=presence)
                        for i, l in enumerate(leaves)]
             else:
                 out = [self._mix_leaf(l, theta, _leaf_seed(base_seed, i),
-                                      backend)
+                                      backend, presence=presence)
                        for i, l in enumerate(leaves)]
             Xm = jax.tree.unflatten(td, out)
-        health = (self._round_health(X, theta, key, None)
+        health = (self._round_health(X, theta, key, None, presence)
                   if self.telemetry else None)
         return MixResult(Xm, {}, health)
 
     def _mix_tiered(self, X: PyTree, theta, key: Optional[jax.Array],
                     ledger: Optional[BytesLedger],
-                    state: Optional[dict]) -> MixResult:
+                    state: Optional[dict], presence=None) -> MixResult:
         """Tiered engines' round: stage and run a :class:`TieredPlan`.
 
         Tiered rounds always stage through the flat bucket — the intra
@@ -1009,17 +1166,19 @@ class CommEngine:
             raise ValueError("MoniquaWire needs the a-priori bound theta")
         if ledger is not None:
             self._record(X, ledger)
-        plan = self.tiered_plan(X, theta=theta, key=key, state=state)
+        plan = self.tiered_plan(X, theta=theta, key=key, state=state,
+                                presence=presence)
         layout = plan.layout
         if self.stateful:
             out, res = plan.run()
             new_state = {"residual": res, "step": state["step"] + 1}
             Xm = layout.unflatten(out.astype(layout.stage_dtype))
-            health = (self._round_health(X, theta, key, new_state)
+            health = (self._round_health(X, theta, key, new_state,
+                                         plan.presence)
                       if self.telemetry else None)
             return MixResult(Xm, new_state, health)
         Xm = layout.unflatten(plan.run())
-        health = (self._round_health(X, theta, key, None)
+        health = (self._round_health(X, theta, key, None, plan.presence)
                   if self.telemetry else None)
         return MixResult(Xm, {}, health)
 
@@ -1065,7 +1224,8 @@ class CommEngine:
 
     def mix_stale(self, X: PyTree, carry: dict, theta=None,
                   key: Optional[jax.Array] = None,
-                  ledger: Optional[BytesLedger] = None) -> MixResult:
+                  ledger: Optional[BytesLedger] = None,
+                  presence=None) -> MixResult:
         """One-round-stale gossip: apply the PREVIOUS round's payloads to
         this round's model, then encode the mixed result for the next round.
 
@@ -1077,6 +1237,12 @@ class CommEngine:
         decode-reduce is still in flight.  Delay-1 staleness is covered by
         the asynchronous-decentralized-SGD analyses in PAPERS.md; the first
         round (``valid`` unset) applies no delta.
+
+        ``presence`` (elastic): this round's mask gates which of last
+        round's payloads are applied — a dead edge's delta is dropped
+        (identity), an absent worker applies nothing.  Everyone still
+        re-encodes (an absent worker's payload is masked by the round in
+        which it is absent, not the round after).
         """
         if self.stateful or self.codec.name != "moniqua":
             raise ValueError(
@@ -1097,6 +1263,7 @@ class CommEngine:
             raise ValueError("MoniquaWire needs the a-priori bound theta")
         if ledger is not None:
             self._record(X, ledger)
+        presence = _normalize_presence(presence, self.topo.n)
         backend = resolve_backend(self.backend)
         self._require_key(key)
         seed = kops._key_to_seed(key)
@@ -1108,11 +1275,24 @@ class CommEngine:
         with obs_trace.named_phase("comm.decode_reduce"):
             p_nbrs = jnp.stack([gossip._roll(carry["packed"], o)
                                 for o in offsets])
-            mixed_ref = kops.moniqua_decode_reduce_stacked(
-                carry["packed"], p_nbrs, carry["ref"], carry["B"], weights,
-                spec, backend=backend)
-            out = flat + jnp.where(carry["valid"],
-                                   mixed_ref - carry["ref"], 0.0)
+            if presence is None:
+                mixed_ref = kops.moniqua_decode_reduce_stacked(
+                    carry["packed"], p_nbrs, carry["ref"], carry["B"],
+                    weights, spec, backend=backend)
+                delta = mixed_ref - carry["ref"]
+            else:
+                # elastic: gate each offset's decoded diff by the edge's
+                # survival this round; absent rows apply no delta at all
+                delta = jnp.zeros_like(carry["ref"])
+                for k, (o, w) in enumerate(zip(offsets, weights)):
+                    mixed_o = kops.moniqua_decode_reduce_stacked(
+                        carry["packed"], p_nbrs[k:k + 1], carry["ref"],
+                        carry["B"], (w,), spec, backend=backend)
+                    delta = delta + jnp.where(
+                        _alive_cols(presence, o),
+                        mixed_o - carry["ref"], 0.0)
+                delta = jnp.where(_present_cols(presence), delta, 0.0)
+            out = flat + jnp.where(carry["valid"], delta, 0.0)
         # encode round k from the post-mix model, for consumption at k+1
         B = modulo.b_theta(theta, spec.delta)
         with obs_trace.named_phase("comm.encode"):
@@ -1122,13 +1302,14 @@ class CommEngine:
                      "B": jnp.asarray(B, jnp.float32),
                      "valid": jnp.ones((), jnp.bool_)}
         Xm = layout.unflatten(out.astype(layout.stage_dtype))
-        health = (self._round_health(X, theta, key, None)
+        health = (self._round_health(X, theta, key, None, presence)
                   if self.telemetry else None)
         return MixResult(Xm, new_carry, health)
 
     # -- round health (telemetry=True) -------------------------------------
     def _round_health(self, X: PyTree, theta, key: Optional[jax.Array],
-                      new_state: Optional[dict]) -> dict:
+                      new_state: Optional[dict],
+                      presence: Optional[Tuple[int, ...]] = None) -> dict:
         """Health counters for the round just mixed (``repro.obs.metrics``).
 
         Always evaluated on the canonical flat bucket buffer with pure-jnp
@@ -1154,6 +1335,13 @@ class CommEngine:
             h["bytes_slow"] = jnp.float32(
                 self.payload_bytes_per_broadcast(X) * m)
             h["bytes_fast"] = jnp.float32(self.fast_bytes_per_round(X))
+            if presence is not None:
+                # presence is a normalized static mask (partial by
+                # construction: all-ones collapsed to None upstream)
+                h["participation"] = jnp.float32(
+                    sum(presence) / len(presence))
+                h["dropped_neighbors"] = jnp.int32(
+                    _dropped_edge_count(presence, self.gossip_topo))
             if self.codec.name == "moniqua" and theta is not None:
                 spec = self.codec.spec
                 theta = jnp.asarray(theta, jnp.float32)
@@ -1181,7 +1369,8 @@ class CommEngine:
 
     # -- stateful wires: error-feedback rounds on the flat bucket ----------
     def _mix_stateful(self, X: PyTree, state: dict,
-                      key: Optional[jax.Array]
+                      key: Optional[jax.Array],
+                      presence: Optional[Tuple[int, ...]] = None
                       ) -> Tuple[PyTree, dict]:
         """One EF gossip round; returns ``(X_{k+1/2}, new WireState)``.
 
@@ -1201,7 +1390,8 @@ class CommEngine:
         """
         layout = self.layout(X)
         if self._use_bucketed(X):
-            out, res = self.round_plan(X, key=key, state=state).run()
+            out, res = self.round_plan(X, key=key, state=state,
+                                       presence=presence).run()
         else:
             resolve_backend(self.backend)
             self._require_key(key)
@@ -1216,7 +1406,8 @@ class CommEngine:
                 ri = jax.lax.slice_in_dim(residual, s.offset,
                                           s.offset + s.padded_size, axis=1)
                 oi, rn = self._ef_flat_round(vi, ri, (s.padded_size,),
-                                             s.offset, seed, step)
+                                             s.offset, seed, step,
+                                             presence)
                 out = jax.lax.dynamic_update_slice(out, oi, (0, s.offset))
                 res = jax.lax.dynamic_update_slice(res, rn, (0, s.offset))
         new_state = {"residual": res,
@@ -1225,13 +1416,15 @@ class CommEngine:
 
     def _ef_flat_round(self, v_base: jax.Array, residual: jax.Array,
                        segments: Tuple[int, ...], idx_base: int,
-                       seed: jax.Array, step: jax.Array
+                       seed: jax.Array, step: jax.Array,
+                       presence: Optional[Tuple[int, ...]] = None
                        ) -> Tuple[jax.Array, jax.Array]:
         """EF round on one flat f32 buffer slice (the per-leaf path): encode
         ``v = x + r``, gossip the codes, mix
         ``x + sum w_o (decode_j - decode_self)``, keep
         ``r' = v - decode_self``.  The bucketed path runs the identical
-        math through ``RoundPlan`` phases."""
+        math through ``RoundPlan`` phases.  ``presence`` gates dead edges
+        to identity and carries absent rows' residuals untouched."""
         offsets = self.topo.neighbor_offsets()
         weights = self._neighbor_weights()
         spec = self.codec.spec
@@ -1239,9 +1432,19 @@ class CommEngine:
         def reduce(d_self, decode_neighbor):
             acc = None
             for o, w in zip(offsets, weights):
-                t = (decode_neighbor(o) - d_self) * w
+                t = decode_neighbor(o) - d_self
+                if presence is not None:
+                    t = jnp.where(_alive_cols(presence, o), t, 0.0)
+                t = t * w
                 acc = t if acc is None else acc + t
             return v_base + acc
+
+        def mask_absent(out, res):
+            if presence is None:
+                return out, res
+            here = _present_cols(presence)
+            return (jnp.where(here, out, v_base),
+                    jnp.where(here, res, residual))
 
         if self.codec.name == "ef_qsgd":
             v = v_base + residual
@@ -1254,7 +1457,7 @@ class CommEngine:
                 out = reduce(d_self, lambda o: qsgd_decode_segmented(
                     gossip._roll(packed, o), gossip._roll(scales, o), spec,
                     segments))
-            return out, v - d_self
+            return mask_absent(out, v - d_self)
 
         # onebit: fp32 gossip during warmup, 1-bit sign codes + EF after.
         # The step counter is the need_reset-style switch.  Selected with
@@ -1265,7 +1468,8 @@ class CommEngine:
         # elementwise math next to the communication, so computing both and
         # selecting is the right trade.
         warm_p = step < self.codec.warmup
-        out_warm = gossip.mix(v_base, self.topo)
+        out_warm = (gossip.mix(v_base, self.topo) if presence is None
+                    else _masked_circulant(v_base, self.topo, presence))
         v = v_base + residual
         packed, lo, hi = onebit_encode_segmented(v, seed, segments, idx_base,
                                                  spec.stochastic)
@@ -1273,14 +1477,15 @@ class CommEngine:
         out_q = reduce(d_self, lambda o: onebit_decode_segmented(
             gossip._roll(packed, o), gossip._roll(lo, o),
             gossip._roll(hi, o), segments))
-        return (jnp.where(warm_p, out_warm, out_q),
-                jnp.where(warm_p, residual, v - d_self))
+        return mask_absent(jnp.where(warm_p, out_warm, out_q),
+                           jnp.where(warm_p, residual, v - d_self))
 
     def _mix_leaf(self, x: jax.Array, theta, seed: jax.Array,
-                  backend: str, idx_base=0) -> jax.Array:
+                  backend: str, idx_base=0,
+                  presence: Optional[Tuple[int, ...]] = None) -> jax.Array:
         if x.ndim == 1:      # scalar-per-worker leaf: give it a unit last axis
             return self._mix_leaf(x[:, None], theta, seed, backend,
-                                  idx_base)[:, 0]
+                                  idx_base, presence)[:, 0]
         offsets = self.topo.neighbor_offsets()
         weights = self._neighbor_weights()
         if self.codec.name == "moniqua":
@@ -1294,9 +1499,19 @@ class CommEngine:
                                                  backend=backend,
                                                  idx_base=idx_base)
             p_nbrs = jnp.stack([gossip._roll(packed, o) for o in offsets])
-            return kops.moniqua_decode_reduce_stacked(packed, p_nbrs, x, B,
-                                                      weights, spec,
-                                                      backend=backend)
+            if presence is None:
+                return kops.moniqua_decode_reduce_stacked(
+                    packed, p_nbrs, x, B, weights, spec, backend=backend)
+            # elastic: fused decode-reduce per surviving offset, gated
+            f = x.astype(jnp.float32)
+            out = f
+            for k, (o, w) in enumerate(zip(offsets, weights)):
+                mixed_o = kops.moniqua_decode_reduce_stacked(
+                    packed, p_nbrs[k:k + 1], x, B, (w,), spec,
+                    backend=backend)
+                out = out + jnp.where(_alive_cols(presence, o, x.ndim),
+                                      mixed_o.astype(jnp.float32) - f, 0.0)
+            return out.astype(x.dtype)
         # qsgd: reference-free decode; each worker ships (codes, own scale)
         spec = self.codec.spec
         packed, scale = qsgd_encode(x, spec, seed)
@@ -1305,7 +1520,10 @@ class CommEngine:
         for o, w in zip(offsets, weights):
             xq_j = qsgd_decode(gossip._roll(packed, o),
                                gossip._roll(scale, o), spec, x.shape[-1])
-            t = (xq_j - xq_self) * w
+            t = xq_j - xq_self
+            if presence is not None:
+                t = jnp.where(_alive_cols(presence, o, x.ndim), t, 0.0)
+            t = t * w
             acc = t if acc is None else acc + t
         return (x.astype(jnp.float32) + acc).astype(x.dtype)
 
@@ -1355,7 +1573,8 @@ class CommEngine:
     def pair_average(self, xi: jax.Array, xj: jax.Array, theta=None,
                      key: Optional[jax.Array] = None,
                      state_i: Optional[dict] = None,
-                     state_j: Optional[dict] = None) -> PairResult:
+                     state_j: Optional[dict] = None,
+                     presence=None) -> PairResult:
         """One gossip on edge (i, j) with the pair-averaging ``W_k``.
 
         Quantized codecs exchange payloads and decode against each endpoint's
@@ -1367,7 +1586,21 @@ class CommEngine:
         per-endpoint ``state_i`` / ``state_j`` carries from
         :meth:`init_edge_state` and fill ``.state_i`` / ``.state_j`` with
         the post-exchange carries (``{}`` for stateless wires).
+
+        ``presence`` (elastic): a 2-mask ``(p_i, p_j)``.  If either
+        endpoint is absent — or the message between them was dropped —
+        the exchange is the *identity*: both models come back untouched
+        and EF carries (step counters included) do not advance, exactly
+        as if the edge had never fired.  ``sim.events.replay_adpsgd``
+        routes fault-dropped exchanges through this, so the fault replay
+        exercises the real engine API.
         """
+        presence = _normalize_presence(presence, 2)
+        if presence is not None:
+            # at least one endpoint missing: identity exchange
+            return PairResult(xi, xj,
+                              state_i if self.stateful else {},
+                              state_j if self.stateful else {})
         if self.stateful:
             return self._pair_average_stateful(xi, xj, key, state_i, state_j)
         if self.codec.name == "full":

@@ -60,6 +60,18 @@ class AlgoHyper:
     ``extra["health"]`` and the trainer surfaces it as ``obs_*`` metrics.
     Purely observational — params / payloads / WireState are bit-exact
     with the flag on or off.
+
+    **Elastic rounds** (``docs/elasticity.md``): ``presence`` hands the
+    instrumented algorithms a static 0/1 worker mask to pass into the
+    engine's ``mix(presence=...)`` — absent workers take the identity
+    mix, the rest renormalize; ``None`` / all-ones is bit-exact with
+    today's gossip.  Distinct masks retrace the jitted step (the mask is
+    static), so per-round time-varying masks belong in an eager loop
+    (``bench_elastic``) or a schedule of pre-traced steps.  ``deadline``
+    is the round deadline in seconds the *simulator* enforces when the
+    run's wall clock is priced (``sim.faults.FaultSpec.deadline_s``); the
+    in-step math never reads it — it rides here so one hyper object
+    carries the full elastic configuration into run logs and benches.
     """
     topo: Topology
     codec: MoniquaCodec = MoniquaCodec()
@@ -74,6 +86,8 @@ class AlgoHyper:
     warmup: int = 16              # onebit wire: fp32 rounds before 1-bit+EF
     telemetry: bool = False       # round-health observability (repro.obs)
     tiers: int = 1                # 1 = flat gossip; k>1 = two-tier, nodes of k
+    presence: Optional[Tuple[int, ...]] = None   # elastic 0/1 worker mask
+    deadline: Optional[float] = None             # sim round deadline (s)
 
     def comm_topo(self):
         """The topology the engines gossip on: ``topo`` itself for flat
@@ -228,7 +242,7 @@ class DPSGD(Algorithm):
         eng = hp.exact_engine(telemetry=hp.telemetry)
         # theta rides along as a pure diagnostic: "what bound would a
         # Moniqua wire need here" — the full wire itself ignores it
-        res = eng.mix(X, theta=hp.theta)
+        res = eng.mix(X, theta=hp.theta, presence=hp.presence)
         if hp.telemetry:
             extra = dict(extra)
             extra["health"] = obs_metrics.accumulate_health(
@@ -300,13 +314,15 @@ class Moniqua(Algorithm):
         eng = hp.engine()
         new_extra = dict(extra)
         if eng.stateful:
-            res = eng.mix(X, theta=hp.theta, key=key, state=extra["wire"])
+            res = eng.mix(X, theta=hp.theta, key=key, state=extra["wire"],
+                          presence=hp.presence)
             new_extra["wire"] = res.state
         elif hp.overlap == "stale":
-            res = eng.mix_stale(X, extra["gossip"], theta=hp.theta, key=key)
+            res = eng.mix_stale(X, extra["gossip"], theta=hp.theta, key=key,
+                                presence=hp.presence)
             new_extra["gossip"] = res.state
         else:
-            res = eng.mix(X, theta=hp.theta, key=key)
+            res = eng.mix(X, theta=hp.theta, key=key, presence=hp.presence)
         if hp.telemetry:
             new_extra["health"] = obs_metrics.accumulate_health(
                 extra["health"], res.health)
@@ -444,7 +460,7 @@ class D2(Algorithm):
     def step(self, X, extra, g, alpha, k, key, hp):
         Xh = self._half_step(X, extra, g, alpha)
         eng = hp.exact_engine(telemetry=hp.telemetry)
-        res = eng.mix(Xh, theta=hp.theta)
+        res = eng.mix(Xh, theta=hp.theta, presence=hp.presence)
         Xn = jax.tree.map(lambda a, x: a.astype(x.dtype), res.x, X)
         new_extra = {"x_prev": jax.tree.map(lambda x: x.astype(jnp.float32),
                                             X),
@@ -481,7 +497,8 @@ class MoniquaD2(D2):
         Xh = self._half_step(X, extra, g, alpha)
         eng = hp.engine()
         res = eng.mix(Xh, theta=hp.theta, key=key,
-                      state=extra["wire"] if eng.stateful else None)
+                      state=extra["wire"] if eng.stateful else None,
+                      presence=hp.presence)
         Xn = jax.tree.map(lambda a, x: a.astype(x.dtype), res.x, X)
         new_extra = {"x_prev": jax.tree.map(lambda x: x.astype(jnp.float32),
                                             X),

@@ -17,6 +17,13 @@ Circulance is what lets the TPU mapping express gossip as a small number of
 Also provides the slack matrix ``W_bar = gamma W + (1-gamma) I`` (Theorem 3),
 spectral gap ``rho``, and the Markov-chain mixing-time bound
 ``t_mix <= log(4n) / (1 - rho)`` (Supp. E).
+
+Elastic rounds: ``Topology.with_presence(mask)`` renormalizes the mixing
+weights over the workers that actually showed up (absent workers keep
+self-weight 1, W stays symmetric doubly stochastic), and
+``TimeVaryingTopology`` holds a per-round matrix schedule with a *joint*
+spectral gap over one window, so ``ThetaSchedule`` consuming ``rho`` stays
+honest under churn.
 """
 from __future__ import annotations
 
@@ -92,6 +99,18 @@ class Topology:
         return Topology(f"{self.name}-slack{gamma:g}", self.n, offs,
                         tuple(woff[o] for o in offs))
 
+    def with_presence(self, mask: Sequence[int]) -> "MaskedTopology":
+        """Renormalize the round over the workers that showed up.
+
+        An edge survives only if *both* endpoints are present; the weight
+        a worker loses from dead edges folds back into its self-weight, so
+        W' stays symmetric doubly stochastic and an absent worker's row is
+        exactly the identity (self-weight 1).  Full presence reproduces
+        ``self.matrix`` bit-exactly (the compensation term is exactly 0).
+        """
+        return MaskedTopology(base=self, presence=normalize_mask(mask,
+                                                                 self.n))
+
 
 def ring(n: int, self_weight: float | None = None) -> Topology:
     """Bidirectional ring. Default uniform 1/3 weights (paper's experiments)."""
@@ -141,6 +160,165 @@ def exponential(n: int) -> Topology:
 def fully_connected(n: int) -> Topology:
     offs = tuple(range(n))
     return Topology("complete", n, offs, tuple([1.0 / n] * n))
+
+
+def normalize_mask(mask: Sequence[int], n: int) -> Tuple[int, ...]:
+    """Validate a presence mask: length ``n``, entries coerced to {0, 1}."""
+    vals = tuple(int(bool(v)) for v in mask)
+    if len(vals) != n:
+        raise ValueError(f"presence mask has length {len(vals)}, want {n}")
+    return vals
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskedTopology:
+    """A circulant topology restricted to the workers that showed up.
+
+    ``W'[i, j] = W[i, j] * p_i * p_j`` off-diagonal, and each worker's
+    lost edge mass folds back into its self-weight:
+
+        W'[i, i] = W[i, i] + sum_{j != i} W[i, j] * (1 - p_i * p_j)
+
+    Properties (proofs in docs/elasticity.md):
+
+    * symmetric doubly stochastic for any mask (the update adds
+      ``W_ij (e_i - e_j)(e_i - e_j)^T`` per dead edge, which preserves
+      row/column sums and symmetry);
+    * an absent worker's row is exactly the identity row — it neither
+      sends nor receives, its model is untouched;
+    * full presence reproduces ``base.matrix`` bit-exactly (every mask
+      factor is exactly 1.0 and every compensation term exactly 0.0);
+    * the dead-edge update is PSD, so eigenvalues are non-decreasing in
+      the number of *dropped* workers (Weyl) — less participation never
+      looks like faster mixing.
+
+    Not circulant (the mask breaks translation invariance), so this is
+    the *analysis* object for theta schedules and rho regressions; the
+    engine applies the same renormalization edge-wise on device.
+    """
+    base: Topology
+    presence: Tuple[int, ...]
+
+    @property
+    def name(self) -> str:
+        up = sum(self.presence)
+        return f"{self.base.name}-p{up}of{self.base.n}"
+
+    @property
+    def n(self) -> int:
+        return self.base.n
+
+    @property
+    def matrix(self) -> np.ndarray:
+        W = self.base.matrix
+        p = np.asarray(self.presence, dtype=np.float64)
+        P = np.outer(p, p)
+        M = W * P
+        np.fill_diagonal(M, 0.0)
+        # off-diagonal mass each row lost to dead edges -> self-weight
+        lost = (W * (1.0 - P)).sum(axis=1) \
+            - np.diag(W) * (1.0 - p * p)
+        idx = np.arange(self.n)
+        M[idx, idx] = np.diag(W) + lost
+        return M
+
+    @property
+    def rho(self) -> float:
+        ev = np.sort(np.abs(np.linalg.eigvalsh(self.matrix)))[::-1]
+        return float(ev[1]) if self.n > 1 else 0.0
+
+    @property
+    def phi(self) -> float:
+        W = self.matrix
+        nz = W[W > 1e-12]
+        return float(nz.min()) if nz.size else 0.0
+
+    @property
+    def t_mix_bound(self) -> float:
+        gap = 1.0 - self.rho
+        if gap <= 0:
+            return float("inf")
+        return float(np.log(4 * self.n) / gap)
+
+
+@dataclasses.dataclass(frozen=True)
+class TimeVaryingTopology:
+    """A per-round schedule of mixing matrices with a *joint* spectral gap.
+
+    Round ``k`` uses ``schedule[k % len(schedule)]`` (any object with a
+    ``matrix`` — ``Topology``, ``MaskedTopology``, another schedule's
+    entry).  The usual per-matrix ``rho`` is meaningless for a product of
+    different W's; what Moniqua's consensus argument needs is the
+    contraction of one full window:
+
+        rho = || W_{T-1} ... W_1 W_0 - J/n ||_2 ^ (1/T)
+
+    the per-round geometric-average contraction factor.  Because every
+    entry is doubly stochastic, ``(W_t - J/n)`` telescopes through the
+    product and the joint rho is at most the geometric mean of the
+    per-matrix rhos — a schedule that is occasionally disconnected can
+    still mix, which is exactly the B-connectivity assumption of
+    time-varying-gossip analyses.  ``ThetaSchedule`` consuming this rho
+    therefore stays honest under churn.
+    """
+    schedule: Tuple[object, ...]
+
+    def __post_init__(self):
+        if not self.schedule:
+            raise ValueError("TimeVaryingTopology needs a non-empty schedule")
+        ns = {t.n for t in self.schedule}
+        if len(ns) != 1:
+            raise ValueError(f"schedule mixes worker counts: {sorted(ns)}")
+
+    def __len__(self) -> int:
+        return len(self.schedule)
+
+    def at(self, k: int):
+        """The topology in effect at round ``k`` (periodic schedule)."""
+        return self.schedule[k % len(self.schedule)]
+
+    @property
+    def name(self) -> str:
+        return f"varying[{self.schedule[0].name}..x{len(self.schedule)}]"
+
+    @property
+    def n(self) -> int:
+        return self.schedule[0].n
+
+    @property
+    def window_matrix(self) -> np.ndarray:
+        """Product of one schedule window, ``W_{T-1} ... W_0`` (round
+        order: later rounds multiply from the left)."""
+        P = self.schedule[0].matrix
+        for t in self.schedule[1:]:
+            P = t.matrix @ P
+        return P
+
+    @property
+    def rho(self) -> float:
+        """Joint spectral gap: per-round contraction of one window."""
+        if self.n == 1:
+            return 0.0
+        J = np.full((self.n, self.n), 1.0 / self.n)
+        sig = np.linalg.norm(self.window_matrix - J, ord=2)
+        return float(sig ** (1.0 / len(self.schedule)))
+
+    @property
+    def phi(self) -> float:
+        """Most-pessimistic smallest nonzero entry across the window."""
+        return min(t.phi for t in self.schedule)
+
+    @property
+    def t_mix_bound(self) -> float:
+        gap = 1.0 - self.rho
+        if gap <= 0:
+            return float("inf")
+        return float(np.log(4 * self.n) / gap)
+
+    def slack(self, gamma: float) -> "TimeVaryingTopology":
+        """Slack every round of the window (Theorem 3 entrywise)."""
+        return TimeVaryingTopology(
+            tuple(t.slack(gamma) for t in self.schedule))
 
 
 @dataclasses.dataclass(frozen=True)

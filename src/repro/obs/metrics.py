@@ -54,6 +54,17 @@ The health dict (``round_health_zero`` fixes the pytree structure):
     ``bytes_slow`` the gossip-link payloads (all a single-tier round
     has), ``bytes_fast`` the intra-node reduce-scatter/all-gather of
     tiered rounds (0 single-tier).  Mirrors ``BytesLedger``'s split.
+``participation``
+    fraction of gossip-tier workers present in the round (elastic
+    rounds; see ``docs/elasticity.md``).  Neutral value is **1.0** — the
+    one deliberate exception to "everything at zero" in
+    ``round_health_zero``: a round with no presence mask had full
+    participation, and a gate like ``check_obs --min-participation``
+    must not read an all-present run as a total outage.
+``dropped_neighbors``
+    count of directed gossip edges the round's presence mask killed
+    (``sum over offsets o != 0, workers i`` of edges where ``i`` or
+    ``i+o`` was absent); 0 for full presence.
 """
 from __future__ import annotations
 
@@ -68,7 +79,8 @@ from repro.core.quantizers import QuantSpec
 
 HEALTH_ROUND_KEYS = ("consensus_inf", "headroom", "alias_count",
                      "ef_residual_l2", "warm", "bits_per_param",
-                     "bytes_fast", "bytes_slow")
+                     "bytes_fast", "bytes_slow", "participation",
+                     "dropped_neighbors")
 HEALTH_KEYS = HEALTH_ROUND_KEYS + ("alias_total",)
 
 
@@ -77,12 +89,16 @@ def round_health_zero() -> Dict[str, jax.Array]:
 
     Fixes the pytree structure so the ``extra["health"]`` carry is stable
     across jitted steps (counts are int32, everything else f32).
+    ``participation`` alone starts at 1.0 — its neutral value (module
+    docstring): no presence mask means everyone showed up.
     """
     z = jnp.zeros((), jnp.float32)
     return {"consensus_inf": z, "headroom": z,
             "alias_count": jnp.zeros((), jnp.int32),
             "ef_residual_l2": z, "warm": z, "bits_per_param": z,
-            "bytes_fast": z, "bytes_slow": z}
+            "bytes_fast": z, "bytes_slow": z,
+            "participation": jnp.ones((), jnp.float32),
+            "dropped_neighbors": jnp.zeros((), jnp.int32)}
 
 
 def init_health() -> Dict[str, jax.Array]:

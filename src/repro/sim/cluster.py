@@ -22,6 +22,17 @@ for worker ``i`` at global step ``k``:
 host); the static multipliers always apply.  All draws are keyed by
 (seed, worker, step), so a model is a frozen value object and two runs of
 the same scenario agree event-for-event.
+
+**Crash-restart churn.**  ``outage_p`` adds a per-(worker, step) chance
+that a worker goes *offline* — crashed, preempted, or partitioned — for
+``outage_rounds`` consecutive steps before rejoining.  Onsets are drawn
+on their own stream (``STREAM_OUTAGE``) keyed by (seed, worker, step),
+so :meth:`ComputeModel.offline` is a pure predicate: whether worker ``i``
+is down at step ``k`` is answerable at any time, in any order, without
+simulator state — the same replay contract as the straggler tails.  The
+fault-injection layer (:mod:`repro.sim.faults`) folds this predicate into
+the round's presence mask; ``compute_seconds`` itself is unchanged (an
+offline worker is *excluded*, not slowed).
 """
 from __future__ import annotations
 
@@ -29,7 +40,7 @@ import dataclasses
 import math
 from typing import Tuple
 
-from repro.sim.network import STREAM_COMPUTE, sim_uniform
+from repro.sim.network import STREAM_COMPUTE, STREAM_OUTAGE, sim_uniform
 
 TAILS = ("none", "exp", "pareto")
 
@@ -43,12 +54,21 @@ class ComputeModel:
     tail_scale: float = 0.0                 # strength of the random term
     tail_workers: Tuple[int, ...] = ()      # affected workers; () = all
     pareto_shape: float = 1.5               # heavy-tail exponent
+    outage_p: float = 0.0                   # per-step crash-restart onset
+    outage_rounds: int = 1                  # steps offline per onset
+    outage_workers: Tuple[int, ...] = ()    # affected workers; () = all
 
     def __post_init__(self):
         if self.tail not in TAILS:
             raise ValueError(f"unknown tail {self.tail!r}; one of {TAILS}")
         if self.base_s <= 0:
             raise ValueError(f"base_s must be positive, got {self.base_s}")
+        if not 0.0 <= self.outage_p < 1.0:
+            raise ValueError(f"outage_p must be in [0, 1), "
+                             f"got {self.outage_p}")
+        if self.outage_rounds < 1:
+            raise ValueError(f"outage_rounds must be >= 1, "
+                             f"got {self.outage_rounds}")
 
     def multiplier(self, worker: int) -> float:
         """Static factor for ``worker``; workers past the tuple get 1.0,
@@ -76,6 +96,23 @@ class ComputeModel:
         """Mean per-step time ignoring the stochastic tail (planning aid)."""
         return self.base_s * self.multiplier(worker)
 
+    def offline(self, worker: int, step: int, seed: int) -> bool:
+        """Is ``worker`` down at ``step``?  Pure counter-hash predicate.
+
+        An onset drawn at step ``j`` keeps the worker offline through
+        steps ``j .. j + outage_rounds - 1``, so the check scans the
+        trailing onset window — stateless, so replays and out-of-order
+        queries agree (the sim determinism contract).
+        """
+        if self.outage_p <= 0.0:
+            return False
+        if self.outage_workers and worker not in self.outage_workers:
+            return False
+        lo = max(0, step - self.outage_rounds + 1)
+        return any(
+            sim_uniform(seed, STREAM_OUTAGE, worker, j) < self.outage_p
+            for j in range(lo, step + 1))
+
 
 def homogeneous(base_s: float) -> ComputeModel:
     return ComputeModel(base_s=base_s)
@@ -89,3 +126,20 @@ def one_straggler(base_s: float, worker: int = 0, slow: float = 4.0,
                         tail_workers=(worker,), pareto_shape=pareto_shape,
                         multipliers=tuple(slow if i == worker else 1.0
                                           for i in range(worker + 1)))
+
+
+def crash_restart(base_s: float, outage_p: float = 0.05,
+                  outage_rounds: int = 3,
+                  workers: Tuple[int, ...] = ()) -> ComputeModel:
+    """Workers crash for ``outage_rounds`` steps then rejoin (churn).
+
+    Each step each (affected) worker independently draws a crash onset
+    with probability ``outage_p`` on the ``STREAM_OUTAGE`` counter-hash
+    stream; expected unavailability per worker is roughly ``outage_p *
+    outage_rounds``.  Compute cost while up is homogeneous ``base_s`` —
+    churn and straggling are orthogonal axes, compose them with
+    ``dataclasses.replace`` if a scenario needs both.
+    """
+    return ComputeModel(base_s=base_s, outage_p=outage_p,
+                        outage_rounds=outage_rounds,
+                        outage_workers=tuple(workers))

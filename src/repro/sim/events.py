@@ -43,10 +43,25 @@ event loop while *applying the actual mixing math* through
 ``CommEngine.pair_average`` edge by edge, so predicted wall clock and
 realized convergence come from one run.
 
+**Fault injection** (:mod:`repro.sim.faults`).  A scenario may carry a
+``FaultSpec`` (or one is passed per call): worker churn removes workers
+from rounds (``OFFLINE`` events, presence renormalized), per-message loss
+kills individual payloads (``MSGDROP``), and a round deadline stops the
+barrier from waiting for stragglers — a worker whose compute overruns it
+is dropped (``DROPPED``), a payload arriving past it is dead (``LATE``),
+and the barrier releases at ``t_start + deadline_s`` whenever anything
+was late, else at the last *participant*'s ready time.  Per-round
+participation masks land in :attr:`SimTrace.presence` /
+:attr:`SimTrace.participation` — exactly the mask
+``CommEngine.mix(presence=...)`` renormalizes over.  With no faults the
+code path, events and fingerprint are bit-identical to the pre-elastic
+engine; fault draws live on their own hash streams, so adding faults
+never perturbs jitter or straggler draws either.
+
 Determinism: every stochastic choice (jitter, straggler tails, edge
-choice) is a counter hash of (scenario.seed, semantic counters) — replays
-are event-for-event identical, which :meth:`SimTrace.fingerprint` makes
-cheap to assert.
+choice, outage onsets, message loss) is a counter hash of
+(scenario.seed, semantic counters) — replays are event-for-event
+identical, which :meth:`SimTrace.fingerprint` makes cheap to assert.
 """
 from __future__ import annotations
 
@@ -55,6 +70,7 @@ import hashlib
 import heapq
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.sim.faults import presence_of
 from repro.sim.network import (STREAM_EDGE_CHOICE, STREAM_NET, sim_randint,
                                sim_uniform)
 
@@ -66,6 +82,11 @@ GOSSIP = "gossip"        # async: pair exchange (worker, peer) completed
 UPDATE = "update"        # async: worker applied its (stale) gradient
 FLOW = "_flow"           # heap-internal: contended-flow completion candidate
                          # (never appears in the trace; see fabric handling)
+# elastic-round kinds (fault injection; all enter the fingerprint)
+OFFLINE = "offline"      # worker absent this round (churn)
+DROPPED = "dropped"      # present worker overran the round deadline
+MSGDROP = "msgdrop"      # payload lost on the wire (drop_p draw)
+LATE = "late"            # payload arrived after the round deadline
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,12 +112,24 @@ class SimTrace:
     bytes_on_wire: int
     round_seconds: List[float] = dataclasses.field(default_factory=list)
     staleness: List[int] = dataclasses.field(default_factory=list)
+    # elastic rounds only (empty on unfaulted runs): per-round fraction of
+    # workers that made the round, and the exact participation masks —
+    # what ``CommEngine.mix(presence=...)`` renormalizes over on replay
+    participation: List[float] = dataclasses.field(default_factory=list)
+    presence: List[Tuple[int, ...]] = dataclasses.field(default_factory=list)
 
     @property
     def mean_round_seconds(self) -> float:
         if not self.round_seconds:
             return 0.0
         return sum(self.round_seconds) / len(self.round_seconds)
+
+    @property
+    def participation_mean(self) -> float:
+        """Mean per-round participation; 1.0 when no faults were injected."""
+        if not self.participation:
+            return 1.0
+        return sum(self.participation) / len(self.participation)
 
     @property
     def staleness_max(self) -> int:
@@ -142,7 +175,7 @@ class SimTrace:
 # ---------------------------------------------------------------------------
 
 def simulate_sync_rounds(scenario, bytes_per_neighbor: int, num_rounds: int,
-                         ) -> SimTrace:
+                         faults=None) -> SimTrace:
     """Wall-clock for ``num_rounds`` bulk-synchronous gossip rounds.
 
     ``bytes_per_neighbor`` is one worker's payload to ONE neighbor per
@@ -150,58 +183,120 @@ def simulate_sync_rounds(scenario, bytes_per_neighbor: int, num_rounds: int,
     The trace carries per-round barrier times (``round_seconds``) so a
     loss-vs-step trajectory converts to loss-vs-wall-clock by indexing
     :meth:`SimTrace.cumulative_seconds`.
+
+    ``faults`` (a :class:`~repro.sim.faults.FaultSpec`; defaults to
+    ``scenario.faults``) turns on elastic rounds — module docstring for
+    the semantics.  Presence is failure-detector knowledge: dead edges
+    send nothing (no NIC occupancy, no bytes); sampled drops and late
+    arrivals DO put their bytes on the wire — they were sent, then lost.
+    Participation masks per round land on the trace.
     """
     topo, net, comp, seed = (scenario.topo, scenario.network,
                              scenario.compute, scenario.seed)
     fabric = getattr(scenario, "fabric", None)
+    if faults is None:
+        faults = getattr(scenario, "faults", None)
+    deadline = faults.deadline_s if faults is not None else None
     n = topo.n
     offsets = topo.neighbor_offsets()
     events: List[SimEvent] = []
     round_seconds: List[float] = []
+    participation: List[float] = []
+    presence: List[Tuple[int, ...]] = []
     total_bytes = 0
     t_start = 0.0
     for k in range(num_rounds):
-        compute = [comp.compute_seconds(i, k, seed) for i in range(n)]
+        pres = presence_of(faults, comp, n, k, seed)
+        up = [True] * n if pres is None else [bool(b) for b in pres]
+        compute = [comp.compute_seconds(i, k, seed) if up[i] else 0.0
+                   for i in range(n)]
         for i in range(n):
-            events.append(SimEvent(t_start + compute[i], COMPUTE, i, step=k))
+            if up[i]:
+                events.append(SimEvent(t_start + compute[i], COMPUTE, i,
+                                       step=k))
+            else:
+                events.append(SimEvent(t_start, OFFLINE, i, step=k))
+        # participants: present AND own compute met the deadline; a worker
+        # still computing at the deadline is dropped from the round (its
+        # model takes the identity mix), and the barrier fires at the
+        # deadline because its peers waited that long for it
+        part = list(up)
+        late = False
+        if deadline is not None:
+            for i in range(n):
+                if up[i] and compute[i] > deadline:
+                    part[i] = False
+                    late = True
+                    events.append(SimEvent(t_start + deadline, DROPPED, i,
+                                           step=k))
         # arrival[i] accumulates the latest in-payload; senders serialize
         # their per-neighbor payloads on the NIC bandwidth term
         ready = [t_start + compute[i] for i in range(n)]
+
+        def _deliver(j, dst, arrive):
+            """Classify one payload's arrival; returns ready-time or None."""
+            nonlocal total_bytes, late
+            total_bytes += bytes_per_neighbor
+            if faults is not None and faults.message_dropped(k, j, dst,
+                                                             seed):
+                events.append(SimEvent(arrive, MSGDROP, j, peer=dst, step=k,
+                                       nbytes=bytes_per_neighbor))
+                return None
+            if deadline is not None and arrive > t_start + deadline:
+                events.append(SimEvent(arrive, LATE, j, peer=dst, step=k,
+                                       nbytes=bytes_per_neighbor))
+                late = True
+                return None
+            events.append(SimEvent(arrive, TRANSFER, j, peer=dst, step=k,
+                                   nbytes=bytes_per_neighbor))
+            return arrive
+
         if fabric is not None:
             # contended fabric: the round's transfers share NIC / switch
             # capacity; the fluid solver prices them jointly
             from repro.sim.contention import schedule_transfers
             specs = [(t_start + compute[j], j, (j - o) % n,
                       bytes_per_neighbor)
-                     for j in range(n) for o in offsets]
+                     for j in range(n) for o in offsets
+                     if part[j] and part[(j - o) % n]]
             finishes = schedule_transfers(fabric, n, specs)
             for (_, j, dst, nb), fin in zip(specs, finishes):
                 u = sim_uniform(seed, STREAM_NET, k, j, dst)
-                arrive = fin + fabric.alpha_s + fabric.jitter_s * u
-                events.append(SimEvent(arrive, TRANSFER, j, peer=dst, step=k,
-                                       nbytes=bytes_per_neighbor))
-                ready[dst] = max(ready[dst], arrive)
-                total_bytes += bytes_per_neighbor
+                arrive = _deliver(j, dst, fin + fabric.alpha_s
+                                  + fabric.jitter_s * u)
+                if arrive is not None:
+                    ready[dst] = max(ready[dst], arrive)
         else:
             for j in range(n):
+                if not part[j]:
+                    continue
                 nic_free = t_start + compute[j]
-                for s, o in enumerate(offsets):
+                for o in offsets:
                     dst = (j - o) % n   # i = j - o receives FROM j = i + o
+                    if not part[dst]:
+                        continue        # dead edge: nothing enters the NIC
                     link = net.link(j, dst, n)
                     nic_free += link.occupancy_seconds(bytes_per_neighbor)
                     u = sim_uniform(seed, STREAM_NET, k, j, dst)
-                    arrive = nic_free + link.alpha_s + link.jitter_s * u
-                    events.append(SimEvent(arrive, TRANSFER, j, peer=dst,
-                                           step=k,
-                                           nbytes=bytes_per_neighbor))
-                    ready[dst] = max(ready[dst], arrive)
-                    total_bytes += bytes_per_neighbor
-        t_end = max(ready)
+                    arrive = _deliver(j, dst, nic_free + link.alpha_s
+                                      + link.jitter_s * u)
+                    if arrive is not None:
+                        ready[dst] = max(ready[dst], arrive)
+        if deadline is not None and late:
+            t_end = t_start + deadline
+        else:
+            pready = [ready[i] for i in range(n) if part[i]]
+            t_end = max(pready) if pready else (
+                t_start + (deadline if deadline is not None else 0.0))
         events.append(SimEvent(t_end, ROUND, -1, step=k))
         round_seconds.append(t_end - t_start)
+        if faults is not None or pres is not None:
+            participation.append(sum(part) / n)
+            presence.append(tuple(int(b) for b in part))
         t_start = t_end
     return SimTrace(events=events, total_seconds=t_start,
-                    bytes_on_wire=total_bytes, round_seconds=round_seconds)
+                    bytes_on_wire=total_bytes, round_seconds=round_seconds,
+                    participation=participation, presence=presence)
 
 
 # ---------------------------------------------------------------------------
@@ -214,6 +309,8 @@ def simulate_async_gossip(
     num_updates: int,
     on_gossip: Optional[Callable[[int, int, int], None]] = None,
     on_update: Optional[Callable[[int, int, int], None]] = None,
+    faults=None,
+    on_drop: Optional[Callable[[int, int, int], None]] = None,
 ) -> SimTrace:
     """Event loop for AD-PSGD: one gossip + one stale gradient per update.
 
@@ -237,10 +334,20 @@ def simulate_async_gossip(
     The passive peer never blocks, so straggler-heavy scenarios slow the
     straggler's own update rate but cannot deadlock the loop (contract
     tested in ``tests/test_sim.py``).
+
+    Faults: the loop is wait-free, so of the :class:`FaultSpec` catalog
+    only ``drop_p`` applies (deadlines guard barriers the loop doesn't
+    have; churn is a compute-model concern here).  A dropped exchange
+    ships its bytes (sent, then lost), mixes nothing, and fires
+    ``on_drop(i, j, idx)`` instead of ``on_gossip`` — the worker still
+    applies its stale gradient.  Loss draws key on the gossip index
+    (``STREAM_DROP``), so replays lose the same exchanges.
     """
     topo, net, comp, seed = (scenario.topo, scenario.network,
                              scenario.compute, scenario.seed)
     fabric = getattr(scenario, "fabric", None)
+    if faults is None:
+        faults = getattr(scenario, "faults", None)
     n = topo.n
     offsets = [o % n for o in topo.neighbor_offsets()]
     if not offsets:
@@ -253,7 +360,9 @@ def simulate_async_gossip(
     version = [0] * n
     snap_version = [0] * n
     local_step = [0] * n
-    pending_peer: Dict[int, int] = {}     # worker -> peer of in-flight gossip
+    # worker -> (peer, lost?) of the in-flight gossip; the loss draw is
+    # taken at launch, keyed by the gossip index
+    pending_peer: Dict[int, Tuple[int, bool]] = {}
     staleness: List[int] = []
     total_bytes = 0
     gossip_idx = 0
@@ -322,22 +431,33 @@ def simulate_async_gossip(
                 dt = net.transfer_seconds(i, j, n, bytes_per_exchange, u)
                 heapq.heappush(heap, (t_now + dt, seq, GOSSIP, i))
                 seq += 1
-            pending_peer[i] = j
+            lost = (faults is not None
+                    and faults.message_dropped(gossip_idx, i, j, seed))
+            pending_peer[i] = (j, lost)
             events.append(SimEvent(t_now, COMPUTE, i, peer=j,
                                    step=local_step[i]))
             gossip_idx += 1
         elif kind == GOSSIP:
-            j = pending_peer.pop(i)
+            j, lost = pending_peer.pop(i)
             # credited at completion: gossips still in flight when the loop
             # hits num_updates never touched models and are not counted
             total_bytes += 2 * bytes_per_exchange
-            if on_gossip is not None:
-                on_gossip(i, j, len(staleness))
-            version[i] += 1
-            version[j] += 1
-            events.append(SimEvent(t_now, GOSSIP, i, peer=j,
-                                   step=local_step[i],
-                                   nbytes=2 * bytes_per_exchange))
+            if lost:
+                # exchange on the wire, then dropped: models untouched, no
+                # version bumps — but the worker's cycle continues below
+                if on_drop is not None:
+                    on_drop(i, j, len(staleness))
+                events.append(SimEvent(t_now, MSGDROP, i, peer=j,
+                                       step=local_step[i],
+                                       nbytes=2 * bytes_per_exchange))
+            else:
+                if on_gossip is not None:
+                    on_gossip(i, j, len(staleness))
+                version[i] += 1
+                version[j] += 1
+                events.append(SimEvent(t_now, GOSSIP, i, peer=j,
+                                       step=local_step[i],
+                                       nbytes=2 * bytes_per_exchange))
             # apply the stale gradient immediately after the exchange
             stale = version[i] - snap_version[i]
             staleness.append(stale)
@@ -357,7 +477,8 @@ def simulate_async_gossip(
 
 
 def replay_adpsgd(scenario, engine, x0, grad_fn, alpha: float,
-                  num_updates: int, theta: float = 2.0) -> Dict[str, Any]:
+                  num_updates: int, theta: float = 2.0,
+                  faults=None) -> Dict[str, Any]:
     """Replay AD-PSGD through ``CommEngine.pair_average`` edge by edge.
 
     ``x0`` is the stacked ``[n, d]`` initial model, ``grad_fn(x, i, key)``
@@ -367,6 +488,12 @@ def replay_adpsgd(scenario, engine, x0, grad_fn, alpha: float,
     update applies the gradient *snapshot* its worker took at compute
     start — the same staleness the wall clock prices.  Returns the final
     stacked models, the trace, and per-update mean-model distances.
+
+    Faults (``faults`` or ``scenario.faults``): a lost exchange replays
+    through ``engine.pair_average(..., presence=(1, 0))`` — the identity
+    exchange, EF state untouched — so predicted wall clock and realized
+    convergence under loss come from the SAME event loop and the SAME
+    engine API that a fault-free replay exercises.
     """
     import jax
     import jax.numpy as jnp
@@ -379,17 +506,27 @@ def replay_adpsgd(scenario, engine, x0, grad_fn, alpha: float,
     grads: List[Optional[Any]] = [None] * n
     scenario_seed = scenario.seed
 
-    def on_gossip(i: int, j: int, idx: int) -> None:
+    def _take_grad(i: int, idx: int) -> None:
         # snapshot & gradient for the exchange initiator were taken at its
         # compute start; compute them lazily here (values equal by purity)
         if grads[i] is None:
             kg = jax.random.PRNGKey(
                 sim_randint(scenario_seed, 2**31 - 1, STREAM_GRAD, i, idx))
             grads[i] = grad_fn(snap[i], i, kg)
+
+    def _exchange(i: int, j: int, idx: int, presence) -> None:
+        _take_grad(i, idx)
         kp = jax.random.PRNGKey(
             sim_randint(scenario_seed, 2**31 - 1, STREAM_PAIR, idx))
-        res = engine.pair_average(X[i], X[j], theta=theta, key=kp)
+        res = engine.pair_average(X[i], X[j], theta=theta, key=kp,
+                                  presence=presence)
         X[i], X[j] = res.xi, res.xj
+
+    def on_gossip(i: int, j: int, idx: int) -> None:
+        _exchange(i, j, idx, None)
+
+    def on_drop(i: int, j: int, idx: int) -> None:
+        _exchange(i, j, idx, (1, 0))    # lost payload: identity exchange
 
     def on_update(i: int, step: int, stale: int) -> None:
         X[i] = X[i] - alpha * grads[i]
@@ -399,7 +536,8 @@ def replay_adpsgd(scenario, engine, x0, grad_fn, alpha: float,
     nbytes = engine.codec.payload_bytes(tuple(x0.shape[1:]))
     trace = simulate_async_gossip(scenario, bytes_per_exchange=nbytes,
                                   num_updates=num_updates,
-                                  on_gossip=on_gossip, on_update=on_update)
+                                  on_gossip=on_gossip, on_update=on_update,
+                                  faults=faults, on_drop=on_drop)
     Xf = jnp.stack(X)
     consensus = float(jnp.mean(jnp.sum(
         (Xf - jnp.mean(Xf, axis=0, keepdims=True)) ** 2, axis=1)))

@@ -37,6 +37,8 @@ STREAM_COMPUTE = 0xC0
 STREAM_EDGE_CHOICE = 0xED6
 STREAM_GRAD = 0x64AD
 STREAM_PAIR = 0xBA12
+STREAM_DROP = 0xD20      # per-message loss draws (sim/faults.py)
+STREAM_OUTAGE = 0x0FF    # crash-restart outage onsets (sim/cluster.py)
 
 
 def _mix64(z: int) -> int:

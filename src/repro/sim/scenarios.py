@@ -51,9 +51,19 @@ claims span:
     probes of Fig. 1's worst network, or a ``NetworkModel`` JSON emitted
     by ``python -m repro.sim.calibrate`` (pass ``model_path`` or set
     ``REPRO_SIM_NETMODEL``).
+``churn-ring``
+    Elastic-gossip stress test: 1 GbE ring whose workers crash-restart
+    (each round each worker draws a ~3-round outage with probability
+    ``outage_p``) and whose messages drop with probability ``drop_p`` —
+    the :mod:`repro.sim.faults` catalog exercised end to end.  Pair with
+    ``Scenario.with_deadline`` to compare deadline-dropped rounds against
+    wait-for-everyone (``bench_elastic``).
 
 Factories take ``n`` so benchmarks can match the scenario to their
-worker count; ``get_scenario(name, n=...)`` is the registry entry point.
+worker count; ``get_scenario(name, n=...)`` is the registry entry point
+and forwards any extra keyword arguments to the factory (e.g. the
+straggler knobs of ``straggler-longtail`` or the churn rates of
+``churn-ring``).
 """
 from __future__ import annotations
 
@@ -62,9 +72,11 @@ import os
 from typing import Callable, Dict, Optional, Tuple
 
 from repro.core.topology import Topology, exponential, ring
-from repro.sim.cluster import ComputeModel, homogeneous, one_straggler
+from repro.sim.cluster import (ComputeModel, crash_restart, homogeneous,
+                               one_straggler)
 from repro.sim.contention import (Fabric, oversubscribed_fabric,
                                   shared_medium_fabric)
+from repro.sim.faults import FaultSpec
 from repro.sim.network import LinkModel, NetworkModel, gbit, mbit
 
 # default local-step cost: ResNet20-scale fwd+bwd on a P100 at batch 128
@@ -89,6 +101,7 @@ class Scenario:
     seed: int = 0
     description: str = ""
     fabric: Optional[Fabric] = None
+    faults: Optional[FaultSpec] = None
 
     def with_compute(self, base_s: float) -> "Scenario":
         """Same scenario, different per-step compute cost (e.g. measured)."""
@@ -97,6 +110,20 @@ class Scenario:
 
     def with_seed(self, seed: int) -> "Scenario":
         return dataclasses.replace(self, seed=seed)
+
+    def with_faults(self, faults: Optional[FaultSpec]) -> "Scenario":
+        """Same scenario, different fault catalog (None clears it)."""
+        return dataclasses.replace(self, faults=faults)
+
+    def with_deadline(self, deadline_s: float) -> "Scenario":
+        """Deadline-based rounds on top of whatever faults are configured.
+
+        This is the knob ``bench_elastic`` turns: the same scenario with
+        and without a deadline isolates deadline-dropping from churn.
+        """
+        base = self.faults if self.faults is not None else FaultSpec()
+        return dataclasses.replace(
+            self, faults=dataclasses.replace(base, deadline_s=deadline_s))
 
 
 def lan_10gbe_ring(n: int = 8, compute_s: float = DEFAULT_COMPUTE_S,
@@ -131,18 +158,21 @@ def wan_exponential(n: int = 16, compute_s: float = DEFAULT_COMPUTE_S,
 
 
 def straggler_longtail(n: int = 8, compute_s: float = DEFAULT_COMPUTE_S,
-                       seed: int = 0) -> Scenario:
+                       seed: int = 0, worker: int = 0, slow: float = 4.0,
+                       tail_scale: float = 2.0,
+                       pareto_shape: float = 1.2) -> Scenario:
     return Scenario(
         name="straggler-longtail",
         topo=ring(n),
         network=NetworkModel.homogeneous(alpha_s=0.15e-3,
                                          beta_Bps=gbit(1.0),
                                          jitter_s=30e-6),
-        compute=one_straggler(compute_s, worker=0, slow=4.0,
-                              tail_scale=2.0, pareto_shape=1.2),
+        compute=one_straggler(compute_s, worker=worker, slow=slow,
+                              tail_scale=tail_scale,
+                              pareto_shape=pareto_shape),
         seed=seed,
-        description="1 GbE ring; worker 0 is 4x slower with a Pareto "
-                    "long-tail per-step term")
+        description=f"1 GbE ring; worker {worker} is {slow:g}x slower with "
+                    "a Pareto long-tail per-step term")
 
 
 def bandwidth_starved(n: int = 8, compute_s: float = DEFAULT_COMPUTE_S,
@@ -310,6 +340,30 @@ def calibrated_from_bench(n: int = 8, compute_s: float = DEFAULT_COMPUTE_S,
                     "via sim/calibrate.py instead of datasheet constants")
 
 
+def churn_ring(n: int = 8, compute_s: float = DEFAULT_COMPUTE_S,
+               seed: int = 0, outage_p: float = 0.05,
+               outage_rounds: int = 3, drop_p: float = 0.01) -> Scenario:
+    """Crash-restart churn plus message loss on a 1 GbE ring.
+
+    Expected unavailability per worker is about ``outage_p *
+    outage_rounds`` (~15% at the defaults); layer a round deadline on top
+    with :meth:`Scenario.with_deadline` to get the full elastic regime.
+    """
+    return Scenario(
+        name="churn-ring",
+        topo=ring(n),
+        network=NetworkModel.homogeneous(alpha_s=0.15e-3,
+                                         beta_Bps=gbit(1.0),
+                                         jitter_s=20e-6),
+        compute=crash_restart(compute_s, outage_p=outage_p,
+                              outage_rounds=outage_rounds),
+        seed=seed,
+        faults=FaultSpec(drop_p=drop_p),
+        description=f"1 GbE ring under churn: {outage_rounds}-round "
+                    f"crash-restart outages at p={outage_p:g} per step, "
+                    f"messages lost at p={drop_p:g}")
+
+
 _REGISTRY: Dict[str, Callable[..., Scenario]] = {
     "lan-10gbe-ring": lan_10gbe_ring,
     "wan-exponential": wan_exponential,
@@ -320,6 +374,7 @@ _REGISTRY: Dict[str, Callable[..., Scenario]] = {
     "two-tier-tor": two_tier_tor,
     "shared-uplink-ring": shared_uplink_ring,
     "calibrated-from-bench": calibrated_from_bench,
+    "churn-ring": churn_ring,
 }
 
 
@@ -329,13 +384,22 @@ def list_scenarios() -> Tuple[str, ...]:
 
 def get_scenario(name: str, n: Optional[int] = None,
                  compute_s: Optional[float] = None,
-                 seed: int = 0) -> Scenario:
+                 seed: int = 0, **kwargs) -> Scenario:
+    """Build a registered scenario; extra kwargs reach the factory.
+
+    The pass-through is what lets callers tune factory-specific knobs —
+    ``get_scenario("straggler-longtail", slow=8.0)`` or
+    ``get_scenario("churn-ring", outage_p=0.1)`` — without the registry
+    enumerating every factory's signature.  Unknown knobs fail loudly as
+    a ``TypeError`` from the factory itself.
+    """
     try:
         factory = _REGISTRY[name]
     except KeyError:
         raise ValueError(f"unknown scenario {name!r}; "
                          f"available: {list(list_scenarios())}") from None
-    kw = {"seed": seed}
+    kw = dict(kwargs)
+    kw["seed"] = seed
     if n is not None:
         kw["n"] = n
     if compute_s is not None:

@@ -65,6 +65,10 @@ class TrainerConfig:
                                 #   runlog); drained metrics + spans + result
     trace_path: Optional[str] = None  # Chrome-trace JSON of the host-side
                                 #   phase spans (Perfetto / chrome://tracing)
+    presence: Optional[tuple] = None  # elastic 0/1 worker mask for every
+                                #   round (AlgoHyper.presence); None = all up
+    deadline: Optional[float] = None  # sim round deadline in seconds
+                                #   (recorded; enforced by sim/faults.py)
 
 
 def build_hyper(tc: TrainerConfig) -> AlgoHyper:
@@ -73,11 +77,13 @@ def build_hyper(tc: TrainerConfig) -> AlgoHyper:
     if tc.slack < 1.0:
         topo = topo.slack(tc.slack)
     spec = QuantSpec(bits=tc.bits, stochastic=tc.bits > 1)
+    presence = None if tc.presence is None else tuple(tc.presence)
     return AlgoHyper(topo=topo, codec=MoniquaCodec(spec), theta=tc.theta,
                      gamma=tc.gamma, wire=tc.wire, backend=tc.backend,
                      path=tc.comm_path, chunks=tc.chunks, overlap=tc.overlap,
                      warmup=tc.warmup, telemetry=tc.telemetry,
-                     tiers=tc.tiers)
+                     tiers=tc.tiers, presence=presence,
+                     deadline=tc.deadline)
 
 
 class Trainer:

@@ -1,0 +1,311 @@
+"""Elastic gossip: presence masks, fault injection, deadline rounds.
+
+Engine contracts:
+  * ``mix``/``mix_stale``/``pair_average`` with presence=None or all-ones
+    are BIT-exact against the pre-elastic round — all five wires, both
+    backends, both gossip paths, and the two-tier engine, EF WireState
+    carries included;
+  * absent workers pass through a round as exact identity (parameters
+    AND residuals), and round-health telemetry reports participation /
+    dropped gossip edges.
+
+Simulator contracts:
+  * faulted traces are replay-deterministic (stable ``fingerprint``,
+    participation masks recorded) and a no-fault run is event-identical
+    to one with the fault layer absent;
+  * deadline-based rounds beat wait-for-stragglers on wall clock;
+  * the async loop replays sampled message drops through
+    ``pair_average(..., presence=(1, 0))`` deterministically.
+"""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm.engine import CommEngine, make_wire
+from repro.core.quantizers import QuantSpec
+from repro.core.topology import ring, two_tier
+from repro.sim import events as SE
+from repro.sim.cluster import ComputeModel, crash_restart
+from repro.sim.faults import FaultSpec, Outage, presence_of
+from repro.sim.scenarios import get_scenario
+
+N = 8
+THETA = 4.0
+WIRES = [("full", 32), ("moniqua", 2), ("qsgd", 4),
+         ("ef_qsgd", 4), ("onebit", 1)]
+BACKENDS = ("jnp", "pallas")
+PATHS = ("bucketed", "per_leaf")
+
+
+def _engine(wname, bits, backend="jnp", path="bucketed", topo=None,
+            telemetry=False):
+    spec = QuantSpec(bits=min(bits, 8), stochastic=1 < bits <= 8)
+    return CommEngine(topo if topo is not None else ring(N),
+                      make_wire(wname, spec, warmup=1), backend, path=path,
+                      telemetry=telemetry)
+
+
+def _tree(n, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w": 0.1 * jax.random.normal(k1, (n, 4, 3)),
+            "b": 0.1 * jax.random.normal(k2, (n, 5)),
+            "s": {"m": 0.1 * jax.random.normal(k3, (n, 2, 2, 2))}}
+
+
+def _eq(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _rounds(eng, X0, presence, rounds=3):
+    X = X0
+    state = eng.init_wire_state(X0) if eng.stateful else None
+    for r in range(rounds):
+        res = eng.mix(X, theta=THETA, key=jax.random.PRNGKey(100 + r),
+                      state=state, presence=presence)
+        X = res.x
+        if eng.stateful:
+            state = res.state
+    return X, (state if state is not None else {})
+
+
+# ---------------------------------------------------------------------------
+# Full presence is bit-exact (the elastic layer costs nothing when unused).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("path", PATHS)
+@pytest.mark.parametrize("wname,bits", WIRES, ids=[w for w, _ in WIRES])
+def test_all_ones_presence_bitexact(wname, bits, backend, path):
+    eng = _engine(wname, bits, backend, path)
+    X0 = _tree(N, jax.random.PRNGKey(7))
+    xa, sa = _rounds(eng, X0, None)
+    xb, sb = _rounds(eng, X0, (1,) * N)
+    _eq(xa, xb)
+    _eq(sa, sb)
+
+
+@pytest.mark.parametrize("wname,bits", WIRES, ids=[w for w, _ in WIRES])
+def test_all_ones_presence_bitexact_tiered(wname, bits):
+    eng = _engine(wname, bits, topo=two_tier(N, 2))
+    X0 = _tree(N, jax.random.PRNGKey(7))
+    xa, sa = _rounds(eng, X0, None)
+    xb, sb = _rounds(eng, X0, (1,) * (N // 2))  # per-NODE mask
+    _eq(xa, xb)
+    _eq(sa, sb)
+
+
+def test_mix_stale_all_ones_presence_bitexact():
+    eng = _engine("moniqua", 4)
+    X0 = _tree(N, jax.random.PRNGKey(3))
+    outs = []
+    for presence in (None, (1,) * N):
+        X, carry = X0, eng.init_gossip_carry(X0)
+        for r in range(3):
+            res = eng.mix_stale(X, carry, theta=THETA,
+                                key=jax.random.PRNGKey(50 + r),
+                                presence=presence)
+            X, carry = res.x, res.state
+        outs.append(X)
+    _eq(outs[0], outs[1])
+
+
+# ---------------------------------------------------------------------------
+# Absent workers are exact identity — parameters AND EF residuals.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("wname,bits", WIRES, ids=[w for w, _ in WIRES])
+def test_absent_workers_exact_identity(wname, bits):
+    eng = _engine(wname, bits)
+    X0 = _tree(N, jax.random.PRNGKey(11))
+    absent = (2, 5)
+    presence = tuple(0 if i in absent else 1 for i in range(N))
+    state0 = eng.init_wire_state(X0) if eng.stateful else None
+    res = eng.mix(X0, theta=THETA, key=jax.random.PRNGKey(0),
+                  state=state0, presence=presence)
+    for a, b in zip(jax.tree.leaves(res.x), jax.tree.leaves(X0)):
+        for i in absent:
+            np.testing.assert_array_equal(np.asarray(a)[i],
+                                          np.asarray(b)[i])
+    if eng.stateful:
+        # an absent worker's residual (worker axis 0) must not advance;
+        # present workers' residuals must have moved off the zero init
+        for a, b in zip(jax.tree.leaves(res.state),
+                        jax.tree.leaves(state0)):
+            a, b = np.asarray(a), np.asarray(b)
+            if a.ndim and a.shape[0] == N:
+                for i in absent:
+                    np.testing.assert_array_equal(a[i], b[i])
+
+
+def test_mixed_mean_conserved_under_mask():
+    """W' doubly stochastic => the stacked mean is conserved exactly for
+    the full-precision wire, whoever is absent."""
+    eng = _engine("full", 32)
+    X0 = _tree(N, jax.random.PRNGKey(13))
+    res = eng.mix(X0, presence=(1, 0, 1, 1, 0, 1, 1, 1))
+    for a, b in zip(jax.tree.leaves(res.x), jax.tree.leaves(X0)):
+        np.testing.assert_allclose(np.asarray(a).mean(axis=0),
+                                   np.asarray(b).mean(axis=0),
+                                   rtol=0, atol=1e-6)
+
+
+def test_health_reports_participation_and_dropped_edges():
+    eng = _engine("moniqua", 4, telemetry=True)
+    X0 = _tree(N, jax.random.PRNGKey(17))
+    res = eng.mix(X0, theta=THETA, key=jax.random.PRNGKey(1),
+                  presence=(1, 1, 1, 0, 1, 1, 1, 1))
+    assert res.health is not None
+    assert float(res.health["participation"]) == pytest.approx(7.0 / 8.0)
+    assert float(res.health["dropped_neighbors"]) > 0
+    full = eng.mix(X0, theta=THETA, key=jax.random.PRNGKey(1))
+    assert float(full.health["participation"]) == 1.0
+    assert float(full.health["dropped_neighbors"]) == 0
+
+
+@pytest.mark.parametrize("wname,bits",
+                         [("full", 32), ("moniqua", 2), ("ef_qsgd", 4)],
+                         ids=["full", "moniqua", "ef_qsgd"])
+def test_pair_average_presence_identity(wname, bits):
+    eng = _engine(wname, bits)
+    key = jax.random.PRNGKey(5)
+    ki, kj = jax.random.split(key)
+    xi = jax.random.normal(ki, (6,))
+    xj = xi + 0.5 + 0.5 * jax.random.normal(kj, (6,))
+    kw = {}
+    if eng.stateful:
+        kw = dict(state_i=eng.init_edge_state(xi),
+                  state_j=eng.init_edge_state(xj))
+    for presence in ((1, 0), (0, 1), (0, 0)):
+        res = eng.pair_average(xi, xj, theta=THETA,
+                               key=jax.random.PRNGKey(2),
+                               presence=presence, **kw)
+        np.testing.assert_array_equal(np.asarray(res.xi), np.asarray(xi))
+        np.testing.assert_array_equal(np.asarray(res.xj), np.asarray(xj))
+        if eng.stateful:
+            _eq(res.state_i, kw["state_i"])
+            _eq(res.state_j, kw["state_j"])
+    # all-present exchanges DO move the endpoints
+    res = eng.pair_average(xi, xj, theta=THETA, key=jax.random.PRNGKey(2),
+                           presence=(1, 1), **kw)
+    assert not np.array_equal(np.asarray(res.xi), np.asarray(xi))
+
+
+# ---------------------------------------------------------------------------
+# Fault layer: pure predicates, deterministic traces.
+# ---------------------------------------------------------------------------
+
+def test_crash_restart_offline_window():
+    comp = crash_restart(0.05, outage_p=0.2, outage_rounds=3)
+    seed = 9
+    for w in range(4):
+        onsets = [k for k in range(40)
+                  if dc.replace(comp, outage_rounds=1).offline(w, k, seed)]
+        for k in range(40):
+            expect = any(k - 2 <= j <= k for j in onsets)
+            assert comp.offline(w, k, seed) == expect
+    assert not ComputeModel(base_s=0.05).offline(0, 0, seed)
+
+
+def test_scheduled_outage_covers_exact_rounds():
+    faults = FaultSpec(outages=(Outage(worker=2, start=5, rounds=3),))
+    comp = ComputeModel(base_s=0.05)
+    down = [k for k in range(12) if faults.offline(2, k, comp, seed=0)]
+    assert down == [5, 6, 7]
+    assert not any(faults.offline(1, k, comp, seed=0) for k in range(12))
+
+
+def test_presence_of_none_when_everyone_up():
+    comp = ComputeModel(base_s=0.05)
+    assert presence_of(None, comp, N, 0, seed=0) is None
+    assert presence_of(FaultSpec(drop_p=0.5), comp, N, 0, seed=0) is None
+    faults = FaultSpec(outages=(Outage(worker=1, start=0, rounds=1),))
+    assert presence_of(faults, comp, N, 0, seed=0) == \
+        (1, 0, 1, 1, 1, 1, 1, 1)
+
+
+def test_message_drop_is_deterministic_and_validated():
+    f = FaultSpec(drop_p=0.3)
+    draws = [f.message_dropped(k, 0, 1, seed=4) for k in range(200)]
+    assert draws == [f.message_dropped(k, 0, 1, seed=4) for k in range(200)]
+    assert 20 < sum(draws) < 100  # ~60 expected
+    with pytest.raises(ValueError):
+        FaultSpec(drop_p=1.5)
+    with pytest.raises(ValueError):
+        FaultSpec(deadline_s=0.0)
+    with pytest.raises(ValueError):
+        Outage(worker=0, start=0, rounds=0)
+
+
+def test_no_fault_sim_is_event_identical():
+    sc = get_scenario("lan-10gbe-ring", n=N)
+    a = SE.simulate_sync_rounds(sc, 1024, 12)
+    b = SE.simulate_sync_rounds(sc.with_faults(None), 1024, 12)
+    assert a.fingerprint() == b.fingerprint()
+    assert a.participation == [] and a.presence == []
+    assert a.participation_mean == 1.0
+
+
+def test_churn_ring_trace_deterministic_with_participation():
+    sc = get_scenario("churn-ring", n=N, outage_p=0.1, outage_rounds=2,
+                      drop_p=0.05)
+    a = SE.simulate_sync_rounds(sc, 2048, 30)
+    b = SE.simulate_sync_rounds(sc, 2048, 30)
+    assert a.fingerprint() == b.fingerprint()
+    assert len(a.presence) == 30 and len(a.participation) == 30
+    assert 0.5 < a.participation_mean < 1.0
+    kinds = {e.kind for e in a.events}
+    assert SE.OFFLINE in kinds
+    # presence masks match the offline events round for round
+    for k, mask in enumerate(a.presence):
+        off = {e.worker for e in a.events
+               if e.kind == SE.OFFLINE and e.step == k}
+        assert off == {i for i in range(N) if not mask[i]}
+
+
+def test_deadline_rounds_beat_waiting_for_stragglers():
+    sc = get_scenario("straggler-longtail", n=N)
+    rounds = 40
+    wait = SE.simulate_sync_rounds(sc, 1024, rounds)
+    dl = SE.simulate_sync_rounds(sc.with_deadline(0.25), 1024, rounds)
+    assert dl.total_seconds < wait.total_seconds
+    # the deadline caps every barrier the straggler would have stalled
+    assert max(dl.round_seconds) < max(wait.round_seconds)
+    assert any(e.kind == SE.DROPPED for e in dl.events)
+    assert 0.0 < dl.participation_mean < 1.0
+    assert wait.fingerprint() != dl.fingerprint()
+
+
+def test_straggler_kwargs_passthrough_and_unknown_rejected():
+    sc = get_scenario("straggler-longtail", n=N, worker=3, slow=8.0)
+    assert sc.compute.multiplier(3) == 8.0
+    with pytest.raises(TypeError):
+        get_scenario("straggler-longtail", n=N, nope=1)
+
+
+def test_async_replay_with_drops_is_deterministic():
+    sc = get_scenario("lan-10gbe-ring", n=4).with_faults(
+        FaultSpec(drop_p=0.4))
+    eng = _engine("moniqua", 4, topo=ring(4))
+
+    def grad(x, i, key):
+        return 0.1 * x
+
+    outs = []
+    for _ in range(2):
+        X0 = jnp.stack([jnp.full((6,), float(i)) for i in range(4)])
+        out = SE.replay_adpsgd(sc, eng, X0, grad, alpha=0.05,
+                               num_updates=25, theta=THETA)
+        outs.append((out["trace"].fingerprint(), np.asarray(out["X"])))
+    assert outs[0][0] == outs[1][0]
+    np.testing.assert_array_equal(outs[0][1], outs[1][1])
+    kinds = {e.kind for e in SE.replay_adpsgd(
+        sc, eng, jnp.zeros((4, 6)), grad, alpha=0.05, num_updates=25,
+        theta=THETA)["trace"].events}
+    # sampled losses fire the identity exchange, the rest gossip for real
+    assert SE.MSGDROP in kinds and SE.GOSSIP in kinds

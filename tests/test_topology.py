@@ -137,3 +137,93 @@ def test_two_tier_ring_of_rings_rho_regression(n_inter, n_intra, expected):
     assert hier.rho == pytest.approx(expected, abs=1e-9)
     assert hier.t_mix_bound == pytest.approx(
         np.log(4 * n_inter * n_intra) / (1.0 - expected), rel=1e-9)
+
+
+# -- elastic rounds: presence renormalization + time-varying schedules ------
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # not in the baked image; deterministic twins below
+    HAVE_HYPOTHESIS = False
+
+MASKS = [(1,) * 8, (0,) * 8, (1, 0, 1, 0, 1, 0, 1, 0),
+         (0, 1, 1, 1, 1, 1, 1, 1), (1, 1, 1, 1, 0, 0, 0, 0),
+         (0, 0, 0, 0, 0, 0, 0, 1)]
+
+
+def _check_masked(topo, mask):
+    W = topo.with_presence(mask).matrix
+    np.testing.assert_allclose(W.sum(axis=0), 1.0, atol=1e-9)
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-9)
+    np.testing.assert_allclose(W, W.T, atol=1e-12)
+    assert (W >= -1e-12).all()
+    for i, p in enumerate(mask):
+        if not p:
+            # absent worker: row is EXACTLY the identity, not approximately
+            expect = np.zeros(topo.n)
+            expect[i] = 1.0
+            np.testing.assert_array_equal(W[i], expect)
+
+
+@pytest.mark.parametrize("topo", [ring(8), exponential(8),
+                                  fully_connected(8)],
+                         ids=lambda t: t.name)
+@pytest.mark.parametrize("mask", MASKS, ids=lambda m: "".join(map(str, m)))
+def test_with_presence_doubly_stochastic_any_mask(topo, mask):
+    _check_masked(topo, mask)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                    reason="hypothesis not installed in this image")
+def test_with_presence_doubly_stochastic_property():
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(st.integers(0, 1), min_size=8, max_size=8),
+           st.sampled_from(["ring", "exponential", "fully"]))
+    def prop(mask, name):
+        topo = {"ring": ring(8), "exponential": exponential(8),
+                "fully": fully_connected(8)}[name]
+        _check_masked(topo, tuple(mask))
+
+    prop()
+
+
+@pytest.mark.parametrize("topo", [ring(8), exponential(8), torus(4, 4)],
+                         ids=lambda t: t.name)
+def test_full_presence_is_original_matrix_exact(topo):
+    np.testing.assert_array_equal(
+        topo.with_presence((1,) * topo.n).matrix, topo.matrix)
+
+
+def test_with_presence_rho_monotone_in_participation():
+    """Dropping one more worker from a ring never improves the spectral
+    gap (PSD interlacing on W' - J/n): rho is monotone non-decreasing as
+    participation falls along a nested chain of masks."""
+    topo = ring(8)
+    rhos = []
+    mask = [1] * 8
+    for drop in (None, 6, 3, 1):
+        if drop is not None:
+            mask[drop] = 0
+        rhos.append(topo.with_presence(tuple(mask)).rho)
+    assert rhos[0] == pytest.approx(topo.rho, abs=1e-12)
+    for a, b in zip(rhos, rhos[1:]):
+        assert b >= a - 1e-9
+    assert rhos[-1] > rhos[0]
+
+
+def test_time_varying_topology_joint_rho():
+    from repro.core.topology import TimeVaryingTopology
+    topo = ring(8)
+    # alternating complementary half-participation rounds: each matrix
+    # alone has rho = 1 (disconnected), the WINDOW still contracts
+    a = topo.with_presence((1, 1, 1, 1, 1, 1, 0, 1))
+    b = topo.with_presence((1, 0, 1, 1, 1, 1, 1, 1))
+    tv = TimeVaryingTopology((a, b))
+    assert tv.n == 8
+    assert tv.at(0) is a and tv.at(1) is b and tv.at(2) is a
+    assert 0.0 < tv.rho < 1.0
+    # full-presence schedule degenerates to the static topology's rho
+    full = TimeVaryingTopology((topo, topo))
+    assert full.rho == pytest.approx(topo.rho, abs=1e-9)

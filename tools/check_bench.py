@@ -67,6 +67,20 @@ hold in smoke and full alike), and the committed reference must carry a
 1-bit on the same oversubscribed fabric.  Hierarchy checks run only when the
 hierarchy smoke file exists (``--hier-smoke``).
 
+It also gates the elastic-gossip trajectory (``BENCH_elastic.json``, from
+``benchmarks/bench_elastic.py``): every presence=all-ones bit-exactness
+row (five wires x both backends x both gossip paths, plus the two-tier
+engine, WireState carries included) must be ``true`` in BOTH files — the
+elastic mask is a renormalization change and any numeric drift with
+nobody absent is a hard failure — every deadline row must show
+deadline-dropping beating wait-for-stragglers on wall-clock-to-target
+(``speedup_x > 1``) with BOTH runs hitting the matched loss target
+(``matched``), and every robustness-sweep row must have converged
+(``loss_last < loss_first``).  The sim and the replay are seeded and
+deterministic, so these invariants hold in smoke and full runs alike.
+Elastic checks run only when the elastic smoke file exists
+(``--elastic-smoke``); a smoke file without its reference is an error.
+
 Usage:  python tools/check_bench.py \\
             [--smoke BENCH_network_sim.smoke.json] \\
             [--ref BENCH_network_sim.json] \\
@@ -77,7 +91,9 @@ Usage:  python tools/check_bench.py \\
             [--overlap-smoke BENCH_overlap.smoke.json] \\
             [--overlap-ref BENCH_overlap.json] \\
             [--hier-smoke BENCH_hierarchical.smoke.json] \\
-            [--hier-ref BENCH_hierarchical.json] [--tol 0.25]
+            [--hier-ref BENCH_hierarchical.json] \\
+            [--elastic-smoke BENCH_elastic.smoke.json] \\
+            [--elastic-ref BENCH_elastic.json] [--tol 0.25]
 """
 from __future__ import annotations
 
@@ -357,6 +373,63 @@ def check_hierarchical(smoke: dict, ref: dict, tol: float,
               f"{head['speedup_x']:.2f}x wall-clock-to-target [ok]")
 
 
+# the elastic gate: five wires x two backends x two paths (20) plus the
+# five two-tier rows — a shrinking bit-exactness matrix must fail
+ELASTIC_MIN_BITEXACT_ROWS = 25
+
+
+def check_elastic(smoke: dict, ref: dict, errors: list) -> None:
+    """BENCH_elastic gate: presence=all-ones bitwise == plain mix (both
+    files, all wires/backends/paths incl. two-tier and WireState),
+    deadline-dropping beats wait-for-stragglers at matched loss in every
+    deadline row, and every dropout-sweep run converged."""
+    for tag, d in (("ref", ref), ("smoke", smoke)):
+        rows = d.get("bitexact", [])
+        if len(rows) < ELASTIC_MIN_BITEXACT_ROWS:
+            errors.append(f"elastic {tag}: only {len(rows)} bitexact rows "
+                          f"(need >= {ELASTIC_MIN_BITEXACT_ROWS}: five "
+                          "wires x two backends x two paths + two-tier)")
+        bad = [r for r in rows if not r["bitexact"]]
+        for r in bad:
+            errors.append(f"elastic {tag}: {r['wire']}/{r['backend']}/"
+                          f"{r['path']} presence=all-ones round is NOT "
+                          "bit-exact vs plain mix")
+        if rows and not bad:
+            wires = len({r["wire"] for r in rows})
+            print(f"elastic {tag}: {len(rows)} bitexact rows "
+                  f"({wires} wires) all true [ok]")
+        for r in d.get("deadline", []):
+            ok = r.get("matched") and r.get("speedup_x", 0.0) > 1.0
+            status = "ok" if ok else "FAIL"
+            print(f"elastic {tag}: {r['scenario']} deadline "
+                  f"{r['speedup_x']:.2f}x wall-clock-to-target "
+                  f"(participation {r['participation_deadline']:.2f}) "
+                  f"[{status}]")
+            if not r.get("matched"):
+                errors.append(f"elastic {tag}: {r['scenario']} missed the "
+                              "matched-loss target (a run never reached "
+                              f"{r.get('target_loss')})")
+            elif r.get("speedup_x", 0.0) <= 1.0:
+                errors.append(f"elastic {tag}: {r['scenario']} deadline-"
+                              "dropping does not beat wait-for-stragglers "
+                              f"({r.get('speedup_x')}x)")
+        if not d.get("deadline"):
+            errors.append(f"elastic {tag}: no deadline rows")
+        diverged = [r for r in d.get("sweep", [])
+                    if not r["loss_last"] < r["loss_first"]]
+        for r in diverged:
+            errors.append(f"elastic {tag}: sweep run p={r['p']} "
+                          f"{r['codec']} diverged ({r['loss_first']} -> "
+                          f"{r['loss_last']})")
+        if not d.get("sweep"):
+            errors.append(f"elastic {tag}: no dropout-sweep rows")
+        elif not diverged:
+            codecs = len({r["codec"] for r in d["sweep"]})
+            ps = len({r["p"] for r in d["sweep"]})
+            print(f"elastic {tag}: {len(d['sweep'])} sweep runs "
+                  f"({codecs} codecs x {ps} dropout rates) converged [ok]")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke",
@@ -382,6 +455,10 @@ def main(argv=None) -> int:
                                          "BENCH_hierarchical.smoke.json"))
     ap.add_argument("--hier-ref",
                     default=os.path.join(REPO, "BENCH_hierarchical.json"))
+    ap.add_argument("--elastic-smoke",
+                    default=os.path.join(REPO, "BENCH_elastic.smoke.json"))
+    ap.add_argument("--elastic-ref",
+                    default=os.path.join(REPO, "BENCH_elastic.json"))
     ap.add_argument("--tol", type=float, default=0.25,
                     help="max relative drift of per-scenario wire slope "
                          "and of per-model bucketed speedup")
@@ -494,13 +571,26 @@ def main(argv=None) -> int:
             check_hierarchical(hier_smoke, hier_ref, args.tol, errors)
             n_hier = len(hier_smoke.get("bitexact", []))
 
+    n_elastic = 0
+    if os.path.exists(args.elastic_smoke):
+        with open(args.elastic_smoke) as f:
+            elastic_smoke = json.load(f)
+        if not os.path.exists(args.elastic_ref):
+            errors.append(f"elastic smoke exists but reference "
+                          f"{args.elastic_ref} is missing")
+        else:
+            with open(args.elastic_ref) as f:
+                elastic_ref = json.load(f)
+            check_elastic(elastic_smoke, elastic_ref, errors)
+            n_elastic = len(elastic_smoke.get("bitexact", []))
+
     for e in errors:
         print(f"ERROR: {e}", file=sys.stderr)
     if not errors:
         print(f"bench check OK ({len(smoke_scenarios)} scenarios, "
               f"{n_fusion} fusion models, {n_mem} memory rows, "
-              f"{n_overlap} overlap cells, {n_hier} hierarchy rows "
-              "compared)")
+              f"{n_overlap} overlap cells, {n_hier} hierarchy rows, "
+              f"{n_elastic} elastic rows compared)")
     return 1 if errors else 0
 
 

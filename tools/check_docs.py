@@ -44,11 +44,13 @@ REQUIRED_ARTIFACTS = (
     "docs/simulator.md",
     "docs/kernels.md",
     "docs/observability.md",
+    "docs/elasticity.md",
     "BENCH_network_sim.json",
     "BENCH_comm_fusion.json",
     "BENCH_memory_overhead.json",
     "BENCH_overlap.json",
     "BENCH_hierarchical.json",
+    "BENCH_elastic.json",
     "RUNLOG_sample.jsonl",
 )
 

@@ -11,6 +11,9 @@ a smoke run means the theta configuration violates Lemma 1's hypothesis
 and the build must not ship it silently.  ``--require-telemetry``
 additionally fails logs whose step records carry no ``obs_*`` metrics
 (catches a CI job that forgot to turn the flag on).
+``--min-participation F`` fails any log whose recorded
+``obs_participation`` falls below ``F`` at any step — the elastic-rounds
+floor: churn beyond the configured budget must not pass CI silently.
 
 ``tools/obs_report.py`` is the human-facing twin; this one only gates.
 """
@@ -28,12 +31,23 @@ from repro.obs import trace as TR  # noqa: E402
 
 
 def check_runlog(path: str, require_telemetry: bool,
-                 allow_alias: bool) -> list:
+                 allow_alias: bool, min_participation: float = 0.0) -> list:
     errors = RL.validate_runlog(path)
     if errors:
         return errors
     records = RL.read_runlog(path)
     steps = RL.step_records(records)
+    if min_participation > 0.0:
+        part = [r["metrics"]["obs_participation"] for r in steps
+                if isinstance(r.get("metrics"), dict)
+                and isinstance(r["metrics"].get("obs_participation"),
+                               (int, float))]
+        low = [v for v in part if v < min_participation]
+        if low:
+            errors.append(
+                f"{path}: participation fell to {min(low):.4g} "
+                f"(floor {min_participation}) in {len(low)} step "
+                "record(s) — churn exceeded the elastic budget")
     if require_telemetry:
         has_obs = any(k.startswith("obs_")
                       for r in steps
@@ -71,13 +85,17 @@ def main(argv=None) -> int:
     ap.add_argument("--allow-alias", action="store_true",
                     help="do not fail on recorded alias events (for "
                          "deliberately-undersized-theta experiments)")
+    ap.add_argument("--min-participation", type=float, default=0.0,
+                    help="fail if obs_participation drops below this floor "
+                         "at any logged step (0 = no floor)")
     args = ap.parse_args(argv)
     if not args.runlogs and not args.trace:
         ap.error("nothing to check: pass runlog files and/or --trace")
     errors = []
     for path in args.runlogs:
         errors.extend(check_runlog(path, args.require_telemetry,
-                                   args.allow_alias))
+                                   args.allow_alias,
+                                   args.min_participation))
     for path in args.trace:
         errors.extend(check_trace(path))
     for e in errors:

@@ -93,6 +93,15 @@ def report_runlog(path: str) -> int:
                          f"(two-tier round: quantized owned-shard gossip "
                          f"vs intra reduce-scatter/all-gather)")
             print(line)
+        part = _metric_series(steps, "obs_participation")
+        if part and any(v < 1.0 for v in part):
+            dropped = _metric_series(steps, "obs_dropped_neighbors")
+            line = (f"  participation: mean={sum(part) / len(part):.4g} "
+                    f"min={min(part):.4g}")
+            if dropped:
+                line += (f"  dropped gossip edges/round: "
+                         f"max={max(dropped):.4g}")
+            print(line + "  (elastic rounds; absent workers mix identity)")
         ef = _metric_series(steps, "obs_ef_residual_l2")
         if ef and any(v > 0 for v in ef):
             print(f"  EF residual l2: first={ef[0]:.4g} last={ef[-1]:.4g} "
